@@ -1,0 +1,56 @@
+"""Kernel microbenchmarks.
+
+The Pallas kernels target TPU; on CPU they run in interpret mode (a
+correctness path, not a speed path), so the numbers reported here are the
+jnp-oracle timings at kernel-shaped workloads — the apples-to-apples CPU
+stand-in the compiler's `pw` strategy lowers to.  TPU timings come from a
+real pod run.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.kernels.intersect_count.ref import intersect_count_ref
+from repro.kernels.window_degree.ref import window_degree_ref
+from repro.kernels.hist_update.ref import hist_update_ref
+
+
+def run():
+    rng = np.random.default_rng(0)
+
+    b, da, db = 4096, 64, 64
+    a_ids = jnp.asarray(rng.integers(-1, 512, (b, da)).astype(np.int32))
+    b_ids = jnp.asarray(rng.integers(-1, 512, (b, db)).astype(np.int32))
+    a_t = jnp.asarray(rng.integers(0, 4096, (b, da)).astype(np.int32))
+    b_t = jnp.asarray(rng.integers(0, 4096, (b, db)).astype(np.int32))
+    lo = jnp.asarray(rng.integers(0, 2048, b).astype(np.int32))
+    hi = lo + 1024
+    f = jax.jit(lambda *a: intersect_count_ref(*a, ordered=True))
+    _, dt = timeit(
+        lambda: f(a_ids, a_t, b_ids, b_t, lo, hi, lo, hi).block_until_ready(),
+        repeat=5,
+    )
+    emit(
+        "kernels/intersect_count/4096x64x64",
+        dt * 1e6,
+        f"pairs_per_s={b*da*db/dt:.2e}",
+    )
+
+    t = jnp.asarray(rng.integers(0, 4096, (16384, 128)).astype(np.int32))
+    lo = jnp.asarray(rng.integers(0, 2048, 16384).astype(np.int32))
+    f = jax.jit(window_degree_ref)
+    _, dt = timeit(lambda: f(t, lo, lo + 512).block_until_ready(), repeat=5)
+    emit("kernels/window_degree/16384x128", dt * 1e6, f"rows_per_s={16384/dt:.2e}")
+
+    keys = jnp.asarray(rng.integers(0, 8192, 1 << 18).astype(np.int32))
+    gh = jnp.asarray(rng.normal(size=(1 << 18, 2)).astype(np.float32))
+    f = jax.jit(lambda k, g: hist_update_ref(k, g, 8192))
+    _, dt = timeit(lambda: f(keys, gh).block_until_ready(), repeat=5)
+    emit("kernels/hist_update/262144x8192", dt * 1e6, f"samples_per_s={(1<<18)/dt:.2e}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Roofline table from the dry-run artifacts (results/dryrun.json).
+
+Prints one row per (arch x shape) single-pod cell: the three roofline
+terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and the roofline
+fraction.  Cells are produced by `python -m repro.launch.dryrun`; this
+bench only formats — the raw analysis lives in the JSON.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+DEFAULT = "results/dryrun.json"
+
+
+def run(path: str = DEFAULT):
+    if not os.path.exists(path):
+        emit("roofline/missing", 0.0, f"run `python -m repro.launch.dryrun` first ({path} not found)")
+        return {}
+    with open(path) as f:
+        results = json.load(f)
+    out = {}
+    for key, rec in sorted(results.items()):
+        if rec.get("mesh") != "16x16":
+            continue
+        name = f"roofline/{rec['arch']}/{rec['shape']}"
+        if rec["status"] == "skipped":
+            emit(name, 0.0, "skipped=" + rec["reason"].split(":")[0])
+            continue
+        if rec["status"] != "ok" or "roofline" not in rec:
+            emit(name, 0.0, f"status={rec['status']}")
+            continue
+        r = rec["roofline"]
+        bound_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        emit(
+            name,
+            bound_s * 1e6,
+            f"compute_ms={r['compute_s']*1e3:.3f};memory_ms={r['memory_s']*1e3:.3f};"
+            f"collective_ms={r['collective_s']*1e3:.3f};dominant={r['dominant']};"
+            f"useful_ratio={r.get('useful_flops_ratio', 0):.3f};"
+            f"roofline_fraction={r.get('roofline_fraction', 0):.3f}",
+        )
+        out[key] = r
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,25 @@
+"""Benchmark utilities: timing + the `name,us_per_call,derived` CSV row."""
+from __future__ import annotations
+
+import time
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def timeit(fn, *args, repeat: int = 1, **kw):
+    """(result, seconds_per_call) — median of `repeat` calls after warmup."""
+    fn(*args, **kw)  # warmup (compile)
+    times = []
+    result = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        result = fn(*args, **kw)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return result, times[len(times) // 2]

@@ -1,0 +1,66 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints `name,us_per_call,derived` CSV rows.  Full sweep:
+
+  PYTHONPATH=src python -m benchmarks.run            # all benches
+  PYTHONPATH=src python -m benchmarks.run --only mining,f1
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--only",
+        default="kernels,mining,scaling,f1,fraudgt,roofline",
+        help="comma list: kernels,mining,scaling,f1,fraudgt,roofline",
+    )
+    args = ap.parse_args()
+    only = set(args.only.split(","))
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    jobs = []
+    if "kernels" in only:
+        from benchmarks import bench_kernels
+
+        jobs.append(("kernels", bench_kernels.run))
+    if "mining" in only:
+        from benchmarks import bench_mining
+
+        jobs.append(("mining", bench_mining.run))
+    if "scaling" in only:
+        from benchmarks import bench_scaling
+
+        jobs.append(("scaling", bench_scaling.run))
+    if "f1" in only:
+        from benchmarks import bench_f1_features
+
+        jobs.append(("f1", bench_f1_features.run))
+    if "fraudgt" in only:
+        from benchmarks import bench_fraudgt
+
+        jobs.append(("fraudgt", bench_fraudgt.run))
+    if "roofline" in only:
+        from benchmarks import bench_roofline
+
+        jobs.append(("roofline", bench_roofline.run))
+
+    failures = []
+    for name, fn in jobs:
+        try:
+            fn()
+        except Exception as e:  # keep the suite going, report at the end
+            failures.append((name, e))
+            traceback.print_exc()
+    print(f"# total {time.time()-t0:.0f}s; failures: {[n for n, _ in failures]}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

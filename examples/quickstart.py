@@ -1,0 +1,72 @@
+"""Quickstart: express a fuzzy AML pattern, compile it, mine a synthetic
+transaction graph, and train the downstream classifier.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (
+    CompiledPattern,
+    GFPReference,
+    Neigh,
+    NodeRef,
+    PatternSpec,
+    SEED_DST,
+    SEED_SRC,
+    Stage,
+    StageT,
+    TimeBound,
+    Window,
+    build_pattern,
+)
+from repro.data import generate_aml_dataset
+from repro.ml.gbdt import GBDTParams
+from repro.ml.pipeline import run_aml_pipeline
+
+W = 4096
+
+# 1. a library pattern: temporally-fuzzy scatter-gather ---------------------
+ds = generate_aml_dataset("HI-Small", seed=0, scale=0.5)
+sg = build_pattern("scatter_gather", W)
+miner = CompiledPattern(sg, ds.graph)
+print(miner.plan_text())
+counts = miner.mine()
+print(f"scatter-gather participation: {counts.sum()} instances "
+      f"over {ds.graph.n_edges} edges; max/edge {counts.max()}")
+
+# 2. a CUSTOM pattern in the multi-stage DSL --------------------------------
+# "round-trip laundering": v routes money back to u through one intermediary
+# within the window, in order  u->v (seed), v->w, w->u.
+custom = PatternSpec(
+    "roundtrip3",
+    stages=(
+        Stage(
+            "w",
+            "for_all",
+            operand=Neigh(SEED_DST, "out"),
+            skip_eq=(SEED_SRC, SEED_DST),
+            window=Window.after_seed(W),
+        ),
+        Stage(
+            "close",
+            "count_edges",
+            edge_src=NodeRef("w"),
+            edge_dst=SEED_SRC,
+            window=Window(TimeBound(StageT("w"), 0), TimeBound(None, 1 << 30)),
+            emit=True,
+        ),
+    ),
+)
+cp = CompiledPattern(custom, ds.graph)
+got = cp.mine()
+ref = GFPReference(custom, ds.graph).mine()
+assert np.array_equal(got, ref)
+print(f"custom roundtrip3: {got.sum()} instances (matches the reference)")
+
+# 3. end-to-end: mined features -> GBDT -> F1 -------------------------------
+res = run_aml_pipeline(ds, feature_set="full", params=GBDTParams(n_trees=30))
+print(
+    f"AML pipeline on {ds.name}: F1={res.f1:.3f} "
+    f"(precision={res.precision:.3f}, recall={res.recall:.3f}); "
+    f"mining {res.mine_seconds:.1f}s, training {res.train_seconds:.1f}s"
+)

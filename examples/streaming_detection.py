@@ -1,0 +1,29 @@
+"""Streaming AML: transactions arrive in batches; pattern counts update
+incrementally over the dirty frontier only (paper §5 streaming).
+
+  PYTHONPATH=src python examples/streaming_detection.py
+"""
+import numpy as np
+
+from repro.core import StreamingMiner
+from repro.data import generate_aml_dataset
+
+ds = generate_aml_dataset("HI-Small", seed=3, scale=0.3)
+g = ds.graph
+order = np.argsort(g.t, kind="stable")
+
+sm = StreamingMiner(["fan_in", "cycle3", "scatter_gather"], window=4096)
+batches = np.array_split(order, 6)
+for i, ch in enumerate(batches):
+    dirty = sm.ingest(g.src[ch], g.dst[ch], g.t[ch])
+    total = sm.counts["scatter_gather"].sum()
+    print(
+        f"batch {i}: +{len(ch)} tx, re-mined {sm.last_dirty} dirty seeds "
+        f"({sm.last_dirty/max(1, sm.n_edges)*100:.1f}% of graph), "
+        f"sg instances so far: {total}"
+    )
+
+# final counts equal a full batch recompute (tests/test_streaming.py
+# asserts this bit-exactly on every pattern)
+print("final per-pattern instance totals:",
+      {k: int(v.sum()) for k, v in sm.counts.items()})

@@ -1,0 +1,54 @@
+"""Render EXPERIMENTS.md tables from results/dryrun.json.
+
+  PYTHONPATH=src python results/render_tables.py [results/dryrun.json]
+"""
+import json
+import sys
+
+
+def main(path="results/dryrun.json"):
+    with open(path) as f:
+        r = json.load(f)
+
+    print("### Roofline (single-pod 16x16, per chip)\n")
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "useful flops ratio | roofline frac | temp GB/chip |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for key in sorted(r):
+        rec = r[key]
+        if rec.get("mesh") != "16x16":
+            continue
+        a, s = rec["arch"], rec["shape"]
+        if rec["status"] == "skipped":
+            print(f"| {a} | {s} | — | — | — | skip (full attn @500k) | — | — | — |")
+            continue
+        if rec["status"] != "ok" or "roofline" not in rec:
+            print(f"| {a} | {s} | ERROR {rec.get('error','')[:40]} | | | | | | |")
+            continue
+        rl = rec["roofline"]
+        mem = rec.get("memory", {}).get("temp_size_in_bytes", 0) / 1e9
+        print(
+            f"| {a} | {s} | {rl['compute_s']*1e3:.1f} ms | "
+            f"{rl['memory_s']*1e3:.1f} ms | {rl['collective_s']*1e3:.1f} ms | "
+            f"{rl['dominant'].replace('_s','')} | "
+            f"{rl.get('useful_flops_ratio', 0):.2f} | "
+            f"{rl.get('roofline_fraction', 0):.3f} | {mem:.1f} |"
+        )
+
+    print("\n### Multi-pod (2x16x16) shard proof\n")
+    print("| arch | shape | status | compile s | temp GB/chip |")
+    print("|---|---|---|---|---|")
+    for key in sorted(r):
+        rec = r[key]
+        if rec.get("mesh") != "2x16x16":
+            continue
+        mem = rec.get("memory", {}).get("temp_size_in_bytes", 0) / 1e9
+        st = rec["status"] if rec["status"] != "skipped" else "skip"
+        print(
+            f"| {rec['arch']} | {rec['shape']} | {st} | "
+            f"{rec.get('compile_s', '—')} | {mem:.1f} |"
+        )
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,43 @@
+"""BlazingAML core: multi-stage fuzzy pattern specs + DSL compiler."""
+from repro.core.spec import (
+    Neigh,
+    NodeRef,
+    PatternSpec,
+    SEED_DST,
+    SEED_SRC,
+    SEED_T,
+    SetExpr,
+    Stage,
+    StageT,
+    TimeBound,
+    Window,
+)
+from repro.core.compiler import CompiledPattern, compile_pattern
+from repro.core.oracle import GFPReference
+from repro.core.patterns import build_pattern, feature_pattern_set, PATTERN_NAMES
+from repro.core.features import featurize, mine_features, base_features
+from repro.core.streaming import StreamingMiner
+
+__all__ = [
+    "Neigh",
+    "NodeRef",
+    "PatternSpec",
+    "SEED_DST",
+    "SEED_SRC",
+    "SEED_T",
+    "SetExpr",
+    "Stage",
+    "StageT",
+    "TimeBound",
+    "Window",
+    "CompiledPattern",
+    "compile_pattern",
+    "GFPReference",
+    "build_pattern",
+    "feature_pattern_set",
+    "PATTERN_NAMES",
+    "featurize",
+    "mine_features",
+    "base_features",
+    "StreamingMiner",
+]

@@ -1,0 +1,814 @@
+"""Domain-specific compiler: PatternSpec -> optimized JAX executable (paper §6).
+
+Compilation pipeline (mirrors the paper's):
+
+1. **Validate** — `PatternSpec.validate()` (operand dataflow, anchors).
+2. **Analyze/plan** — classify stages onto the primitive pipeline
+   (≤ 1 materializing ``for_all`` frontier, ≤ 1 ``intersect``, any number of
+   count stages), then make cost-model decisions per degree bucket:
+
+   * *strategy selection* ("ordering set operations based on estimated
+     cost"): an intersect/count stage lowers to one of
+       - ``bs1``  — expand the frontier side, binary-search the fixed CSR
+                    rows (hub-safe, O(D log d) with gathers),
+       - ``bs2``  — expand the fixed side, binary-search frontier rows,
+       - ``pw``   — expand BOTH sides and broadcast-compare padded tiles
+                    (branch-free merge; the VPU-friendly lowering that the
+                    ``kernels/intersect_count`` Pallas kernel implements on
+                    TPU — no gathers at all).
+     Power-law graphs need *per-bucket* choices: low-degree seeds (the
+     bulk) take ``pw``; hub seeds fall back to binary search.
+   * *degree bucketing* ("degree-based workload balancing"): seeds are
+     grouped into power-of-two degree classes so padding waste is bounded,
+   * *hub tail* ("CPU post-processing stage" in the paper): rows beyond
+     the largest bucket are swept in fixed-size chunks via offset
+     parameters — counts are additive across chunks.
+
+3. **Lower** — emit one jitted kernel per (strategy, bucket triple): pure
+   jnp broadcasting over ``(B,)``/``(B,D1)``/``(B,D1,D2[,D3])`` query
+   shapes built from ``repro.core.ops``.  No data-dependent control flow;
+   temporal constraints become closed-form rank differences / compares.
+
+Counts are exact: `tests/test_compiler_oracle.py` checks them against the
+pure-Python GFP-reference enumerator on every pattern and every strategy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops
+from repro.core.spec import (
+    NEG_INF,
+    POS_INF,
+    Neigh,
+    NodeRef,
+    PatternSpec,
+    SetExpr,
+    Stage,
+    StageT,
+    TimeBound,
+    _SeedT,
+)
+from repro.graph.csr import DeviceGraph, TemporalGraph
+
+__all__ = ["CompiledPattern", "compile_pattern", "BUCKET_LADDER"]
+
+BUCKET_LADDER = (4, 16, 64, 256, 1024)
+BATCH_ELEM_CAP = 1 << 22  # max padded elements materialized per kernel call
+INVALID = np.int32(2**31 - 1)
+# cost-model constants (relative op costs, calibrated on the CPU backend;
+# the ratio is what matters: one binary-search probe ≈ gather + compare)
+C_SEARCH_PER_ITER = 4.0 * 5.0  # 4 lower_bounds x gather-heavy iteration
+C_COMPARE = 1.0
+# seeds whose best padded strategy exceeds this are decomposed into
+# per-branch work items (the paper's two-phase "deep tail" post-processing):
+# the frontier is expanded host-side and every branch is re-bucketed by its
+# OWN degree.  Sweeping this threshold (EXPERIMENTS.md §Perf-mining M4)
+# showed the bulk path's max-over-branches padding loses even for mildly
+# hub-adjacent seeds: 2^11 beat 2^21 by 30x on scatter-gather — per-branch
+# decomposition is the right default for ALL intersect work, with the
+# bulk path kept for genuinely uniform low-degree seeds
+BRANCH_DECOMP_COST = float(1 << 11)
+
+
+def _pow2ceil(x: int) -> int:
+    return 1 << max(0, int(x - 1).bit_length())
+
+
+def _ladder_class(req: np.ndarray, ladder=BUCKET_LADDER) -> np.ndarray:
+    """Smallest ladder entry >= req; len(ladder) means hub tail."""
+    return np.searchsorted(np.asarray(ladder), req, side="left").astype(np.int32)
+
+
+@dataclasses.dataclass
+class _Plan:
+    forall: Optional[Stage]
+    intersect: Optional[Stage]
+    counts: Tuple[Stage, ...]
+    emit: Stage
+    # level-1 count_edges stage eligible for the pairwise strategy
+    ce_l1: Optional[Stage] = None
+    est: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+class CompiledPattern:
+    """A pattern compiled against one graph (degree statistics feed the plan)."""
+
+    def __init__(
+        self,
+        spec: PatternSpec,
+        graph: TemporalGraph,
+        ladder: Tuple[int, ...] = BUCKET_LADDER,
+        force_strategy: Optional[str] = None,  # bs1 | bs2 | pw (tests)
+        batch_elem_cap: int = BATCH_ELEM_CAP,
+    ):
+        self.spec = spec
+        self.g = graph
+        self.dg = graph.to_device()
+        self.ladder = tuple(ladder)
+        self.batch_elem_cap = int(batch_elem_cap)
+        self.n_iters = ops.n_iters_for(self.dg.max_deg)
+        self.force_strategy = force_strategy
+        self._rm_cache: Dict = {}
+        self.plan = self._analyze()
+        self._kernels: Dict[Tuple, Callable] = {}
+
+    # ------------------------------------------------------------------
+    # analysis
+    # ------------------------------------------------------------------
+    def _analyze(self) -> _Plan:
+        forall = None
+        inter = None
+        counts = []
+        for st in self.spec.stages:
+            if st.op == "for_all":
+                if forall is not None:
+                    raise NotImplementedError(
+                        "compiler v1 lowers at most one for_all frontier; "
+                        "express deeper programs via intersect (see DESIGN.md)"
+                    )
+                forall = st
+            elif st.op == "intersect":
+                if inter is not None:
+                    raise NotImplementedError("at most one intersect stage")
+                inter = st
+            else:
+                counts.append(st)
+        plan = _Plan(forall, inter, tuple(counts), self.spec.emit_stage)
+
+        if forall is not None and isinstance(forall.operand, SetExpr):
+            if forall.operand.op == "union":
+                for st in self.spec.stages:
+                    for b in (
+                        st.window.after,
+                        st.window.until,
+                        st.window2.after,
+                        st.window2.until,
+                    ):
+                        if isinstance(b.anchor, StageT) and b.anchor.name == forall.name:
+                            raise NotImplementedError(
+                                "StageT anchor on a union frontier is undefined"
+                            )
+
+        # a level-1 count_edges (frontier -> fixed node) may lower pairwise,
+        # but only when the pattern has no intersect competing for the
+        # fixed-row expansion slot (library patterns never have both)
+        if inter is None and forall is not None:
+            for st in counts:
+                if st.op == "count_edges" and st.edge_src.name == forall.name:
+                    plan.ce_l1 = st
+                    break
+        return plan
+
+    def plan_text(self) -> str:
+        p = self.plan
+        lines = [f"pattern {self.spec.name}: compiled plan"]
+        if p.forall is not None:
+            lines.append(
+                f"  for_all {p.forall.name} <- {p.forall.operand!r} "
+                f"[buckets {self.ladder}]"
+            )
+        if p.intersect is not None:
+            a, b = p.intersect.operands
+            lines.append(
+                f"  intersect {p.intersect.name} <- {a!r} (X) {b!r} "
+                f"[strategy per bucket: bs1|bs2|pw; est {p.est}]"
+            )
+        for st in p.counts:
+            tag = " [bs|pw]" if st is p.ce_l1 else ""
+            lines.append(f"  {st.op} {st.name}{tag}")
+        lines.append(f"  emit {p.emit.name}")
+        return "\n".join(lines)
+
+    # ------------------------------------------------------------------
+    # host-side degree requirements (bucketing inputs)
+    # ------------------------------------------------------------------
+    def _seed_node(self, ref: NodeRef, seed_eids: np.ndarray) -> np.ndarray:
+        if ref.name == "seed.src":
+            return self.g.src[seed_eids]
+        if ref.name == "seed.dst":
+            return self.g.dst[seed_eids]
+        raise KeyError(ref.name)
+
+    def _deg_of(self, ref: NodeRef, direction: str, seed_eids: np.ndarray):
+        deg = self.g.out_deg if direction == "out" else self.g.in_deg
+        return deg[self._seed_node(ref, seed_eids)].astype(np.int64)
+
+    def _row_max_nbr_deg(self, src_dir: str, nbr_dir: str) -> np.ndarray:
+        """Per node: max over its src_dir-neighbors w of nbr_dir-degree(w)."""
+        key = (src_dir, nbr_dir)
+        if key in self._rm_cache:
+            return self._rm_cache[key]
+        g = self.g
+        indptr = g.out_indptr if src_dir == "out" else g.in_indptr
+        nbr = g.out_nbr if src_dir == "out" else g.in_nbr
+        deg = g.out_deg if nbr_dir == "out" else g.in_deg
+        mapped = deg[nbr].astype(np.int64)
+        n = len(indptr) - 1
+        if mapped.size == 0:
+            res = np.zeros(n, dtype=np.int64)
+        else:
+            starts = np.minimum(indptr[:-1], mapped.size - 1).astype(np.int64)
+            res = np.maximum.reduceat(mapped, starts)
+            res = np.where(np.diff(indptr) > 0, res, 0)
+        self._rm_cache[key] = res
+        return res
+
+    def _d1_req(self, seed_eids: np.ndarray) -> np.ndarray:
+        st = self.plan.forall
+        if st is None:
+            return np.ones(len(seed_eids), dtype=np.int64)
+        opn = st.operand
+        if isinstance(opn, SetExpr):
+            l = self._deg_of(opn.left.node, opn.left.direction, seed_eids)
+            if opn.op == "union":
+                r = self._deg_of(opn.right.node, opn.right.direction, seed_eids)
+                return np.maximum(l, r)
+            return l
+        return self._deg_of(opn.node, opn.direction, seed_eids)
+
+    def _d2_req(self, seed_eids: np.ndarray) -> np.ndarray:
+        """Frontier-side inner expansion (bs1/pw intersect)."""
+        st = self.plan.intersect
+        if st is None:
+            return np.ones(len(seed_eids), dtype=np.int64)
+        a, _ = st.operands
+        fa = self.plan.forall
+        if fa is None or a.node.name in ("seed.src", "seed.dst"):
+            return self._deg_of(a.node, a.direction, seed_eids)
+        opn = fa.operand
+        sides = (
+            [opn.left, opn.right]
+            if isinstance(opn, SetExpr) and opn.op == "union"
+            else [opn.left if isinstance(opn, SetExpr) else opn]
+        )
+        req = np.zeros(len(seed_eids), dtype=np.int64)
+        for side in sides:
+            rm = self._row_max_nbr_deg(side.direction, a.direction)
+            req = np.maximum(req, rm[self._seed_node(side.node, seed_eids)])
+        return req
+
+    def _d3_req(self, seed_eids: np.ndarray) -> np.ndarray:
+        """Fixed-side expansion (bs2/pw intersect, pw count_edges)."""
+        st = self.plan.intersect
+        if st is not None:
+            _, b = st.operands
+            return self._deg_of(b.node, b.direction, seed_eids)
+        ce = self.plan.ce_l1
+        if ce is not None:
+            return self._deg_of(ce.edge_dst, "in", seed_eids)
+        return np.ones(len(seed_eids), dtype=np.int64)
+
+    def _pad(self, req: np.ndarray) -> np.ndarray:
+        ladder = np.asarray(self.ladder, dtype=np.int64)
+        cls = np.minimum(_ladder_class(req, self.ladder), len(self.ladder) - 1)
+        pad = ladder[cls]
+        tail = req > ladder[-1]
+        return np.where(
+            tail, ((req + ladder[-1] - 1) // ladder[-1]) * ladder[-1], pad
+        )
+
+    # ------------------------------------------------------------------
+    # per-seed strategy choice (cost model)
+    # ------------------------------------------------------------------
+    def _strategies(self, d1p, d2p, d3p):
+        """Per-seed (strategy code, cost): 0=bs1, 1=bs2, 2=pw, 3=plain."""
+        cs = C_SEARCH_PER_ITER * self.n_iters
+        if self.plan.intersect is not None:
+            cost = np.stack(
+                [
+                    d1p * d2p * cs,  # bs1
+                    d1p * d3p * cs,  # bs2
+                    d1p * d2p * d3p * C_COMPARE,  # pw
+                ],
+                axis=0,
+            )
+            self.plan.est = {
+                k: float(cost[i].mean()) for i, k in enumerate(("bs1", "bs2", "pw"))
+            }
+            if self.force_strategy is not None:
+                code = {"bs1": 0, "bs2": 1, "pw": 2}[self.force_strategy]
+                out = np.full(d1p.shape, code, dtype=np.int32)
+                return out, cost[code]
+            st = np.argmin(cost, axis=0).astype(np.int32)
+            return st, cost.min(axis=0)
+        if self.plan.ce_l1 is not None:
+            cost = np.stack([d1p * cs, d1p * d3p * C_COMPARE], axis=0)
+            if self.force_strategy in ("bs1", "bs2"):
+                return np.zeros(d1p.shape, dtype=np.int32), cost[0]
+            if self.force_strategy == "pw":
+                return np.full(d1p.shape, 2, dtype=np.int32), cost[1]
+            st = np.where(cost[1] < cost[0], 2, 0).astype(np.int32)
+            return st, cost.min(axis=0)
+        return np.full(d1p.shape, 3, dtype=np.int32), d1p.astype(np.float64)
+
+    def _branch_strategies(self, d2p, d3p):
+        """Per-branch-item (strategy, _) for the hub decomposition path."""
+        cs = C_SEARCH_PER_ITER * self.n_iters
+        if self.plan.intersect is not None:
+            cost = np.stack(
+                [d2p * cs, d3p * cs, d2p * d3p * C_COMPARE], axis=0
+            )
+            if self.force_strategy is not None:
+                code = {"bs1": 0, "bs2": 1, "pw": 2}[self.force_strategy]
+                return np.full(d2p.shape, code, dtype=np.int32)
+            return np.argmin(cost, axis=0).astype(np.int32)
+        # ce_l1: one binary search per item vs d3 compares
+        if self.force_strategy == "pw":
+            return np.full(d2p.shape, 2, dtype=np.int32)
+        if self.force_strategy in ("bs1", "bs2"):
+            return np.zeros(d2p.shape, dtype=np.int32)
+        return np.where(d3p * C_COMPARE < cs, 2, 0).astype(np.int32)
+
+    # ------------------------------------------------------------------
+    # lowering
+    # ------------------------------------------------------------------
+    def _rows(self, dg: DeviceGraph, direction: str):
+        if direction == "out":
+            return dg.out_indptr, dg.out_nbr, dg.out_t, dg.out_t_sorted
+        return dg.in_indptr, dg.in_nbr, dg.in_t, dg.in_t_sorted
+
+    def _build_kernel(
+        self, strat: int, d1: int, d2: int, d3: int, branch_mode: bool = False
+    ) -> Callable:
+        plan, n_iters = self.plan, self.n_iters
+
+        def lift(arr, lvl):
+            arr = jnp.asarray(arr)
+            while arr.ndim < lvl + 1:
+                arr = arr[..., None]
+            return arr
+
+        def kernel(dg: DeviceGraph, s, d, st_, fr, frt, off1, off2, off3):
+            node_env = {"seed.src": (s, 0), "seed.dst": (d, 0)}
+            time_env: Dict[str, Tuple] = {}
+            mask_env: Dict[str, Tuple] = {}
+            count_env: Dict[str, Tuple] = {}
+
+            def bound_at(tb: TimeBound, lvl: int):
+                if tb.anchor is None:
+                    return jnp.int32(tb.offset)
+                if isinstance(tb.anchor, _SeedT):
+                    base = st_
+                else:
+                    base = time_env[tb.anchor.name][0]
+                return lift(base + jnp.int32(tb.offset), lvl)
+
+            def node_at(ref: NodeRef, lvl: int):
+                arr, _ = node_env[ref.name]
+                return lift(arr, lvl)
+
+            def expand_side(nb: Neigh, width: int, off):
+                indptr, nbr, t, _ = self._rows(dg, nb.direction)
+                base, _ = node_env[nb.node.name]
+                return ops.expand(indptr, (nbr, t), base, width, offset=off)
+
+            # ---- for_all frontier ------------------------------------
+            if plan.forall is not None and branch_mode:
+                # hub decomposition: the frontier was expanded host-side;
+                # each kernel row is ONE branch (width-1 frontier)
+                fa = plan.forall
+                bmask = (fr >= 0)[:, None]
+                node_env[fa.name] = (jnp.where(bmask, fr[:, None], -1), 1)
+                time_env[fa.name] = (frt[:, None], 1)
+                mask_env[fa.name] = (bmask, 1)
+                count_env[fa.name] = (bmask.astype(jnp.int32), 1, None)
+            elif plan.forall is not None:
+                fa = plan.forall
+                opn = fa.operand
+                a1 = bound_at(fa.window.after, 1)
+                u1 = bound_at(fa.window.until, 1)
+
+                def filt(mask, ids, ts):
+                    m = mask & (ts > a1) & (ts <= u1)
+                    for ref in fa.skip_eq:
+                        m = m & (ids != node_at(ref, 1))
+                    return m
+
+                if isinstance(opn, SetExpr) and opn.op == "union":
+                    m1, i1, t1 = expand_side(opn.left, d1, off1)
+                    m2, i2, t2 = expand_side(opn.right, d1, off1)
+                    m1, m2 = filt(m1, i1, t1), filt(m2, i2, t2)
+                    ids = jnp.concatenate([i1, i2], axis=-1)
+                    ts = jnp.concatenate([t1, t2], axis=-1)
+                    mask = jnp.concatenate([m1, m2], axis=-1)
+                    # dedup on node id (union is a node-set); filter first so
+                    # each id's surviving representative is in-window
+                    key = jnp.where(mask, ids, INVALID)
+                    order = jnp.argsort(key, axis=-1)
+                    ids = jnp.take_along_axis(key, order, axis=-1)
+                    ts = jnp.take_along_axis(ts, order, axis=-1)
+                    prev = jnp.concatenate(
+                        [jnp.full_like(ids[..., :1], -1), ids[..., :-1]], axis=-1
+                    )
+                    mask = (ids != INVALID) & (ids != prev)
+                elif isinstance(opn, SetExpr) and opn.op == "difference":
+                    mask, ids, ts = expand_side(opn.left, d1, off1)
+                    mask = filt(mask, ids, ts)
+                    rb = opn.right
+                    indptr_r, nbr_r, t_r, _ = self._rows(dg, rb.direction)
+                    member = ops.count_id_in_window(
+                        nbr_r,
+                        t_r,
+                        indptr_r,
+                        node_at(rb.node, 1),
+                        jnp.where(mask, ids, -1),
+                        NEG_INF,
+                        POS_INF,
+                        n_iters,
+                    )
+                    mask = mask & (member == 0)
+                else:
+                    mask, ids, ts = expand_side(opn, d1, off1)
+                    mask = filt(mask, ids, ts)
+                ids = jnp.where(mask, ids, -1)
+                node_env[fa.name] = (ids, 1)
+                time_env[fa.name] = (ts, 1)
+                mask_env[fa.name] = (mask, 1)
+                count_env[fa.name] = (mask.astype(jnp.int32), 1, None)
+
+            # ---- intersect -------------------------------------------
+            if plan.intersect is not None:
+                it = plan.intersect
+                a, b = it.operands
+                if a.node.name in ("seed.src", "seed.dst"):
+                    fr_ids = lift(node_env[a.node.name][0], 1)  # (B,1)
+                    fr_mask = fr_ids >= 0
+                else:
+                    fr_ids = node_env[a.node.name][0]
+                    fr_mask = mask_env[a.node.name][0]
+                indptr_a, nbr_a, t_a, _ = self._rows(dg, a.direction)
+                indptr_b, nbr_b, t_b, _ = self._rows(dg, b.direction)
+                fixed = node_env[b.node.name][0]  # (B,)
+                a1 = bound_at(it.window.after, 2)
+                u1 = bound_at(it.window.until, 2)
+                a2 = bound_at(it.window2.after, 2)
+                u2 = bound_at(it.window2.until, 2)
+
+                if strat == 0:  # bs1: expand frontier-nbr rows, bsearch fixed
+                    m2, x_ids, x_t = ops.expand(
+                        indptr_a, (nbr_a, t_a), fr_ids, d2, offset=off2
+                    )  # (B, D1, d2)
+                    m = m2 & fr_mask[..., None] & (x_t > a1) & (x_t <= u1)
+                    for ref in it.skip_eq:
+                        m = m & (x_ids != node_at(ref, 2))
+                    aa2 = jnp.maximum(a2, x_t) if it.ordered else a2
+                    cnt = ops.count_id_in_window(
+                        nbr_b,
+                        t_b,
+                        indptr_b,
+                        lift(fixed, 2),
+                        jnp.where(m, x_ids, -1),
+                        aa2,
+                        u2,
+                        n_iters,
+                    )
+                    branch = jnp.sum(jnp.where(m, cnt, 0), axis=-1)  # (B, D1)
+                elif strat == 1:  # bs2: expand fixed row, bsearch frontier rows
+                    m3, y_ids, y_t = ops.expand(
+                        indptr_b, (nbr_b, t_b), fixed, d3, offset=off3
+                    )  # (B, d3)
+                    y_ids2 = y_ids[:, None, :]
+                    y_t2 = y_t[:, None, :]
+                    mY = m3[:, None, :] & (y_t2 > a2) & (y_t2 <= u2)
+                    for ref in it.skip_eq:
+                        mY = mY & (y_ids2 != node_at(ref, 2))
+                    uu1 = jnp.minimum(u1, y_t2 - 1) if it.ordered else u1
+                    cnt = ops.count_id_in_window(
+                        nbr_a,
+                        t_a,
+                        indptr_a,
+                        lift(fr_ids, 2),
+                        jnp.where(mY, y_ids2, -1),
+                        a1,
+                        uu1,
+                        n_iters,
+                    )
+                    branch = jnp.sum(
+                        jnp.where(mY & fr_mask[..., None], cnt, 0), axis=-1
+                    )
+                else:  # pw: expand both sides, broadcast-compare (merge tile)
+                    m2, x_ids, x_t = ops.expand(
+                        indptr_a, (nbr_a, t_a), fr_ids, d2, offset=off2
+                    )  # (B, D1, d2)
+                    mX = m2 & fr_mask[..., None] & (x_t > a1) & (x_t <= u1)
+                    for ref in it.skip_eq:
+                        mX = mX & (x_ids != node_at(ref, 2))
+                    m3, y_ids, y_t = ops.expand(
+                        indptr_b, (nbr_b, t_b), fixed, d3, offset=off3
+                    )  # (B, d3)
+                    yb = y_ids[:, None, None, :]  # (B,1,1,d3)
+                    yt = y_t[:, None, None, :]
+                    pair = (
+                        mX[..., None]
+                        & m3[:, None, None, :]
+                        & (x_ids[..., None] == yb)
+                        & (yt > a2[..., None])
+                        & (yt <= u2[..., None])
+                    )
+                    if it.ordered:
+                        pair = pair & (yt > x_t[..., None])
+                    branch = jnp.sum(pair, axis=(-1, -2)).astype(jnp.int32)
+                count_env[it.name] = (branch, 1, fr_mask)
+
+            # ---- count stages ----------------------------------------
+            for st in plan.counts:
+                if st.op == "count_window":
+                    nb = st.operand
+                    base, lvl = node_env[nb.node.name]
+                    indptr, _, _, t_sorted = self._rows(dg, nb.direction)
+                    cnt = ops.count_window(
+                        t_sorted,
+                        indptr,
+                        base,
+                        bound_at(st.window.after, lvl),
+                        bound_at(st.window.until, lvl),
+                        n_iters,
+                    )
+                    msk = mask_env.get(nb.node.name, (None,))[0]
+                    count_env[st.name] = (cnt, lvl, msk)
+                elif st.op == "count_edges":
+                    base, lvl_s = node_env[st.edge_src.name]
+                    dst_arr, lvl_d = node_env[st.edge_dst.name]
+                    lvl = max(lvl_s, lvl_d)
+                    if st is plan.ce_l1 and strat == 2:
+                        # pairwise: compare frontier ids against the
+                        # expanded in-row of the fixed destination
+                        indptr_i, nbr_i, t_i, _ = self._rows(dg, "in")
+                        m3, y_ids, y_t = ops.expand(
+                            indptr_i, (nbr_i, t_i), dst_arr, d3, offset=off3
+                        )  # (B, d3) — in-neighbors of dst (= edge sources)
+                        aw = bound_at(st.window.after, 2)
+                        uw = bound_at(st.window.until, 2)
+                        pair = (
+                            m3[:, None, :]
+                            & (lift(base, 2) == y_ids[:, None, :])
+                            & (y_t[:, None, :] > aw)
+                            & (y_t[:, None, :] <= uw)
+                        )
+                        cnt = jnp.sum(pair, axis=-1).astype(jnp.int32)  # (B, D1)
+                    else:
+                        indptr, nbr, t, _ = self._rows(dg, "out")
+                        cnt = ops.count_id_in_window(
+                            nbr,
+                            t,
+                            indptr,
+                            lift(base, lvl),
+                            lift(dst_arr, lvl),
+                            bound_at(st.window.after, lvl),
+                            bound_at(st.window.until, lvl),
+                            n_iters,
+                        )
+                    mname = st.edge_src.name if lvl_s >= lvl_d else st.edge_dst.name
+                    msk = mask_env.get(mname, (None,))[0]
+                    count_env[st.name] = (cnt, lvl, msk)
+                elif st.op == "product":
+                    f1, f2 = st.factors
+                    c1, l1, _ = count_env[f1]
+                    c2, l2, _ = count_env[f2]
+                    if l1 != 0 or l2 != 0:
+                        raise NotImplementedError("product of scalar counts only")
+                    count_env[st.name] = (c1 * c2, 0, None)
+
+            cnt, lvl, msk = count_env[plan.emit.name]
+            if msk is not None:
+                cnt = jnp.where(msk, cnt, 0)
+            while cnt.ndim > 1:
+                cnt = cnt.sum(axis=-1)
+            return cnt.astype(jnp.int32)
+
+        return kernel
+
+    def _kernel(self, strat: int, d1: int, d2: int, d3: int, branch=False) -> Callable:
+        key = (strat, d1, d2, d3, branch)
+        if key not in self._kernels:
+            self._kernels[key] = jax.jit(
+                self._build_kernel(strat, d1, d2, d3, branch)
+            )
+        return self._kernels[key]
+
+    # ------------------------------------------------------------------
+    # execution
+    # ------------------------------------------------------------------
+    def _run_buckets(
+        self, out, sel_all, src, dst, st, fr, frt, strat, reqs, classes, branch, seed_of
+    ):
+        """Group rows by (strategy, bucket classes), run kernels, accumulate.
+
+        ``reqs``/``classes`` are (d1, d2, d3) requirement / class arrays;
+        class -1 means the dim is unused by that row's strategy.  In branch
+        mode, row results are segment-summed into ``out[seed_of[row]]``.
+        """
+        nL = len(self.ladder)
+        bmax = self.ladder[-1]
+        d1r, d2r, d3r = reqs
+        c1, c2, c3 = classes
+        has_union = (
+            self.plan.forall is not None
+            and isinstance(self.plan.forall.operand, SetExpr)
+            and self.plan.forall.operand.op == "union"
+        )
+        keys = np.stack([strat, c1, c2, c3], axis=1)
+        uniq = np.unique(keys, axis=0)
+        for sk, k1, k2, k3 in uniq:
+            sel = sel_all[
+                (strat == sk) & (c1 == k1) & (c2 == k2) & (c3 == k3)
+            ]
+
+            def _dim(kc, req, allow_pow2_tail=False):
+                if kc < 0:
+                    return 1, 1
+                if kc >= nL:
+                    mx = int(req[sel].max())
+                    if allow_pow2_tail:  # one-off bucket (unions: no sweeps)
+                        return _pow2ceil(mx), 1
+                    return bmax, math.ceil(mx / bmax)
+                return self.ladder[kc], 1
+
+            d1, sweeps1 = _dim(k1, d1r, allow_pow2_tail=has_union)
+            d2, sweeps2 = _dim(k2, d2r)
+            d3, sweeps3 = _dim(k3, d3r)
+            fn = self._kernel(int(sk), d1, d2, d3, branch)
+            per_row = max(1, d1 * max(d2 * d3, d2, d3))
+            bchunk = max(32, self.batch_elem_cap // per_row)
+            bchunk = min(bchunk, _pow2ceil(len(sel)))
+            for s0 in range(0, len(sel), bchunk):
+                idx = sel[s0 : s0 + bchunk]
+                want = bchunk if len(sel) - s0 >= bchunk else _pow2ceil(
+                    len(sel) - s0
+                )
+                pad = want - len(idx)
+                neg = np.full(pad, -1, np.int32)
+                zero = np.zeros(pad, np.int32)
+                ss = np.concatenate([src[idx], neg])
+                dd_ = np.concatenate([dst[idx], neg])
+                tt = np.concatenate([st[idx], zero])
+                if branch:
+                    ff = np.concatenate([fr[idx], neg])
+                    fft = np.concatenate([frt[idx], zero])
+                else:
+                    ff = np.full(want, -1, np.int32)
+                    fft = np.zeros(want, np.int32)
+                acc = np.zeros(want, dtype=np.int64)
+                for o1 in range(sweeps1):
+                    for o2 in range(sweeps2):
+                        for o3 in range(sweeps3):
+                            res = fn(
+                                self.dg,
+                                jnp.asarray(ss),
+                                jnp.asarray(dd_),
+                                jnp.asarray(tt),
+                                jnp.asarray(ff),
+                                jnp.asarray(fft),
+                                jnp.int32(o1 * d1),
+                                jnp.int32(o2 * d2),
+                                jnp.int32(o3 * d3),
+                            )
+                            acc += np.asarray(res, dtype=np.int64)
+                acc = acc[: len(idx)]
+                if branch:
+                    np.add.at(out, seed_of[idx], acc)
+                else:
+                    out[idx] = acc
+
+    def _host_bound(self, tb: TimeBound, st: np.ndarray) -> np.ndarray:
+        if tb.anchor is None:
+            return np.full(st.shape, tb.offset, dtype=np.int64)
+        assert isinstance(tb.anchor, _SeedT), "for_all anchors are seed-level"
+        return st.astype(np.int64) + tb.offset
+
+    def _expand_branches(self, src, dst, st):
+        """Host-side frontier expansion for hub seeds (numpy CSR slices)."""
+        fa = self.plan.forall
+        opn = fa.operand
+        g = self.g
+        indptr = g.out_indptr if opn.direction == "out" else g.in_indptr
+        nbr = g.out_nbr if opn.direction == "out" else g.in_nbr
+        tt = g.out_t if opn.direction == "out" else g.in_t
+        base = src if opn.node.name == "seed.src" else dst
+        starts = indptr[base]
+        lens = (indptr[base + 1] - starts).astype(np.int64)
+        tot = int(lens.sum())
+        item_seed = np.repeat(np.arange(len(src), dtype=np.int64), lens)
+        first = np.repeat(np.cumsum(lens) - lens, lens)
+        offs = np.repeat(starts, lens) + (np.arange(tot, dtype=np.int64) - first)
+        fr = nbr[offs].astype(np.int32)
+        frt = tt[offs].astype(np.int64)
+        a1 = self._host_bound(fa.window.after, st)
+        u1 = self._host_bound(fa.window.until, st)
+        ok = (frt > a1[item_seed]) & (frt <= u1[item_seed])
+        for ref in fa.skip_eq:
+            vals = src if ref.name == "seed.src" else dst
+            ok &= fr != vals[item_seed]
+        return item_seed[ok], fr[ok], frt[ok].astype(np.int32)
+
+    def mine(self, seed_eids: Optional[np.ndarray] = None) -> np.ndarray:
+        g = self.g
+        if seed_eids is None:
+            seed_eids = np.arange(g.n_edges, dtype=np.int32)
+        seed_eids = np.asarray(seed_eids, dtype=np.int32)
+        n = len(seed_eids)
+        out = np.zeros(n, dtype=np.int64)
+        if n == 0:
+            return out
+
+        d1r = self._d1_req(seed_eids)
+        d2r = self._d2_req(seed_eids)
+        d3r = self._d3_req(seed_eids)
+        d1p, d2p, d3p = self._pad(d1r), self._pad(d2r), self._pad(d3r)
+        strat, cost = self._strategies(d1p, d2p, d3p)
+
+        has_inter = self.plan.intersect is not None
+        has_ce = self.plan.ce_l1 is not None
+        branch_ok = (
+            (has_inter or has_ce)
+            and self.plan.forall is not None
+            and isinstance(self.plan.forall.operand, Neigh)
+        )
+        go_branch = (
+            (cost > BRANCH_DECOMP_COST)
+            if branch_ok
+            else np.zeros(n, dtype=bool)
+        )
+
+        src = g.src[seed_eids].astype(np.int32)
+        dst = g.dst[seed_eids].astype(np.int32)
+        st = g.t[seed_eids].astype(np.int32)
+
+        # ---- normal (bulk) path --------------------------------------
+        norm = np.nonzero(~go_branch)[0]
+        if len(norm):
+            use2 = has_inter & np.isin(strat, (0, 2))
+            use3 = (has_inter & np.isin(strat, (1, 2))) | (has_ce & (strat == 2))
+            c1 = _ladder_class(d1r, self.ladder)
+            c2 = np.where(use2, _ladder_class(d2r, self.ladder), -1)
+            c3 = np.where(use3, _ladder_class(d3r, self.ladder), -1)
+            self._run_buckets(
+                out,
+                norm,
+                src,
+                dst,
+                st,
+                None,
+                None,
+                strat[norm],
+                (d1r, d2r, d3r),
+                (c1[norm], c2[norm], c3[norm]),
+                branch=False,
+                seed_of=None,
+            )
+
+        # ---- hub tail: per-branch decomposition ----------------------
+        hub = np.nonzero(go_branch)[0]
+        if len(hub):
+            item_seed_l, fr, frt = self._expand_branches(
+                src[hub], dst[hub], st[hub]
+            )
+            if len(fr):
+                seed_of = hub[item_seed_l]
+                # per-item requirements use ACTUAL branch degrees
+                if has_inter:
+                    a, b = self.plan.intersect.operands
+                    deg_a = (
+                        self.g.out_deg if a.direction == "out" else self.g.in_deg
+                    )
+                    bd2r = deg_a[fr].astype(np.int64)
+                    bd3r = d3r[seed_of]
+                else:  # ce_l1
+                    bd2r = np.ones(len(fr), dtype=np.int64)
+                    bd3r = d3r[seed_of]
+                bstrat = self._branch_strategies(self._pad(bd2r), self._pad(bd3r))
+                use2b = has_inter & np.isin(bstrat, (0, 2))
+                use3b = (has_inter & np.isin(bstrat, (1, 2))) | (
+                    has_ce & (bstrat == 2)
+                )
+                bc2 = np.where(use2b, _ladder_class(bd2r, self.ladder), -1)
+                bc3 = np.where(use3b, _ladder_class(bd3r, self.ladder), -1)
+                bc1 = np.full(len(fr), -1, dtype=np.int32)
+                bd1r = np.ones(len(fr), dtype=np.int64)
+                items = np.arange(len(fr))
+                self._run_buckets(
+                    out,
+                    items,
+                    src[seed_of],
+                    dst[seed_of],
+                    st[seed_of],
+                    fr,
+                    frt,
+                    bstrat,
+                    (bd1r, bd2r, bd3r),
+                    (bc1, bc2, bc3),
+                    branch=True,
+                    seed_of=seed_of,
+                )
+        return out
+
+
+def compile_pattern(spec: PatternSpec, graph: TemporalGraph, **kw) -> CompiledPattern:
+    return CompiledPattern(spec, graph, **kw)

@@ -1,0 +1,132 @@
+"""Vectorized mining primitives the compiler lowers stages onto.
+
+TPU adaptation of the paper's warp-cooperative kernels:
+
+* ``lower_bound`` — branch-free fixed-iteration binary search, vectorized
+  over arbitrary query shapes (the "early exit on temporal violation"
+  becomes a closed-form rank difference).
+* ``count_id_in_window`` — two-level search: locate the id run inside an
+  id-sorted CSR row, then rank the time window inside that run (rows are
+  sorted by (id, t), so the run is time-sorted).  This replaces the int64
+  composite-key search with pure int32 ops (TPU-friendly).
+* ``count_window`` — windowed degree on the time-sorted row copy.
+* ``expand`` — padded neighborhood materialization for ``for_all`` stages
+  (the only primitive that materializes; intersections never do).
+
+All primitives broadcast elementwise, so higher stage arity is just query
+shape: seeds ``(B,)``, one expansion ``(B, D1)``, two ``(B, D1, D2)``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "lower_bound",
+    "count_t_in",
+    "count_id_in_window",
+    "count_window",
+    "expand",
+    "n_iters_for",
+]
+
+
+def n_iters_for(max_len: int) -> int:
+    return max(1, int(max_len).bit_length())
+
+
+def lower_bound(flat, lo, hi, q, n_iters: int):
+    """# of elements in flat[lo:hi) strictly less than q (elementwise)."""
+    q = jnp.asarray(q)
+    lo = jnp.asarray(lo, jnp.int32)
+    hi = jnp.asarray(hi, jnp.int32)
+    shape = jnp.broadcast_shapes(q.shape, lo.shape, hi.shape)
+    q = jnp.broadcast_to(q, shape)
+    lo = jnp.broadcast_to(lo, shape)
+    hi = jnp.broadcast_to(hi, shape)
+    cap = flat.shape[0] - 1
+
+    def body(_, carry):
+        clo, chi = carry
+        mid = (clo + chi) >> 1
+        v = flat[jnp.clip(mid, 0, cap)]
+        active = clo < chi
+        less = v < q
+        nlo = jnp.where(active & less, mid + 1, clo)
+        nhi = jnp.where(active & ~less, mid, chi)
+        return nlo, nhi
+
+    lo_f, _ = jax.lax.fori_loop(0, n_iters, body, (lo, hi))
+    return lo_f
+
+
+def count_t_in(t_flat, start, end, after, until, n_iters: int):
+    """# of times in t_flat[start:end) with  after < t <= until."""
+    a = lower_bound(t_flat, start, end, jnp.asarray(after, jnp.int32) + 1, n_iters)
+    b = lower_bound(t_flat, start, end, jnp.asarray(until, jnp.int32) + 1, n_iters)
+    return b - a
+
+
+def count_id_in_window(
+    nbr_flat,
+    t_flat,
+    indptr,
+    node,
+    x,
+    after,
+    until,
+    n_iters: int,
+):
+    """Multiplicity of edges node->x (id-sorted row) with t in (after, until].
+
+    Row layout is sorted by (id, t): the id run [lb, ub) found in level 1 is
+    itself time-sorted, so level 2 ranks the window inside the run.
+    Invalid nodes (node < 0) contribute 0.
+    """
+    node = jnp.asarray(node, jnp.int32)
+    safe = jnp.maximum(node, 0)
+    start = indptr[safe]
+    end = indptr[safe + 1]
+    x = jnp.asarray(x, jnp.int32)
+    lb = lower_bound(nbr_flat, start, end, x, n_iters)
+    ub = lower_bound(nbr_flat, start, end, x + 1, n_iters)
+    cnt = count_t_in(t_flat, lb, ub, after, until, n_iters)
+    return jnp.where((node >= 0) & (x >= 0), cnt, 0)
+
+
+def count_window(t_sorted_flat, indptr, node, after, until, n_iters: int):
+    """Windowed degree of `node` on the time-sorted row copy."""
+    node = jnp.asarray(node, jnp.int32)
+    safe = jnp.maximum(node, 0)
+    start = indptr[safe]
+    end = indptr[safe + 1]
+    cnt = count_t_in(t_sorted_flat, start, end, after, until, n_iters)
+    return jnp.where(node >= 0, cnt, 0)
+
+
+def expand(
+    indptr,
+    flats: Tuple,
+    node,
+    d: int,
+    offset=0,
+):
+    """Materialize up to `d` row elements per node (padded).
+
+    Returns (mask, gathered...) each of shape node.shape + (d,).  `offset`
+    (broadcastable to node.shape) slides the window along the row — the
+    hub-tail chunking path uses it to sweep rows longer than `d`.
+    """
+    node = jnp.asarray(node, jnp.int32)
+    safe = jnp.maximum(node, 0)
+    start = indptr[safe] + jnp.asarray(offset, jnp.int32)
+    end = indptr[safe + 1]
+    idx = start[..., None] + jnp.arange(d, dtype=jnp.int32)
+    mask = (idx < end[..., None]) & (node >= 0)[..., None]
+    cap = flats[0].shape[0] - 1
+    cidx = jnp.clip(idx, 0, cap)
+    outs = tuple(f[cidx] for f in flats)
+    return (mask,) + outs

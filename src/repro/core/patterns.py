@@ -1,0 +1,327 @@
+"""Pattern library (paper Fig. 2/4/5): AML typologies as multi-stage specs.
+
+Every pattern is anchored at a seed edge ``e = (u -> v, t)`` and counts the
+pattern instances that edge participates in, within time window ``W``.
+Temporal-fuzzy variants coexist with strict-order ones — same stages,
+different :class:`Window` anchors — which is precisely the paper's point:
+no re-implementation, only re-specification.
+"""
+from __future__ import annotations
+
+from repro.core.spec import (
+    Neigh,
+    NodeRef,
+    PatternSpec,
+    SEED_DST,
+    SEED_SRC,
+    SEED_T,
+    SetExpr,
+    Stage,
+    StageT,
+    TimeBound,
+    Window,
+)
+
+__all__ = ["build_pattern", "PATTERN_NAMES", "feature_pattern_set"]
+
+
+def fan_in(w: int) -> PatternSpec:
+    """In-edges of the receiver inside the window (smurfing placement)."""
+    return PatternSpec(
+        "fan_in",
+        stages=(
+            Stage(
+                "cnt",
+                "count_window",
+                operand=Neigh(SEED_DST, "in"),
+                window=Window.around_seed(w),
+                emit=True,
+            ),
+        ),
+    )
+
+
+def fan_out(w: int) -> PatternSpec:
+    return PatternSpec(
+        "fan_out",
+        stages=(
+            Stage(
+                "cnt",
+                "count_window",
+                operand=Neigh(SEED_SRC, "out"),
+                window=Window.around_seed(w),
+                emit=True,
+            ),
+        ),
+    )
+
+
+def deg_in(w: int) -> PatternSpec:
+    """Windowed in-degree of the *sender* (funds previously received)."""
+    return PatternSpec(
+        "deg_in",
+        stages=(
+            Stage(
+                "cnt",
+                "count_window",
+                operand=Neigh(SEED_SRC, "in"),
+                window=Window.around_seed(w),
+                emit=True,
+            ),
+        ),
+    )
+
+
+def deg_out(w: int) -> PatternSpec:
+    """Windowed out-degree of the *receiver* (funds moving on)."""
+    return PatternSpec(
+        "deg_out",
+        stages=(
+            Stage(
+                "cnt",
+                "count_window",
+                operand=Neigh(SEED_DST, "out"),
+                window=Window.around_seed(w),
+                emit=True,
+            ),
+        ),
+    )
+
+
+def cycle2(w: int) -> PatternSpec:
+    """Round-trip: v sends back to u after the seed, within W."""
+    return PatternSpec(
+        "cycle2",
+        stages=(
+            Stage(
+                "close",
+                "count_edges",
+                edge_src=SEED_DST,
+                edge_dst=SEED_SRC,
+                window=Window.after_seed(w),
+                emit=True,
+            ),
+        ),
+    )
+
+
+def cycle3(w: int) -> PatternSpec:
+    """u->v->w->u with strictly increasing times inside (t, t+W]."""
+    return PatternSpec(
+        "cycle3",
+        stages=(
+            Stage(
+                "w",
+                "for_all",
+                operand=Neigh(SEED_DST, "out"),
+                skip_eq=(SEED_SRC, SEED_DST),
+                window=Window.after_seed(w),
+            ),
+            Stage(
+                "close",
+                "count_edges",
+                edge_src=NodeRef("w"),
+                edge_dst=SEED_SRC,
+                window=Window(TimeBound(StageT("w"), 0), TimeBound(SEED_T, w)),
+                emit=True,
+            ),
+        ),
+    )
+
+
+def cycle3_fuzzy(w: int) -> PatternSpec:
+    """Temporal fuzziness: edges may appear in ANY order inside [t-W, t+W]
+    (camouflage/anticipatory edges) — same stages, looser anchors."""
+    return PatternSpec(
+        "cycle3_fuzzy",
+        stages=(
+            Stage(
+                "w",
+                "for_all",
+                operand=Neigh(SEED_DST, "out"),
+                skip_eq=(SEED_SRC, SEED_DST),
+                window=Window.around_seed(w),
+            ),
+            Stage(
+                "close",
+                "count_edges",
+                edge_src=NodeRef("w"),
+                edge_dst=SEED_SRC,
+                window=Window.around_seed(w),
+                emit=True,
+            ),
+        ),
+    )
+
+
+def cycle4(w: int) -> PatternSpec:
+    """u->v->w->x->u, ordered, all inside (t, t+W]."""
+    return PatternSpec(
+        "cycle4",
+        stages=(
+            Stage(
+                "w",
+                "for_all",
+                operand=Neigh(SEED_DST, "out"),
+                skip_eq=(SEED_SRC, SEED_DST),
+                window=Window.after_seed(w),
+            ),
+            Stage(
+                "close",
+                "intersect",
+                operands=(Neigh(NodeRef("w"), "out"), Neigh(SEED_SRC, "in")),
+                skip_eq=(SEED_SRC, SEED_DST, NodeRef("w")),
+                window=Window(TimeBound(StageT("w"), 0), TimeBound(SEED_T, w)),
+                window2=Window(TimeBound(SEED_T, 0), TimeBound(SEED_T, w)),
+                ordered=True,
+                emit=True,
+            ),
+        ),
+    )
+
+
+def scatter_gather(w: int) -> PatternSpec:
+    """Seed edge = one gather leg (mid u -> sink v).  Stage s finds scatter
+    sources; the intersect counts sibling mid chains s->x->v whose gather
+    follows its own scatter (per-branch partial order, decoupled phases)."""
+    return PatternSpec(
+        "scatter_gather",
+        stages=(
+            Stage(
+                "s",
+                "for_all",
+                operand=Neigh(SEED_SRC, "in"),
+                skip_eq=(SEED_DST,),
+                window=Window.before_seed(w),
+            ),
+            Stage(
+                "sg",
+                "intersect",
+                operands=(Neigh(NodeRef("s"), "out"), Neigh(SEED_DST, "in")),
+                skip_eq=(SEED_SRC, SEED_DST, NodeRef("s")),
+                window=Window(
+                    TimeBound(StageT("s"), -w - 1), TimeBound(StageT("s"), w)
+                ),
+                window2=Window.around_seed(w),
+                ordered=True,
+                emit=True,
+            ),
+        ),
+    )
+
+
+def stack(w: int) -> PatternSpec:
+    """Stacked bipartite layering: #(a->u before t) x #(v->d after t)."""
+    return PatternSpec(
+        "stack",
+        stages=(
+            Stage(
+                "up",
+                "count_window",
+                operand=Neigh(SEED_SRC, "in"),
+                window=Window.before_seed(w),
+            ),
+            Stage(
+                "down",
+                "count_window",
+                operand=Neigh(SEED_DST, "out"),
+                window=Window(TimeBound(SEED_T, 0), TimeBound(SEED_T, w)),
+            ),
+            Stage("stk", "product", factors=("up", "down"), emit=True),
+        ),
+    )
+
+
+def reciprocal(w: int) -> PatternSpec:
+    """Accounts trading in both directions with u (union/difference demo of
+    set algebra is in `counterparty`); uses a pseudo-frontier intersect."""
+    return PatternSpec(
+        "reciprocal",
+        stages=(
+            Stage(
+                "rc",
+                "intersect",
+                operands=(Neigh(SEED_SRC, "out"), Neigh(SEED_SRC, "in")),
+                skip_eq=(SEED_SRC, SEED_DST),
+                window=Window.around_seed(w),
+                window2=Window.around_seed(w),
+                emit=True,
+            ),
+        ),
+    )
+
+
+def counterparty(w: int) -> PatternSpec:
+    """#distinct counterparties of u in the window (union set algebra)."""
+    return PatternSpec(
+        "counterparty",
+        stages=(
+            Stage(
+                "cp",
+                "for_all",
+                operand=SetExpr(
+                    "union", Neigh(SEED_SRC, "out"), Neigh(SEED_SRC, "in")
+                ),
+                skip_eq=(SEED_SRC,),
+                window=Window.around_seed(w),
+                emit=True,
+            ),
+        ),
+    )
+
+
+def new_counterparty(w: int) -> PatternSpec:
+    """Receivers u pays that never paid u back (difference set algebra)."""
+    return PatternSpec(
+        "new_counterparty",
+        stages=(
+            Stage(
+                "nc",
+                "for_all",
+                operand=SetExpr(
+                    "difference", Neigh(SEED_SRC, "out"), Neigh(SEED_SRC, "in")
+                ),
+                skip_eq=(SEED_SRC,),
+                window=Window.around_seed(w),
+                emit=True,
+            ),
+        ),
+    )
+
+
+_BUILDERS = {
+    "fan_in": fan_in,
+    "fan_out": fan_out,
+    "deg_in": deg_in,
+    "deg_out": deg_out,
+    "cycle2": cycle2,
+    "cycle3": cycle3,
+    "cycle3_fuzzy": cycle3_fuzzy,
+    "cycle4": cycle4,
+    "scatter_gather": scatter_gather,
+    "stack": stack,
+    "reciprocal": reciprocal,
+    "counterparty": counterparty,
+    "new_counterparty": new_counterparty,
+}
+
+PATTERN_NAMES = tuple(_BUILDERS)
+
+
+def build_pattern(name: str, window: int) -> PatternSpec:
+    if name not in _BUILDERS:
+        raise KeyError(f"unknown pattern {name!r}; options: {PATTERN_NAMES}")
+    return _BUILDERS[name](window)
+
+
+def feature_pattern_set(kind: str = "full") -> tuple:
+    """Feature groups matching the paper's Table 2 columns."""
+    groups = {
+        "fan": ("fan_in", "fan_out"),
+        "degree": ("deg_in", "deg_out"),
+        "cycle": ("cycle2", "cycle3", "cycle4"),
+        "sg": ("scatter_gather", "stack"),
+    }
+    if kind == "full":
+        return groups["fan"] + groups["degree"] + groups["cycle"] + groups["sg"]
+    return groups[kind]

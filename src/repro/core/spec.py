@@ -1,0 +1,230 @@
+"""Multi-stage specification language for fuzzy AML patterns (paper §5).
+
+A :class:`PatternSpec` decomposes a laundering scheme into logical
+**stages**.  Every pattern is anchored at a *seed edge* ``e = (N0 -> N1, t)``
+— mining computes, for every transaction edge, the number of pattern
+instances that edge participates in (the GFP feature semantics).
+
+Stage operations (paper §6 primitive list):
+
+* ``for_all``       — enumerate a neighborhood into a stage variable
+                      (structural fuzziness: *any* number of matches).
+* ``intersect``     — weighted intersection count between a stage
+                      variable's neighborhoods and a fixed node's
+                      neighborhood (on-demand: never materialized).
+* ``union`` / ``difference`` — set algebra over neighborhoods feeding a
+                      ``for_all`` stage.
+* ``count_edges``   — multiplicity of edges between two bound nodes
+                      inside a time window (closing a cycle, etc.).
+* ``count_window``  — windowed degree count of a bound node.
+* ``product``       — combine two earlier count stages multiplicatively
+                      (decoupled phases, e.g. the stack pattern).
+
+Temporal fuzziness enters through :class:`TimeBound` anchors: every stage
+may constrain its edges to ``(after, until]`` where each bound is an offset
+from the seed time (``SEED_T``), from the *per-branch* time of an earlier
+stage (``StageT``), or unbounded.  Per-branch anchors express partial
+orders ("gather after its own scatter") without imposing a global edge
+order — the O(n!) enumeration the paper eliminates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple, Union
+
+__all__ = [
+    "SEED_SRC",
+    "SEED_DST",
+    "SEED_T",
+    "NodeRef",
+    "StageT",
+    "TimeBound",
+    "Window",
+    "Neigh",
+    "SetExpr",
+    "Stage",
+    "PatternSpec",
+    "NEG_INF",
+    "POS_INF",
+]
+
+NEG_INF = -(1 << 30)
+POS_INF = 1 << 30
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeRef:
+    """A bound node: seed endpoint or an earlier for_all stage variable."""
+
+    name: str  # "seed.src" | "seed.dst" | stage name
+
+    def __repr__(self):  # pragma: no cover
+        return f"@{self.name}"
+
+
+SEED_SRC = NodeRef("seed.src")
+SEED_DST = NodeRef("seed.dst")
+
+
+@dataclasses.dataclass(frozen=True)
+class StageT:
+    """Per-branch time anchor: the matched edge time of stage `name`."""
+
+    name: str
+
+
+class _SeedT:
+    def __repr__(self):  # pragma: no cover
+        return "SEED_T"
+
+
+SEED_T = _SeedT()
+
+Anchor = Union[_SeedT, StageT, None]
+
+
+@dataclasses.dataclass(frozen=True)
+class TimeBound:
+    """`anchor + offset`; anchor None means +/- infinity."""
+
+    anchor: Anchor
+    offset: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Window:
+    """Half-open-below window: edge time in (after, until]."""
+
+    after: TimeBound = TimeBound(None, NEG_INF)
+    until: TimeBound = TimeBound(None, POS_INF)
+
+    @staticmethod
+    def around_seed(w: int) -> "Window":
+        return Window(TimeBound(SEED_T, -w - 1), TimeBound(SEED_T, w))
+
+    @staticmethod
+    def after_seed(w: int) -> "Window":
+        return Window(TimeBound(SEED_T, 0), TimeBound(SEED_T, w))
+
+    @staticmethod
+    def before_seed(w: int) -> "Window":
+        return Window(TimeBound(SEED_T, -w - 1), TimeBound(SEED_T, -1))
+
+    @staticmethod
+    def after_stage(name: str, w_until: TimeBound) -> "Window":
+        return Window(TimeBound(StageT(name), 0), w_until)
+
+
+@dataclasses.dataclass(frozen=True)
+class Neigh:
+    """`node.out_neigh` / `node.in_neigh` operand."""
+
+    node: NodeRef
+    direction: str  # "out" | "in"
+
+    def __post_init__(self):
+        if self.direction not in ("out", "in"):
+            raise ValueError(f"direction must be out/in, got {self.direction}")
+
+    def __repr__(self):  # pragma: no cover
+        return f"{self.node!r}.{self.direction}_neigh"
+
+
+@dataclasses.dataclass(frozen=True)
+class SetExpr:
+    """Set algebra over neighborhoods: union / difference feeding for_all."""
+
+    op: str  # "union" | "difference"
+    left: Neigh
+    right: Neigh
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    name: str
+    op: str  # for_all | intersect | count_edges | count_window | product
+    # for_all: operand = Neigh or SetExpr; intersect: (Neigh-of-stage-var, Neigh-of-fixed)
+    operand: Optional[Union[Neigh, SetExpr]] = None
+    operands: Optional[Tuple[Neigh, Neigh]] = None
+    # count_edges: src/dst refs
+    edge_src: Optional[NodeRef] = None
+    edge_dst: Optional[NodeRef] = None
+    # node-inequality constraints ("differentiate"/skip_if): stage var != ref
+    skip_eq: Tuple[NodeRef, ...] = ()
+    window: Window = Window()
+    # second window applied to the fixed side of an intersect
+    window2: Window = Window()
+    # intersect ordering: fixed-side edge must come after frontier-side edge
+    ordered: bool = False
+    # product: names of two count stages
+    factors: Optional[Tuple[str, str]] = None
+    emit: bool = False  # this stage's count is (part of) the pattern output
+
+
+@dataclasses.dataclass(frozen=True)
+class PatternSpec:
+    name: str
+    stages: Tuple[Stage, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "stages", tuple(self.stages))
+        self.validate()
+
+    # -- static validation (compiler front-end, paper §6) -----------------
+    def validate(self) -> None:
+        bound = {"seed.src", "seed.dst"}
+        names = set()
+        emits = 0
+        for st in self.stages:
+            if st.name in names or st.name in bound:
+                raise ValueError(f"duplicate stage name {st.name!r}")
+            names.add(st.name)
+            refs: List[NodeRef] = []
+            if st.op == "for_all":
+                if st.operand is None:
+                    raise ValueError(f"{st.name}: for_all needs operand")
+                ns = (
+                    [st.operand.left, st.operand.right]
+                    if isinstance(st.operand, SetExpr)
+                    else [st.operand]
+                )
+                refs += [n.node for n in ns]
+                bound.add(st.name)
+            elif st.op == "intersect":
+                if st.operands is None:
+                    raise ValueError(f"{st.name}: intersect needs operands")
+                a, b = st.operands
+                refs += [a.node, b.node]
+            elif st.op == "count_edges":
+                if st.edge_src is None or st.edge_dst is None:
+                    raise ValueError(f"{st.name}: count_edges needs edge_src/dst")
+                refs += [st.edge_src, st.edge_dst]
+            elif st.op == "count_window":
+                if st.operand is None or not isinstance(st.operand, Neigh):
+                    raise ValueError(f"{st.name}: count_window needs Neigh operand")
+                refs += [st.operand.node]
+            elif st.op == "product":
+                if st.factors is None:
+                    raise ValueError(f"{st.name}: product needs factors")
+                for f in st.factors:
+                    if f not in names:
+                        raise ValueError(f"{st.name}: factor {f!r} not defined yet")
+            else:
+                raise ValueError(f"{st.name}: unknown op {st.op!r}")
+            for r in refs + list(st.skip_eq):
+                if r.name not in bound:
+                    raise ValueError(
+                        f"{st.name}: reference to unbound node {r.name!r}"
+                    )
+            for b in (st.window.after, st.window.until, st.window2.after, st.window2.until):
+                if isinstance(b.anchor, StageT) and b.anchor.name not in bound | names:
+                    raise ValueError(
+                        f"{st.name}: time anchor on undefined stage {b.anchor.name!r}"
+                    )
+            emits += int(st.emit)
+        if emits != 1:
+            raise ValueError(f"pattern {self.name!r}: exactly one stage must emit")
+
+    @property
+    def emit_stage(self) -> Stage:
+        return next(s for s in self.stages if s.emit)

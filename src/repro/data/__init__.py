@@ -1,0 +1,17 @@
+from repro.data.synth_aml import (
+    AMLDataset,
+    DATASET_PRESETS,
+    generate_aml_dataset,
+    load_dataset,
+)
+from repro.data.trovares import generate_trovares_graph
+from repro.data.loader import temporal_split
+
+__all__ = [
+    "AMLDataset",
+    "DATASET_PRESETS",
+    "generate_aml_dataset",
+    "load_dataset",
+    "generate_trovares_graph",
+    "temporal_split",
+]

@@ -1,0 +1,17 @@
+from repro.distributed.sharding import (
+    param_sharding,
+    batch_sharding,
+    cache_sharding,
+    opt_sharding,
+)
+from repro.distributed.optimizer import adamw_init, adamw_update, AdamWConfig
+
+__all__ = [
+    "param_sharding",
+    "batch_sharding",
+    "cache_sharding",
+    "opt_sharding",
+    "adamw_init",
+    "adamw_update",
+    "AdamWConfig",
+]

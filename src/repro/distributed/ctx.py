@@ -1,0 +1,82 @@
+"""Sharding-hint context: layers can request activation constraints without
+knowing whether they run under a mesh (smoke tests run meshless).
+
+Launch code (train/serve/dryrun) calls ``set_axes(mesh, data, model)``;
+layer code calls ``hint(x, template)`` which becomes a no-op when no mesh
+is set.  Hints resolve to concrete ``NamedSharding``s (no ambient mesh
+context needed) and silently drop axes that do not divide the dim.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MESH = None
+_AXES: Optional[dict] = None  # {"data": ("pod","data")|("data",), "model": ("model",)}
+
+
+def set_axes(
+    mesh,
+    data_axes: Optional[Tuple[str, ...]],
+    model_axes: Optional[Tuple[str, ...]],
+):
+    global _MESH, _AXES
+    _MESH = mesh
+    _AXES = (
+        None
+        if mesh is None
+        else {"data": data_axes or (), "model": model_axes or ()}
+    )
+
+
+def clear():
+    set_axes(None, None, None)
+
+
+def _axis_size(axes) -> int:
+    s = 1
+    for a in axes:
+        s *= _MESH.shape[a]
+    return s
+
+
+def data_size() -> int:
+    """Size of the data-parallel axis group (1 when meshless)."""
+    if _MESH is None or _AXES is None:
+        return 1
+    return _axis_size(_AXES.get("data", ()))
+
+
+def model_size() -> int:
+    if _MESH is None or _AXES is None:
+        return 1
+    return _axis_size(_AXES.get("model", ()))
+
+
+def mesh_and_axes():
+    """(mesh, data_axes, model_axes) or (None, (), ())."""
+    if _MESH is None or _AXES is None:
+        return None, (), ()
+    return _MESH, _AXES.get("data", ()), _AXES.get("model", ())
+
+
+def hint(x, template: Tuple):
+    """template entries: None | "data" | "model", one per leading dim."""
+    if _MESH is None or _AXES is None:
+        return x
+    spec = []
+    for i, t in enumerate(template):
+        if t is None or i >= x.ndim:
+            spec.append(None)
+            continue
+        axes = _AXES.get(t, ())
+        size = _axis_size(axes)
+        if axes and size > 1 and x.shape[i] % size == 0:
+            spec.append(axes)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_MESH, P(*spec))
+    )

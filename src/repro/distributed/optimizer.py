@@ -1,0 +1,114 @@
+"""AdamW in pure JAX + optional int8 error-feedback gradient compression.
+
+The optimizer state is a pytree mirroring params (m, v) — sharded with
+ZeRO-1 rules (``repro.distributed.sharding.zero1_sharding``).  Gradient
+compression (Seide et al.-style error feedback with per-tensor int8
+quantization) is a distributed-optimization knob for bandwidth-bound
+meshes: quantize(g + residual) is what crosses the data axis; the
+quantization error stays local in the residual.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "compress_int8",
+    "decompress_int8",
+    "ef_compress_grads",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    compress: bool = False  # int8 error-feedback gradient compression
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def ef_init(params):
+    return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_int8(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_grads(grads, residual):
+    """Error-feedback: transmit quantize(g + r); keep the error locally."""
+
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, s = compress_int8(x)
+        deq = decompress_int8(q, s)
+        return deq, x - deq
+
+    flat = jax.tree_util.tree_map(one, grads, residual)
+    deq = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_r = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return deq, new_r
+
+
+def _global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def adamw_update(params, grads, opt_state, cfg: AdamWConfig):
+    step = opt_state["step"] + 1
+    gn = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        return (p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree_util.tree_map(upd, params, grads, opt_state["m"], opt_state["v"])
+    new_params = jax.tree_util.tree_map(
+        lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple)
+    )
+    new_m = jax.tree_util.tree_map(
+        lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple)
+    )
+    new_v = jax.tree_util.tree_map(
+        lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple)
+    )
+    return new_params, {"m": new_m, "v": new_v, "step": step}, gn

@@ -1,0 +1,217 @@
+"""Sharding rules: param/batch/cache/optimizer PartitionSpecs.
+
+Megatron-style TP over the ``model`` axis, DP over ``pod`` x ``data``,
+EP (expert parallelism) maps the expert dim onto ``model``, and ZeRO-1
+shards optimizer moments over ``data`` on top of the param sharding.
+
+Every rule is divisibility-checked against the actual shape: a dim that
+does not divide by its mesh-axis size falls back to replication for that
+dim (robust across the 10 heterogeneous architectures — e.g. 4-head
+xLSTM blocks on a 16-way model axis).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "param_sharding",
+    "batch_sharding",
+    "cache_sharding",
+    "opt_sharding",
+    "mesh_axes",
+]
+
+
+def mesh_axes(mesh: Mesh) -> Tuple[Tuple[str, ...], Tuple[str, ...]]:
+    """(data_axes, model_axes) for a production mesh."""
+    names = mesh.axis_names
+    data = tuple(n for n in names if n in ("pod", "data"))
+    model = tuple(n for n in names if n == "model")
+    return data, model
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    s = 1
+    for a in axes:
+        s *= mesh.shape[a]
+    return s
+
+
+def _fit(mesh: Mesh, shape, spec: P) -> P:
+    """Drop spec axes whose dim is not divisible by the axis size."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, ax in zip(shape, entries):
+        if ax is not None and dim % _axis_size(mesh, ax) == 0 and dim > 0:
+            out.append(ax)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# (path regex, spec template builder) — matched against 'a/b/c' paths
+def _param_rules(model: Tuple[str, ...]):
+    m = model
+    return [
+        (r"embed$", P(m, None)),            # vocab-sharded embedding
+        (r"lm_head$", P(None, m)),
+        (r"heads$", P(None, None, m)),      # musicgen codebook heads
+        (r"attn/wq$", P(None, m)),
+        (r"attn/wk$", P(None, m)),
+        (r"attn/wv$", P(None, m)),
+        (r"attn/wo$", P(m, None)),
+        (r"attn/b[qkv]$", P(m)),
+        (r"moe/router$", P(None, None)),
+        (r"moe/w[13]$", P(m, None, None)),  # EP: experts over model
+        (r"moe/w2$", P(m, None, None)),
+        (r"mlp/w[13]$", P(None, m)),
+        (r"mlp/w2$", P(m, None)),
+        (r"mixer/in_proj$", P(None, m)),
+        (r"mixer/out_proj$", P(m, None)),
+        (r"mixer/conv_w$", P(None, m)),
+        (r"mixer/w(q|k|v|gate|o_gate)$", P(None, m)),
+        (r"mixer/wout$", P(m, None)),
+        (r"mixer/wx$", P(None, m)),
+        (r"mixer/r$", P(m, None, None)),
+        (r"mixer/(A_log|D|dt_bias)$", P(m)),
+    ]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_sharding(mesh: Mesh, param_specs) -> "jax.tree_util.PyTreeDef":
+    """NamedSharding tree matching a param (spec) tree.
+
+    Stacked unit params get their leading (unit) dim skipped: the rule is
+    matched on the path suffix and the spec is shifted right by one for
+    leaves under 'units/'.
+    """
+    _, model = mesh_axes(mesh)
+    rules = _param_rules(model)
+
+    def assign(path, leaf):
+        ps = _path_str(path)
+        stacked = ps.startswith("units/")
+        spec = P()
+        for pat, template in rules:
+            if re.search(pat, ps):
+                spec = template
+                break
+        if stacked:
+            spec = P(None, *spec)
+        spec = _fit(mesh, leaf.shape, spec)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(assign, param_specs)
+
+
+def batch_sharding(mesh: Mesh, batch_specs) -> "jax.tree_util.PyTreeDef":
+    data, _ = mesh_axes(mesh)
+
+    def assign(path, leaf):
+        spec = _fit(mesh, leaf.shape, P(data))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(assign, batch_specs)
+
+
+def cache_sharding(mesh: Mesh, cache_specs_tree) -> "jax.tree_util.PyTreeDef":
+    """Decode caches: (units, batch, ...) leaves, shape-driven rule.
+
+    * batch (dim 1) shards over data when divisible;
+    * the LAST trailing dim divisible by the model size shards over model
+      (head_dim for KV caches — robust when n_kv_heads < model size);
+    * if batch could not shard (long-context batch=1), the first remaining
+      trailing dim divisible by data shards over data instead — for KV
+      caches that is the sequence dim: sequence-parallel "flash-decode"
+      (XLA inserts the LSE all-reduce over the sharded sequence).
+    """
+    data, model = mesh_axes(mesh)
+    data_size = 1
+    for a in data:
+        data_size *= mesh.shape[a]
+    model_size = 1
+    for a in model:
+        model_size *= mesh.shape[a]
+
+    from repro.distributed import opts
+
+    kv_seq_model = opts.enabled("kv_seq_model")
+
+    def assign(path, leaf):
+        ps = _path_str(path)
+        name = ps.rsplit("/", 1)[-1]
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        used_data = False
+        if len(shape) >= 2 and shape[1] % data_size == 0 and data_size > 1:
+            spec[1] = data
+            used_data = True
+        if model_size > 1:
+            if kv_seq_model and name in ("k", "v") and len(shape) == 5:
+                # flash-decode layout: sequence over the model axis
+                if shape[2] % model_size == 0:
+                    spec[2] = model
+            if model not in spec:
+                for i in range(len(shape) - 1, 1, -1):
+                    if spec[i] is None and shape[i] % model_size == 0:
+                        spec[i] = model
+                        break
+        if not used_data and data_size > 1:
+            for i in range(2, len(shape)):
+                if spec[i] is None and shape[i] % data_size == 0:
+                    spec[i] = data
+                    break
+        return NamedSharding(mesh, _fit(mesh, shape, P(*spec)))
+
+    return jax.tree_util.tree_map_with_path(assign, cache_specs_tree)
+
+
+def opt_sharding(mesh: Mesh, param_shardings) -> "jax.tree_util.PyTreeDef":
+    """ZeRO-1: moments take the param sharding plus a 'data' shard on the
+    first still-replicated divisible dim."""
+    data, _ = mesh_axes(mesh)
+    data_size = 1
+    for a in data:
+        data_size *= mesh.shape[a]
+
+    def assign(sh):
+        spec = list(sh.spec) if sh.spec else []
+        # leaf shapes unknown here; ZeRO refinement happens in _fit at use
+        return sh
+
+    return jax.tree_util.tree_map(assign, param_shardings)
+
+
+def zero1_sharding(mesh: Mesh, param_specs, param_shardings):
+    """Moment shardings: param sharding + shard dim0 over data if free."""
+    data, _ = mesh_axes(mesh)
+
+    def assign(leaf_spec, sh):
+        spec = list(sh.spec) + [None] * (len(leaf_spec.shape) - len(sh.spec))
+        if spec and spec[0] is None:
+            cand = P(data, *spec[1:])
+            cand = _fit(mesh, leaf_spec.shape, cand)
+            return NamedSharding(mesh, cand)
+        return NamedSharding(mesh, _fit(mesh, leaf_spec.shape, P(*spec)))
+
+    return jax.tree_util.tree_map(assign, param_specs, param_shardings)

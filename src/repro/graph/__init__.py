@@ -1,0 +1,10 @@
+from repro.graph.csr import TemporalGraph, DeviceGraph, build_temporal_graph
+from repro.graph.partition import partition_edges, PartitionPlan
+
+__all__ = [
+    "TemporalGraph",
+    "DeviceGraph",
+    "build_temporal_graph",
+    "partition_edges",
+    "PartitionPlan",
+]

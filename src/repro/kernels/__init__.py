@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for BlazingAML's compute hot-spots.
+
+Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+validated on CPU via ``interpret=True`` against pure-jnp oracles
+(``ref.py`` in each subpackage):
+
+* ``intersect_count`` — padded-tile weighted temporal intersection
+  (the paper's warp-cooperative sorted-set intersection, re-thought as a
+  branch-free VPU broadcast-compare over VMEM tiles).
+* ``window_degree``  — windowed degree counting over padded time tiles
+  (fan/degree features; "break on time overflow" as closed-form compare).
+* ``hist_update``    — GBDT gradient/hessian histogram build as a one-hot
+  MXU matmul (TPU-idiomatic scatter-add).
+"""
+from repro.kernels.intersect_count.ops import intersect_count
+from repro.kernels.window_degree.ops import window_degree
+from repro.kernels.hist_update.ops import hist_update
+
+__all__ = ["intersect_count", "window_degree", "hist_update"]

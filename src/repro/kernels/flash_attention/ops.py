@@ -1,0 +1,49 @@
+"""Jitted wrapper for the flash_attention Pallas kernel (GQA-aware)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+__all__ = ["flash_attention"]
+
+
+def flash_attention(
+    q, k, v, *, causal: bool = True, interpret: bool | None = None,
+    block_q: int = 128, block_k: int = 128,
+):
+    """q (B, T, H, hd); k/v (B, S, K, hd) with H % K == 0 (GQA).
+
+    Returns (B, T, H, hd).  K/V heads are repeated to H (the kernel sees
+    one (T, hd) problem per (batch, q-head)).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, t, h, hd = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, t, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    bq = min(block_q, t)
+    bk = min(block_k, s)
+    pad_t = (-t) % bq
+    if pad_t:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_t), (0, 0)))
+    pad_s = (-s) % bk
+    if pad_s:
+        # padded keys sit at positions >= s: causal masking hides them for
+        # t <= s; for non-causal pad with -inf-scoring zeros is unsafe, so
+        # require divisibility there
+        assert causal, "pad S to a block multiple for non-causal attention"
+        kf = jnp.pad(kf, ((0, 0), (0, pad_s), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_s), (0, 0)))
+    out = flash_attention_pallas(
+        qf, kf, vf, causal=causal, block_q=bq, block_k=bk, interpret=interpret
+    )
+    out = out[:, :t]
+    return out.reshape(b, h, t, hd).transpose(0, 2, 1, 3)

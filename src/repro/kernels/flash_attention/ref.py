@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the flash_attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref"]
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q (BH, T, hd), k/v (BH, S, hd) -> (BH, T, hd)."""
+    bh, t, hd = q.shape
+    s = k.shape[1]
+    scores = jnp.einsum("bth,bsh->bts", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores / math.sqrt(hd)
+    if causal:
+        mask = jnp.arange(s)[None, :] <= jnp.arange(t)[:, None]
+        scores = jnp.where(mask[None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bts,bsh->bth", w, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.hist_update.ops import hist_update
+
+__all__ = ["hist_update"]

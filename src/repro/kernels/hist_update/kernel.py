@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: GBDT gradient/hessian histogram build.
+
+Scatter-add is the canonical GPU histogram approach; the TPU-idiomatic
+rethink is a **one-hot matmul**: a (bn, S) one-hot of the fused
+(node, feature, bin) keys contracted against (bn, 2) grad/hess columns on
+the MXU gives the (S, 2) histogram.  The grid walks the sample axis; the
+output block maps every grid step to the same (S, 2) VMEM tile, which is
+zero-initialized on step 0 and accumulated in place — the standard Pallas
+reduction-over-grid pattern.
+
+Padding convention: out-of-range key (>= S) contributes nothing (its
+one-hot row is all zeros).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["hist_update_pallas"]
+
+
+def _kernel(keys_ref, gh_ref, out_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    keys = keys_ref[...]  # (bn,)
+    gh = gh_ref[...]  # (bn, 2)
+    s = out_ref.shape[0]
+    onehot = (keys[:, None] == jnp.arange(s, dtype=keys.dtype)[None, :]).astype(
+        gh.dtype
+    )  # (bn, S)
+    out_ref[...] += jnp.dot(
+        onehot.T, gh, preferred_element_type=out_ref.dtype
+    )  # (S, 2) on the MXU
+
+
+def hist_update_pallas(keys, gh, n_segments: int, *, block_n: int = 512, interpret=True):
+    n = keys.shape[0]
+    assert n % block_n == 0
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n, 2), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((n_segments, 2), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_segments, 2), jnp.float32),
+        interpret=interpret,
+    )(keys, gh)

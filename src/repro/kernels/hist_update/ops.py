@@ -1,0 +1,31 @@
+"""Jitted wrapper for the hist_update Pallas kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hist_update.kernel import hist_update_pallas
+
+__all__ = ["hist_update"]
+
+
+def hist_update(keys, gh, n_segments: int, *, interpret: bool | None = None):
+    """keys (N,) int32 in [0, n_segments) (others ignored), gh (N, 2) f32
+    -> (n_segments, 2) f32 histogram."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = keys.shape[0]
+    # block over samples; VMEM = bn * S one-hot, keep <= ~2^21 f32 lanes
+    bn = max(8, min(512, (1 << 21) // max(1, n_segments)))
+    bn = 1 << (bn.bit_length() - 1)
+    pad = (-n) % bn
+    if pad:
+        keys = jnp.concatenate(
+            [keys, jnp.full((pad,), n_segments, dtype=keys.dtype)]
+        )
+        gh = jnp.concatenate([gh, jnp.zeros((pad, 2), dtype=gh.dtype)], axis=0)
+    # out-of-range sentinel = n_segments: one-hot row all-zero inside kernel
+    keys = jnp.where((keys >= 0) & (keys < n_segments), keys, n_segments)
+    return hist_update_pallas(
+        keys, gh.astype(jnp.float32), n_segments, block_n=bn, interpret=interpret
+    )

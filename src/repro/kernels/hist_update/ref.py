@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the hist_update kernel (segment-sum histogram)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["hist_update_ref"]
+
+
+def hist_update_ref(keys, gh, n_segments: int):
+    safe = jnp.where((keys >= 0) & (keys < n_segments), keys, n_segments)
+    out = jax.ops.segment_sum(gh, safe, num_segments=n_segments + 1)
+    return out[:n_segments].astype(jnp.float32)

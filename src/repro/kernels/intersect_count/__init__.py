@@ -1,0 +1,3 @@
+from repro.kernels.intersect_count.ops import intersect_count
+
+__all__ = ["intersect_count"]

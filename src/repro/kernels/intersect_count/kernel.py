@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: padded-tile weighted temporal intersection count.
+
+TPU adaptation of BlazingAML's warp-cooperative sorted-set intersection:
+instead of per-lane binary search (GPU) we stage both padded neighbor
+tiles in VMEM and do a branch-free broadcast-compare over the (Da, Db)
+pair grid — pure VPU work on 8x128 vector registers, no gathers, no
+data-dependent control flow.  This mirrors the compiler's ``pw`` strategy
+(`repro.core.compiler`), which is what low-degree buckets (the bulk of a
+power-law transaction graph) lower to.
+
+Inputs (per row r of a batch B):
+  a_ids (B, Da) int32   frontier-side neighbor ids   (-1 = padding)
+  a_t   (B, Da) int32   frontier-side edge times
+  b_ids (B, Db) int32   fixed-side neighbor ids      (-1 = padding)
+  b_t   (B, Db) int32   fixed-side edge times
+  a_lo, a_hi (B,) int32 frontier-side window  (a_lo < t <= a_hi)
+  b_lo, b_hi (B,) int32 fixed-side window     (b_lo < t <= b_hi)
+Output:
+  counts (B,) int32 — # pairs (i, j): a_ids[r,i] == b_ids[r,j] >= 0,
+  both windows hold, and (if ordered) b_t[r,j] > a_t[r,i].
+
+Block tiling: grid over B; each step loads (bm, Da) + (bm, Db) tiles into
+VMEM and materializes a (bm, Da, Db) compare cube.  ``ops.py`` picks bm so
+the cube stays within the VMEM budget (bm * Da * Db <= ~2^21 int32 lanes ~= 8MB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["intersect_count_pallas"]
+
+
+def _kernel(ordered: bool, a_ids, a_t, b_ids, b_t, a_lo, a_hi, b_lo, b_hi, out):
+    ai = a_ids[...]  # (bm, Da)
+    at = a_t[...]
+    bi = b_ids[...]  # (bm, Db)
+    bt = b_t[...]
+    alo = a_lo[...][:, None]
+    ahi = a_hi[...][:, None]
+    blo = b_lo[...][:, None]
+    bhi = b_hi[...][:, None]
+
+    a_ok = (ai >= 0) & (at > alo) & (at <= ahi)  # (bm, Da)
+    b_ok = (bi >= 0) & (bt > blo) & (bt <= bhi)  # (bm, Db)
+    eq = ai[:, :, None] == bi[:, None, :]  # (bm, Da, Db)
+    pair = eq & a_ok[:, :, None] & b_ok[:, None, :]
+    if ordered:
+        pair = pair & (bt[:, None, :] > at[:, :, None])
+    out[...] = jnp.sum(pair.astype(jnp.int32), axis=(1, 2))
+
+
+def intersect_count_pallas(
+    a_ids,
+    a_t,
+    b_ids,
+    b_t,
+    a_lo,
+    a_hi,
+    b_lo,
+    b_hi,
+    *,
+    ordered: bool = False,
+    block_rows: int = 8,
+    interpret: bool = True,
+):
+    b, da = a_ids.shape
+    _, db = b_ids.shape
+    assert b % block_rows == 0, "pad batch to a multiple of block_rows"
+    grid = (b // block_rows,)
+    row_spec2 = lambda w: pl.BlockSpec((block_rows, w), lambda i: (i, 0))
+    row_spec1 = pl.BlockSpec((block_rows,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(_kernel, ordered),
+        grid=grid,
+        in_specs=[
+            row_spec2(da),
+            row_spec2(da),
+            row_spec2(db),
+            row_spec2(db),
+            row_spec1,
+            row_spec1,
+            row_spec1,
+            row_spec1,
+        ],
+        out_specs=row_spec1,
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=interpret,
+    )(a_ids, a_t, b_ids, b_t, a_lo, a_hi, b_lo, b_hi)

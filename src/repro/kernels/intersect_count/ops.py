@@ -1,0 +1,69 @@
+"""Jitted wrapper for the intersect_count Pallas kernel.
+
+Pads the batch to a block multiple and picks ``block_rows`` so the
+(bm, Da, Db) compare cube stays inside the VMEM budget.  On non-TPU
+backends the kernel runs in interpret mode (correctness path); on TPU it
+compiles to a Mosaic kernel.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.intersect_count.kernel import intersect_count_pallas
+
+__all__ = ["intersect_count"]
+
+_VMEM_INT32_BUDGET = 1 << 21  # ~8 MB of int32 lanes for the compare cube
+
+
+def _block_rows(da: int, db: int) -> int:
+    bm = max(1, _VMEM_INT32_BUDGET // max(1, da * db))
+    # power-of-two, capped at 256 rows
+    return 1 << min(8, max(0, int(bm).bit_length() - 1))
+
+
+def intersect_count(
+    a_ids,
+    a_t,
+    b_ids,
+    b_t,
+    a_lo,
+    a_hi,
+    b_lo,
+    b_hi,
+    *,
+    ordered: bool = False,
+    interpret: bool | None = None,
+):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, da = a_ids.shape
+    db = b_ids.shape[1]
+    bm = _block_rows(da, db)
+    pad = (-b) % bm
+    if pad:
+        z2 = lambda a, w: jnp.concatenate(
+            [a, jnp.full((pad, w), -1, dtype=a.dtype)], axis=0
+        )
+        z1 = lambda a: jnp.concatenate([a, jnp.zeros((pad,), dtype=a.dtype)])
+        a_ids, a_t = z2(a_ids, da), z2(a_t, da)
+        b_ids, b_t = z2(b_ids, db), z2(b_t, db)
+        a_lo, a_hi, b_lo, b_hi = map(z1, (a_lo, a_hi, b_lo, b_hi))
+    out = intersect_count_pallas(
+        a_ids,
+        a_t,
+        b_ids,
+        b_t,
+        a_lo,
+        a_hi,
+        b_lo,
+        b_hi,
+        ordered=ordered,
+        block_rows=bm,
+        interpret=interpret,
+    )
+    return out[:b]

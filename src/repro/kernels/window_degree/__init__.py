@@ -1,0 +1,3 @@
+from repro.kernels.window_degree.ops import window_degree
+
+__all__ = ["window_degree"]

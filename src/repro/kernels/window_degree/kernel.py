@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: windowed degree counting over padded time tiles.
+
+Fan/degree features (paper Fig. 2): given each row's padded, time-sorted
+edge-time tile, count entries inside a per-row half-open window
+``(lo, hi]``.  The paper's "break on time-window overflow" early exit
+becomes a closed-form branch-free compare+sum over a VMEM tile — there is
+no sequential scan to break out of.
+
+Padding convention: invalid slots hold ``t = PAD_T`` (INT32_MIN), which
+fails ``t > lo`` for every representable window.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["window_degree_pallas", "PAD_T"]
+
+PAD_T = -(2**31)
+
+
+def _kernel(t_ref, lo_ref, hi_ref, out_ref):
+    t = t_ref[...]  # (bm, D)
+    lo = lo_ref[...][:, None]
+    hi = hi_ref[...][:, None]
+    ok = (t > lo) & (t <= hi)
+    out_ref[...] = jnp.sum(ok.astype(jnp.int32), axis=1)
+
+
+def window_degree_pallas(t, lo, hi, *, block_rows: int = 64, interpret: bool = True):
+    b, d = t.shape
+    assert b % block_rows == 0
+    return pl.pallas_call(
+        _kernel,
+        grid=(b // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=interpret,
+    )(t, lo, hi)

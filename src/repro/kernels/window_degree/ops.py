@@ -1,0 +1,26 @@
+"""Jitted wrapper for the window_degree Pallas kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.window_degree.kernel import PAD_T, window_degree_pallas
+
+__all__ = ["window_degree", "PAD_T"]
+
+_VMEM_INT32_BUDGET = 1 << 21
+
+
+def window_degree(t, lo, hi, *, interpret: bool | None = None):
+    """t (B, D) int32 padded with PAD_T; lo/hi (B,) -> counts (B,) int32."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, d = t.shape
+    bm = 1 << min(8, max(0, int(_VMEM_INT32_BUDGET // max(1, d)).bit_length() - 1))
+    pad = (-b) % bm
+    if pad:
+        t = jnp.concatenate([t, jnp.full((pad, d), PAD_T, dtype=t.dtype)], axis=0)
+        lo = jnp.concatenate([lo, jnp.zeros((pad,), dtype=lo.dtype)])
+        hi = jnp.concatenate([hi, jnp.zeros((pad,), dtype=hi.dtype)])
+    out = window_degree_pallas(t, lo, hi, block_rows=bm, interpret=interpret)
+    return out[:b]

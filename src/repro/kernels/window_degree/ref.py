@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the window_degree kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["window_degree_ref"]
+
+
+def window_degree_ref(t, lo, hi):
+    ok = (t > lo[:, None]) & (t <= hi[:, None])
+    return jnp.sum(ok.astype(jnp.int32), axis=1)

@@ -1,0 +1,13 @@
+from repro.ml.gbdt import GBDTClassifier, GBDTParams
+from repro.ml.metrics import confusion, f1_score, precision_recall_f1
+from repro.ml.pipeline import run_aml_pipeline, PipelineResult
+
+__all__ = [
+    "GBDTClassifier",
+    "GBDTParams",
+    "confusion",
+    "f1_score",
+    "precision_recall_f1",
+    "run_aml_pipeline",
+    "PipelineResult",
+]

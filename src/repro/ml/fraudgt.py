@@ -1,0 +1,204 @@
+"""FraudGT-style graph-transformer baseline (paper §8.5, Table 4/Fig 12).
+
+Faithful-in-spirit, CPU-scale: each transaction edge is classified by a
+small transformer over its *local temporal context* — the edge itself plus
+the nearest-in-time transactions of its endpoints, embedded by bucketized
+(amount, Δt, role) features.  This is the graph-transformer attention
+pattern FraudGT uses (edge-centric message attention), expressed over the
+same backbone layers as the model zoo (configs/registry: fraudgt-small).
+
+The benchmark compares its F1 and edges/second against the BlazingAML
+mine+GBDT pipeline, reproducing the paper's throughput argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config
+from repro.distributed.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.graph.csr import TemporalGraph
+from repro.models import layers as L
+
+__all__ = ["FraudGT", "FraudGTParams"]
+
+N_AMOUNT = 16
+N_DT = 16
+N_ROLE = 5  # self, src-out, src-in, dst-out, dst-in
+
+
+@dataclasses.dataclass(frozen=True)
+class FraudGTParams:
+    d_model: int = 128
+    n_layers: int = 3
+    n_heads: int = 8
+    ctx: int = 17  # 1 self + 8 src-context + 8 dst-context
+    lr: float = 3e-4
+    batch: int = 256
+    epochs: int = 3
+    pos_weight: Optional[float] = None
+
+
+class FraudGT:
+    def __init__(self, p: FraudGTParams = FraudGTParams(), seed: int = 0):
+        self.p = p
+        cfg = get_config("fraudgt-small")
+        self.cfg = dataclasses.replace(
+            cfg,
+            d_model=p.d_model,
+            n_layers=p.n_layers,
+            n_heads=p.n_heads,
+            n_kv_heads=p.n_heads,
+            d_ff=4 * p.d_model,
+            dtype="float32",
+        )
+        self.key = jax.random.key(seed)
+        self.params = None
+        self.amount_edges: Optional[np.ndarray] = None
+
+    # ------------------------------------------------------------------
+    def _init(self):
+        d = self.p.d_model
+        ks = jax.random.split(self.key, 8)
+        blocks = []
+        for i in range(self.p.n_layers):
+            blocks.append(
+                {
+                    "norm1": L.rms_norm_init(d),
+                    "attn": L.attn_init(ks[i % 8], self.cfg),
+                    "norm2": L.rms_norm_init(d),
+                    "mlp": L.mlp_init(jax.random.fold_in(ks[0], i), d, self.cfg.d_ff),
+                }
+            )
+        self.params = {
+            "emb_amount": jax.random.normal(ks[4], (N_AMOUNT, d)) * 0.02,
+            "emb_dt": jax.random.normal(ks[5], (N_DT, d)) * 0.02,
+            "emb_role": jax.random.normal(ks[6], (N_ROLE, d)) * 0.02,
+            "blocks": blocks,
+            "head": jax.random.normal(ks[7], (d,)) / math.sqrt(d),
+            "bias": jnp.zeros(()),
+        }
+
+    # ------------------------------------------------------------------
+    def tokenize(self, g: TemporalGraph, eids: np.ndarray) -> Tuple[np.ndarray, ...]:
+        """(B, ctx) int feature ids: amount-bucket, Δt-bucket, role."""
+        if self.amount_edges is None:
+            qs = np.quantile(g.amount, np.linspace(0, 1, N_AMOUNT + 1)[1:-1])
+            self.amount_edges = qs
+        k_side = (self.p.ctx - 1) // 2
+        b = len(eids)
+        am = np.zeros((b, self.p.ctx), dtype=np.int32)
+        dt = np.zeros((b, self.p.ctx), dtype=np.int32)
+        ro = np.zeros((b, self.p.ctx), dtype=np.int32)
+
+        def bucket_amount(a):
+            return np.searchsorted(self.amount_edges, a).astype(np.int32)
+
+        def bucket_dt(d):
+            d = np.abs(d).astype(np.float64)
+            return np.clip(np.log2(d + 1.0), 0, N_DT - 1).astype(np.int32)
+
+        for i, eid in enumerate(eids):
+            u, v, t = int(g.src[eid]), int(g.dst[eid]), int(g.t[eid])
+            am[i, 0] = bucket_amount(g.amount[eid])
+            ro[i, 0] = 0
+            col = 1
+            for node, roles in ((u, (1, 2)), (v, (3, 4))):
+                ents = []
+                s, e = g.out_indptr[node], g.out_indptr[node + 1]
+                for j in range(s, e):
+                    ents.append((abs(int(g.out_t[j]) - t), g.out_eid[j], roles[0]))
+                s, e = g.in_indptr[node], g.in_indptr[node + 1]
+                for j in range(s, e):
+                    ents.append((abs(int(g.in_t[j]) - t), g.in_eid[j], roles[1]))
+                ents.sort(key=lambda x: x[0])
+                for ddt, eid2, role in ents[:k_side]:
+                    am[i, col] = bucket_amount(g.amount[eid2])
+                    dt[i, col] = bucket_dt(ddt)
+                    ro[i, col] = role
+                    col += 1
+                col = 1 + k_side if roles[0] == 1 else col
+        return am, dt, ro
+
+    # ------------------------------------------------------------------
+    def _logits(self, params, am, dt, ro):
+        x = (
+            params["emb_amount"][am]
+            + params["emb_dt"][dt]
+            + params["emb_role"][ro]
+        )  # (B, T, d)
+        for blk in params["blocks"]:
+            h = L.rms_norm(blk["norm1"], x)
+            x = x + L.attn_apply(blk["attn"], h, self.cfg)
+            h = L.rms_norm(blk["norm2"], x)
+            x = x + L.mlp_apply(blk["mlp"], h)
+        pooled = x.mean(axis=1)
+        return pooled @ params["head"] + params["bias"]
+
+    def fit(self, g: TemporalGraph, labels: np.ndarray, train_ids: np.ndarray):
+        if self.params is None:
+            self._init()
+        p = self.p
+        pos = float(labels[train_ids].sum())
+        pw = p.pos_weight or (len(train_ids) - pos) / max(pos, 1.0)
+        am, dt, ro = self.tokenize(g, train_ids)
+        y = labels[train_ids].astype(np.float32)
+        opt = adamw_init(self.params)
+        ocfg = AdamWConfig(lr=p.lr, weight_decay=0.01)
+
+        @jax.jit
+        def step(params, opt, am, dt, ro, y):
+            def loss_fn(params):
+                logit = self._logits(params, am, dt, ro)
+                w = jnp.where(y > 0.5, pw, 1.0)
+                l = jnp.mean(
+                    w
+                    * (
+                        jax.nn.softplus(logit) - y * logit
+                    )  # BCE with logits
+                )
+                return l
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt, _ = adamw_update(params, grads, opt, ocfg)
+            return params, opt, loss
+
+        rng = np.random.default_rng(0)
+        n = len(train_ids)
+        for ep in range(p.epochs):
+            order = rng.permutation(n)
+            for s in range(0, n - p.batch + 1, p.batch):
+                idx = order[s : s + p.batch]
+                self.params, opt, loss = step(
+                    self.params,
+                    opt,
+                    jnp.asarray(am[idx]),
+                    jnp.asarray(dt[idx]),
+                    jnp.asarray(ro[idx]),
+                    jnp.asarray(y[idx]),
+                )
+        return self
+
+    def predict_proba(self, g: TemporalGraph, eids: np.ndarray) -> np.ndarray:
+        am, dt, ro = self.tokenize(g, eids)
+        logits_fn = jax.jit(self._logits)
+        out = []
+        for s in range(0, len(eids), 1024):
+            out.append(
+                np.asarray(
+                    jax.nn.sigmoid(
+                        logits_fn(
+                            self.params,
+                            jnp.asarray(am[s : s + 1024]),
+                            jnp.asarray(dt[s : s + 1024]),
+                            jnp.asarray(ro[s : s + 1024]),
+                        )
+                    )
+                )
+            )
+        return np.concatenate(out)

@@ -1,0 +1,203 @@
+"""Histogram gradient-boosted trees in pure JAX (the paper's XGBoost stage).
+
+Same second-order objective as XGBoost [Chen & Guestrin 2016]: binary
+logistic loss, per-leaf weight ``-G/(H+lambda)``, split gain
+``1/2 [GL^2/(HL+l) + GR^2/(HR+l) - G^2/(H+l)] - gamma``, quantile-sketch
+binning (256 bins, uint8 storage), level-wise growth, class imbalance via
+``scale_pos_weight`` — the AML datasets are ~99.9% negative (paper Table 3).
+
+Everything after binning is jit-compiled: histogram build is a
+segment-sum over fused (node, feature, bin) keys; on TPU the same
+histogram lowers to the one-hot-matmul Pallas kernel in
+``repro.kernels.hist_update`` (MXU-friendly scatter-add); the jnp path and
+the kernel are interchangeable and tested against each other.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+__all__ = ["GBDTParams", "GBDTClassifier"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GBDTParams:
+    n_trees: int = 60
+    max_depth: int = 6
+    learning_rate: float = 0.2
+    reg_lambda: float = 1.0
+    gamma: float = 0.0
+    min_child_weight: float = 1e-3
+    n_bins: int = 256
+    scale_pos_weight: Optional[float] = None  # None -> auto (neg/pos)
+    base_score: float = 0.5
+
+
+def _quantile_bins(x: np.ndarray, n_bins: int) -> np.ndarray:
+    """Per-feature quantile sketch -> bin edges (n_features, n_bins-1)."""
+    qs = np.linspace(0, 1, n_bins + 1)[1:-1]
+    return np.quantile(x, qs, axis=0).T.astype(np.float32)  # (F, B-1)
+
+
+def _apply_bins(x: np.ndarray, edges: np.ndarray) -> np.ndarray:
+    out = np.empty(x.shape, dtype=np.uint8)
+    for f in range(x.shape[1]):
+        out[:, f] = np.searchsorted(edges[f], x[:, f], side="left")
+    return out
+
+
+@partial(jax.jit, static_argnames=("n_nodes", "n_bins"))
+def _histograms(xb, gh, node, n_nodes: int, n_bins: int):
+    """(N,F) uint8 bins, (N,2) grad/hess, (N,) node -> (nodes,F,bins,2)."""
+    n, f = xb.shape
+    keys = (
+        node[:, None].astype(jnp.int32) * (f * n_bins)
+        + jnp.arange(f, dtype=jnp.int32)[None, :] * n_bins
+        + xb.astype(jnp.int32)
+    )  # (N, F)
+    flat = jax.ops.segment_sum(
+        jnp.repeat(gh[:, None, :], f, axis=1).reshape(-1, 2),
+        keys.reshape(-1),
+        num_segments=n_nodes * f * n_bins,
+    )
+    return flat.reshape(n_nodes, f, n_bins, 2)
+
+
+@partial(jax.jit, static_argnames=("n_bins",))
+def _best_splits(hist, reg_lambda, gamma, min_child_weight, n_bins: int):
+    """hist (nodes,F,B,2) -> (feature, bin, gain, left G/H, right G/H)."""
+    g = hist[..., 0]
+    h = hist[..., 1]
+    gl = jnp.cumsum(g, axis=-1)
+    hl = jnp.cumsum(h, axis=-1)
+    gt = gl[..., -1:]
+    ht = hl[..., -1:]
+    gr = gt - gl
+    hr = ht - hl
+    score = lambda G, H: G * G / (H + reg_lambda)
+    gain = 0.5 * (score(gl, hl) + score(gr, hr) - score(gt, ht)) - gamma
+    valid = (hl >= min_child_weight) & (hr >= min_child_weight)
+    # splitting at the last bin sends everything left: forbid
+    valid = valid & (jnp.arange(n_bins) < n_bins - 1)[None, None, :]
+    gain = jnp.where(valid, gain, -jnp.inf)
+    flat = gain.reshape(gain.shape[0], -1)
+    best = jnp.argmax(flat, axis=1)
+    best_gain = jnp.take_along_axis(flat, best[:, None], axis=1)[:, 0]
+    feat = (best // n_bins).astype(jnp.int32)
+    binn = (best % n_bins).astype(jnp.int32)
+    return feat, binn, best_gain
+
+
+class GBDTClassifier:
+    """Level-wise histogram GBDT; API mirrors the XGB usage in the paper."""
+
+    def __init__(self, params: GBDTParams = GBDTParams()):
+        self.p = params
+        self.edges: Optional[np.ndarray] = None
+        # per tree: (feat (T,), bin (T,), leaf (T,)) over 2^(d+1)-1 slots
+        self.trees: list = []
+        self.base_margin: float = 0.0
+
+    # ------------------------------------------------------------------
+    def _build_tree(self, xb, grad, hess):
+        p = self.p
+        n = xb.shape[0]
+        depth = p.max_depth
+        node = jnp.zeros(n, dtype=jnp.int32)  # node index within level
+        tree_feat = []
+        tree_bin = []
+        gh = jnp.stack([grad, hess], axis=1)
+        for level in range(depth):
+            n_nodes = 1 << level
+            hist = _histograms(xb, gh, node, n_nodes, p.n_bins)
+            feat, binn, gain = _best_splits(
+                hist,
+                jnp.float32(p.reg_lambda),
+                jnp.float32(p.gamma),
+                jnp.float32(p.min_child_weight),
+                p.n_bins,
+            )
+            # nodes with no positive gain become pass-through (split at
+            # bin = n_bins-1 keeps all samples on the left child)
+            dead = gain <= 0.0
+            feat = jnp.where(dead, 0, feat)
+            binn = jnp.where(dead, p.n_bins - 1, binn)
+            tree_feat.append(feat)
+            tree_bin.append(binn)
+            fx = jnp.take_along_axis(
+                xb, feat[node][:, None].astype(jnp.int32), axis=1
+            )[:, 0]
+            go_right = fx > binn[node]
+            node = node * 2 + go_right.astype(jnp.int32)
+        # leaves
+        n_leaves = 1 << depth
+        lg = jax.ops.segment_sum(grad, node, num_segments=n_leaves)
+        lh = jax.ops.segment_sum(hess, node, num_segments=n_leaves)
+        leaf = -lg / (lh + p.reg_lambda) * p.learning_rate
+        return (
+            [np.asarray(f) for f in tree_feat],
+            [np.asarray(b) for b in tree_bin],
+            np.asarray(leaf),
+        )
+
+    def _tree_margin(self, xb, tree) -> jnp.ndarray:
+        feats, bins, leaf = tree
+        node = jnp.zeros(xb.shape[0], dtype=jnp.int32)
+        for level in range(self.p.max_depth):
+            f = jnp.asarray(feats[level])[node]
+            b = jnp.asarray(bins[level])[node]
+            fx = jnp.take_along_axis(xb, f[:, None].astype(jnp.int32), axis=1)[:, 0]
+            node = node * 2 + (fx > b).astype(jnp.int32)
+        return jnp.asarray(leaf)[node]
+
+    # ------------------------------------------------------------------
+    def fit(self, x: np.ndarray, y: np.ndarray, verbose: bool = False):
+        p = self.p
+        x = np.asarray(x, dtype=np.float32)
+        y = np.asarray(y, dtype=np.float32)
+        self.edges = _quantile_bins(x, p.n_bins)
+        xb = jnp.asarray(_apply_bins(x, self.edges))
+        yj = jnp.asarray(y)
+        spw = p.scale_pos_weight
+        if spw is None:
+            pos = float(y.sum())
+            spw = (len(y) - pos) / max(pos, 1.0)
+        w = jnp.where(yj > 0.5, jnp.float32(spw), jnp.float32(1.0))
+        margin = jnp.full(x.shape[0], jnp.float32(_logit(p.base_score)))
+        self.base_margin = _logit(p.base_score)
+        self.trees = []
+        for it in range(p.n_trees):
+            prob = jax.nn.sigmoid(margin)
+            grad = w * (prob - yj)
+            hess = w * prob * (1.0 - prob)
+            tree = self._build_tree(xb, grad, hess)
+            self.trees.append(tree)
+            margin = margin + self._tree_margin(xb, tree)
+            if verbose and (it % 10 == 0 or it == p.n_trees - 1):
+                loss = -jnp.mean(
+                    w * (yj * jnp.log(prob + 1e-9) + (1 - yj) * jnp.log(1 - prob + 1e-9))
+                )
+                print(f"  [gbdt] iter {it:3d} loss {float(loss):.5f}")
+        return self
+
+    def predict_margin(self, x: np.ndarray) -> np.ndarray:
+        xb = jnp.asarray(_apply_bins(np.asarray(x, np.float32), self.edges))
+        margin = jnp.full(x.shape[0], jnp.float32(self.base_margin))
+        for tree in self.trees:
+            margin = margin + self._tree_margin(xb, tree)
+        return np.asarray(margin)
+
+    def predict_proba(self, x: np.ndarray) -> np.ndarray:
+        return np.asarray(jax.nn.sigmoid(jnp.asarray(self.predict_margin(x))))
+
+    def predict(self, x: np.ndarray, threshold: float = 0.5) -> np.ndarray:
+        return (self.predict_proba(x) >= threshold).astype(np.int8)
+
+
+def _logit(p: float) -> float:
+    return float(np.log(p / (1 - p)))

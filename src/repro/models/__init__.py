@@ -1,0 +1,9 @@
+from repro.models.model import (
+    LM,
+    build_model,
+    init_params,
+    param_specs,
+    cache_specs,
+)
+
+__all__ = ["LM", "build_model", "init_params", "param_specs", "cache_specs"]

@@ -1,0 +1,121 @@
+"""Residual block wrappers per block type + cache plumbing.
+
+Block types (cfg.unit entries):
+  attn         pre-norm GQA attention + SwiGLU MLP (d_ff > 0)
+  moe_attn     pre-norm GQA attention + top-k MoE FFN
+  shared_attn  same as attn but parameters are SHARED across all units
+               (Zamba2's shared block) — params live outside the scan
+  mamba2       pre-norm Mamba2 (SSD) mixer, no FFN
+  mlstm        pre-norm mLSTM mixer, no FFN
+  slstm        pre-norm sLSTM mixer, no FFN
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import opts
+from repro.models import layers as L
+from repro.models import ssm as S
+
+__all__ = ["block_init", "block_apply", "block_decode", "block_cache_init"]
+
+ATTN_TYPES = ("attn", "moe_attn", "shared_attn")
+
+
+def block_init(key, btype: str, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p = {"norm1": L.rms_norm_init(d)}
+    if btype in ATTN_TYPES:
+        p["attn"] = L.attn_init(ks[0], cfg)
+        if btype == "moe_attn":
+            p["norm2"] = L.rms_norm_init(d)
+            p["moe"] = L.moe_init(ks[1], cfg)
+        elif cfg.d_ff > 0:
+            p["norm2"] = L.rms_norm_init(d)
+            p["mlp"] = L.mlp_init(ks[1], d, cfg.d_ff)
+    elif btype == "mamba2":
+        p["mixer"] = S.mamba2_init(ks[0], cfg)
+    elif btype == "mlstm":
+        p["mixer"] = S.mlstm_init(ks[0], cfg)
+    elif btype == "slstm":
+        p["mixer"] = S.slstm_init(ks[0], cfg)
+    else:
+        raise ValueError(f"unknown block type {btype!r}")
+    return p
+
+
+def block_apply(p, btype: str, x, cfg: ModelConfig):
+    """Full-sequence (train/prefill). Returns (x, aux_loss)."""
+    aux = jnp.float32(0.0)
+    h = L.rms_norm(p["norm1"], x, cfg.norm_eps)
+    if btype in ATTN_TYPES:
+        x = x + L.attn_apply(p["attn"], h, cfg)
+        if btype == "moe_attn":
+            h2 = L.rms_norm(p["norm2"], x, cfg.norm_eps)
+            b, t, d = h2.shape
+            # moe_apply_shard_map falls back to plain dispatch when meshless
+            moe_fn = (
+                L.moe_apply_shard_map
+                if opts.enabled("moe_shard_map")
+                else L.moe_apply
+            )
+            y, aux = moe_fn(p["moe"], h2.reshape(b * t, d), cfg)
+            x = x + y.reshape(b, t, d)
+        elif cfg.d_ff > 0:
+            h2 = L.rms_norm(p["norm2"], x, cfg.norm_eps)
+            x = x + L.mlp_apply(p["mlp"], h2)
+    elif btype == "mamba2":
+        x = x + S.mamba2_apply(p["mixer"], h, cfg)
+    elif btype == "mlstm":
+        x = x + S.mlstm_apply(p["mixer"], h, cfg)
+    elif btype == "slstm":
+        x = x + S.slstm_apply(p["mixer"], h, cfg)
+    return x, aux
+
+
+def block_cache_init(btype: str, cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    if btype in ATTN_TYPES:
+        kv, hd = cfg.n_kv_heads, cfg.head_dim
+        s = cache_len if cfg.attn_window is None else min(cache_len, cfg.attn_window)
+        return {
+            "k": jnp.zeros((batch, s, kv, hd), dtype),
+            "v": jnp.zeros((batch, s, kv, hd), dtype),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+    if btype == "mamba2":
+        return S.mamba2_cache_init(cfg, batch, dtype)
+    if btype == "mlstm":
+        return S.mlstm_cache_init(cfg, batch, dtype)
+    if btype == "slstm":
+        return S.slstm_cache_init(cfg, batch, dtype)
+    raise ValueError(btype)
+
+
+def block_decode(p, btype: str, x, cfg: ModelConfig, cache):
+    h = L.rms_norm(p["norm1"], x, cfg.norm_eps)
+    if btype in ATTN_TYPES:
+        y, cache = L.attn_decode(p["attn"], h, cfg, cache)
+        x = x + y
+        if btype == "moe_attn":
+            h2 = L.rms_norm(p["norm2"], x, cfg.norm_eps)
+            b, t, d = h2.shape
+            y2, _ = L.moe_apply(p["moe"], h2.reshape(b * t, d), cfg)
+            x = x + y2.reshape(b, t, d)
+        elif cfg.d_ff > 0:
+            h2 = L.rms_norm(p["norm2"], x, cfg.norm_eps)
+            x = x + L.mlp_apply(p["mlp"], h2)
+    elif btype == "mamba2":
+        y, cache = S.mamba2_decode(p["mixer"], h, cfg, cache)
+        x = x + y
+    elif btype == "mlstm":
+        y, cache = S.mlstm_decode(p["mixer"], h, cfg, cache)
+        x = x + y
+    elif btype == "slstm":
+        y, cache = S.slstm_decode(p["mixer"], h, cfg, cache)
+        x = x + y
+    return x, cache

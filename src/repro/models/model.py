@@ -1,0 +1,301 @@
+"""Composable decoder-only LM over the block zoo.
+
+The layer stack is a ``lax.scan`` over repeating *units* (cfg.unit) with
+stacked per-unit parameters — HLO stays unit-sized regardless of depth,
+which keeps the 80-cell dry-run compile tractable and is the remat
+boundary for training.  Zamba2's shared block lives OUTSIDE the scanned
+pytree and is closed over (true parameter sharing).
+
+Heads:
+* token LMs: tied or untied (V, d) embed + (d, V) head,
+* musicgen: the EnCodec frontend is a STUB — inputs are precomputed frame
+  embeddings (B, T, d); output heads are per-codebook (K, d, V),
+* chameleon: early fusion means VQ image tokens are ordinary vocab ids —
+  the VQ tokenizer is the stub frontend.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks as B
+
+__all__ = [
+    "LM",
+    "build_model",
+    "init_params",
+    "param_specs",
+    "cache_specs",
+    "batch_specs",
+]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    d, v = cfg.d_model, cfg.vocab
+    params: Dict[str, Any] = {}
+    if not cfg.precomputed_embeddings:
+        params["embed"] = jax.random.normal(ks[0], (v, d), jnp.float32) * 0.02
+
+    def unit_init(k):
+        kk = jax.random.split(k, len(cfg.unit))
+        return {
+            f"b{j}": B.block_init(kk[j], bt, cfg)
+            for j, bt in enumerate(cfg.unit)
+            if bt != "shared_attn"
+        }
+
+    unit_keys = jax.random.split(ks[1], cfg.n_units)
+    params["units"] = jax.vmap(unit_init)(unit_keys)
+    if "shared_attn" in cfg.unit:
+        params["shared"] = B.block_init(ks[2], "shared_attn", cfg)
+    params["final_norm"] = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.n_codebooks > 0:
+        params["heads"] = (
+            jax.random.normal(ks[3], (cfg.n_codebooks, d, v), jnp.float32)
+            / math.sqrt(d)
+        )
+    elif not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(ks[4], (d, v), jnp.float32) / math.sqrt(d)
+    return params
+
+
+def param_specs(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.key(0))
+
+
+def n_params(cfg: ModelConfig) -> int:
+    specs = param_specs(cfg)
+    return sum(
+        int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(specs)
+    )
+
+
+import numpy as np  # noqa: E402  (used by n_params)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def _stack_apply(params, x, cfg: ModelConfig, remat: bool = False):
+    shared = params.get("shared")
+
+    def unit_fn(carry, unit_p):
+        h, aux = carry
+        for j, bt in enumerate(cfg.unit):
+            p = shared if bt == "shared_attn" else unit_p[f"b{j}"]
+            h, a = B.block_apply(p, bt, h, cfg)
+            aux = aux + a
+        return (h, aux), None
+
+    fn = jax.checkpoint(unit_fn) if remat else unit_fn
+    if cfg.unroll_stack:
+        carry = (x, jnp.float32(0.0))
+        for i in range(cfg.n_units):
+            unit_p = jax.tree_util.tree_map(lambda a: a[i], params["units"])
+            carry, _ = fn(carry, unit_p)
+        x, aux = carry
+        return x, aux
+    (x, aux), _ = jax.lax.scan(fn, (x, jnp.float32(0.0)), params["units"])
+    return x, aux
+
+
+def _head(params, x, cfg: ModelConfig):
+    h = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    h = h * jax.lax.rsqrt(var + cfg.norm_eps) * params["final_norm"]["scale"]
+    h = h.astype(x.dtype)
+    if cfg.n_codebooks > 0:
+        return jnp.einsum("btd,kdv->btkv", h, params["heads"].astype(x.dtype))
+    w = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    ).astype(x.dtype)
+    return h @ w
+
+
+def forward(params, batch, cfg: ModelConfig, remat: bool = False):
+    """batch: {"tokens": (B,T) int32} or {"embeds": (B,T,d)} (audio stub)."""
+    dt = _dtype(cfg)
+    if cfg.precomputed_embeddings:
+        x = batch["embeds"].astype(dt)
+    else:
+        x = params["embed"].astype(dt)[batch["tokens"]]
+    x, aux = _stack_apply(params, x, cfg, remat=remat)
+    return _head(params, x, cfg), aux
+
+
+def _ce(logits, labels):
+    """One-hot-reduce CE: keeps the vocab axis sharded end-to-end (a
+    take_along_axis gather over a model-sharded vocab would all-gather
+    the full logits tensor — catastrophic at 150k vocab)."""
+    v = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    logz = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    onehot = labels[..., None] == jnp.arange(v, dtype=labels.dtype)
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    return jnp.sum(logz - gold)
+
+
+CE_CHUNK = 512
+
+
+def loss_fn(params, batch, cfg: ModelConfig, remat: bool = True):
+    from repro.distributed import opts
+
+    labels = batch["labels"]
+    if opts.enabled("chunked_ce") and labels.ndim == 2:
+        # never materialize the full (B,T,V) logits: scan time chunks,
+        # remat the chunk body so backward recomputes each chunk's logits
+        dt = _dtype(cfg)
+        x = (
+            batch["embeds"].astype(dt)
+            if cfg.precomputed_embeddings
+            else params["embed"].astype(dt)[batch["tokens"]]
+        )
+        h, aux = _stack_apply(params, x, cfg, remat=remat)
+        b, t, d = h.shape
+        tc = min(CE_CHUNK, t)
+        nt = t // tc
+        hc = h.reshape(b, nt, tc, d).swapaxes(0, 1)
+        lc = labels.reshape(b, nt, tc).swapaxes(0, 1)
+
+        @jax.checkpoint
+        def chunk(tot, inp):
+            h_c, l_c = inp
+            return tot + _ce(_head(params, h_c, cfg), l_c), None
+
+        tot, _ = jax.lax.scan(
+            chunk,
+            jnp.float32(0.0),
+            (hc, lc),
+            unroll=True if cfg.unroll_stack else 1,
+        )
+        return tot / (b * t) + aux
+
+    logits, aux = forward(params, batch, cfg, remat=remat)
+    return _ce(logits, labels) / labels.size + aux
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def cache_init(cfg: ModelConfig, batch: int, cache_len: int):
+    dt = _dtype(cfg)
+
+    def one_unit(_):
+        return {
+            f"b{j}": B.block_cache_init(bt, cfg, batch, cache_len, dt)
+            for j, bt in enumerate(cfg.unit)
+        }
+
+    return jax.vmap(one_unit)(jnp.arange(cfg.n_units))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int):
+    return jax.eval_shape(lambda: cache_init(cfg, batch, cache_len))
+
+
+def decode_step(params, cache, batch, cfg: ModelConfig):
+    """One token for every sequence. batch: {"tokens": (B,1)} or
+    {"embeds": (B,1,d)}.  Returns (logits, new_cache)."""
+    dt = _dtype(cfg)
+    if cfg.precomputed_embeddings:
+        x = batch["embeds"].astype(dt)
+    else:
+        x = params["embed"].astype(dt)[batch["tokens"]]
+    shared = params.get("shared")
+
+    def unit_fn(h, scanned):
+        unit_p, unit_c = scanned
+        new_c = {}
+        for j, bt in enumerate(cfg.unit):
+            p = shared if bt == "shared_attn" else unit_p[f"b{j}"]
+            h, new_c[f"b{j}"] = B.block_decode(p, bt, h, cfg, unit_c[f"b{j}"])
+        return h, new_c
+
+    if cfg.unroll_stack:
+        caches = []
+        for i in range(cfg.n_units):
+            unit_p = jax.tree_util.tree_map(lambda a: a[i], params["units"])
+            unit_c = jax.tree_util.tree_map(lambda a: a[i], cache)
+            x, nc = unit_fn(x, (unit_p, unit_c))
+            caches.append(nc)
+        new_cache = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs, axis=0), *caches
+        )
+        return _head(params, x, cfg), new_cache
+    x, new_cache = jax.lax.scan(unit_fn, x, (params["units"], cache))
+    return _head(params, x, cfg), new_cache
+
+
+# ---------------------------------------------------------------------------
+# batch specs (dry-run inputs; the modality frontend stubs live here)
+# ---------------------------------------------------------------------------
+def batch_specs(cfg: ModelConfig, seq_len: int, global_batch: int, kind: str):
+    i32 = jnp.int32
+    dt = _dtype(cfg)
+    if kind in ("train", "prefill"):
+        if cfg.precomputed_embeddings:  # musicgen: EnCodec frame stub
+            spec = {
+                "embeds": jax.ShapeDtypeStruct(
+                    (global_batch, seq_len, cfg.d_model), dt
+                ),
+                "labels": jax.ShapeDtypeStruct(
+                    (global_batch, seq_len, cfg.n_codebooks), i32
+                ),
+            }
+        else:
+            spec = {
+                "tokens": jax.ShapeDtypeStruct((global_batch, seq_len), i32),
+                "labels": jax.ShapeDtypeStruct((global_batch, seq_len), i32),
+            }
+        return spec
+    # decode: one new token against a cache of length seq_len
+    if cfg.precomputed_embeddings:
+        return {
+            "embeds": jax.ShapeDtypeStruct((global_batch, 1, cfg.d_model), dt)
+        }
+    return {"tokens": jax.ShapeDtypeStruct((global_batch, 1), i32)}
+
+
+# ---------------------------------------------------------------------------
+# convenience wrapper
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class LM:
+    cfg: ModelConfig
+
+    def init(self, key):
+        return init_params(self.cfg, key)
+
+    def forward(self, params, batch, remat: bool = False):
+        return forward(params, batch, self.cfg, remat=remat)
+
+    def loss(self, params, batch):
+        return loss_fn(params, batch, self.cfg)
+
+    def decode(self, params, cache, batch):
+        return decode_step(params, cache, batch, self.cfg)
+
+    def cache(self, batch: int, cache_len: int):
+        return cache_init(self.cfg, batch, cache_len)
+
+
+def build_model(cfg: ModelConfig) -> LM:
+    return LM(cfg)

@@ -1,0 +1,366 @@
+"""Recurrent mixers: Mamba2 (SSD), mLSTM and sLSTM (xLSTM).
+
+Train paths use the chunked-parallel formulation (intra-chunk matmuls +
+inter-chunk carry scan) so the MXU does the heavy lifting; decode paths
+are O(1)-state single-step recurrences — which is what makes the
+``long_500k`` shape feasible for the hybrid/ssm architectures.
+
+Simplifications recorded in DESIGN.md: mLSTM uses sigmoid-bounded gates
+(matrix memory + normalizer structure preserved; the exp-gate max-
+stabilizer is folded away), and Mamba2 uses a single B/C group (G=1).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+__all__ = [
+    "mamba2_init",
+    "mamba2_apply",
+    "mamba2_decode",
+    "mamba2_cache_init",
+    "mlstm_init",
+    "mlstm_apply",
+    "mlstm_decode",
+    "mlstm_cache_init",
+    "slstm_init",
+    "slstm_apply",
+    "slstm_decode",
+    "slstm_cache_init",
+]
+
+MAMBA_HEAD_DIM = 64
+SSD_CHUNK = 256
+
+
+def _dense(key, shape, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def _mamba_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    hd = min(MAMBA_HEAD_DIM, d_in)
+    h = d_in // hd
+    n = cfg.ssm_state
+    return d_in, h, hd, n
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 / SSD
+# ---------------------------------------------------------------------------
+def mamba2_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_in, h, hd, n = _mamba_dims(cfg)
+    ks = jax.random.split(key, 4)
+    d_proj = 2 * d_in + 2 * n + h  # z, x, B, C, dt
+    return {
+        "in_proj": _dense(ks[0], (d, d_proj)),
+        "conv_w": _dense(ks[1], (cfg.conv_width, d_in + 2 * n), scale=0.5),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "out_proj": _dense(ks[2], (d_in, d)),
+        "norm": {"scale": jnp.ones((d_in,), jnp.float32)},
+    }
+
+
+def _split_proj(proj, cfg):
+    d_in, h, hd, n = _mamba_dims(cfg)
+    z, xbc, dt = jnp.split(proj, [d_in, 2 * d_in + 2 * n], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, state=None):
+    """xbc (B,T,C); w (W,C) depthwise causal conv.  state (B,W-1,C)."""
+    wlen = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(xbc.shape[:1] + (wlen - 1,) + xbc.shape[2:], xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)  # (B, T+W-1, C)
+    out = sum(
+        full[:, i : i + xbc.shape[1], :] * w[i][None, None, :].astype(xbc.dtype)
+        for i in range(wlen)
+    )
+    new_state = full[:, -(wlen - 1) :, :] if wlen > 1 else pad
+    return jax.nn.silu(out), new_state
+
+
+def _ssd_scan(x, b, c, dt, a_neg, chunk=SSD_CHUNK, unroll=False):
+    """Chunked SSD.  x (B,T,H,hd), b/c (B,T,N), dt (B,T,H), a_neg (H,)<0.
+    Returns y (B,T,H,hd).  A lax.scan walks the chunks (carry = SSM state)
+    so temporaries stay (B,L,L,H) per chunk, never (B,T/L,L,L,H)."""
+    bsz, t, h, hd = x.shape
+    n = b.shape[-1]
+    l = min(chunk, t)
+    nc = t // l
+    assert t % l == 0, "pad sequence to the SSD chunk size"
+    xr = x.reshape(bsz, nc, l, h, hd).swapaxes(0, 1)  # (nc,B,L,H,hd)
+    br = b.reshape(bsz, nc, l, n).swapaxes(0, 1)
+    cr = c.reshape(bsz, nc, l, n).swapaxes(0, 1)
+    dtr = dt.reshape(bsz, nc, l, h).swapaxes(0, 1)
+    causal = jnp.tril(jnp.ones((l, l), bool))
+
+    def step(hprev, inp):
+        xc, bc, cc, dtc = inp  # (B,L,...)
+        loga = dtc * a_neg[None, None, :]  # (B,L,H)
+        cum = jnp.cumsum(loga, axis=1)
+        # intra: scores[t,s] = (c_t.b_s) exp(cum_t - cum_s) dt_s, s<=t
+        qk = jnp.einsum("bln,bmn->blm", cc, bc)
+        dec = jnp.exp(jnp.clip(cum[:, :, None, :] - cum[:, None, :, :], -60.0, 0.0))
+        w = qk[..., None] * dec * dtc[:, None, :, :]
+        w = jnp.where(causal[None, :, :, None], w, 0.0)
+        y = jnp.einsum("blmh,bmhd->blhd", w, xc)
+        # inter from carried state
+        y = y + jnp.einsum(
+            "bln,blh,bhnd->blhd", cc, jnp.exp(jnp.clip(cum, -60.0, 0.0)), hprev
+        )
+        # update state
+        dec_end = jnp.exp(jnp.clip(cum[:, -1:, :] - cum, -60.0, 0.0))
+        s_c = jnp.einsum("bln,blh,blhd->bhnd", bc, dec_end * dtc, xc)
+        total = jnp.exp(jnp.clip(cum[:, -1, :], -60.0, 0.0))
+        hnew = hprev * total[..., None, None] + s_c
+        return hnew, y
+
+    h0 = jnp.zeros((bsz, h, n, hd), x.dtype)
+    # remat the chunk body: without it the scan stores every chunk's
+    # (B,L,L,H) score tensor for backward — 2.5x HBM blowup at 54 layers
+    _, ys = jax.lax.scan(
+        jax.checkpoint(step), h0, (xr, br, cr, dtr), unroll=True if unroll else 1
+    )  # (nc,B,L,H,hd)
+    return ys.swapaxes(0, 1).reshape(bsz, t, h, hd)
+
+
+def mamba2_apply(p, x, cfg: ModelConfig):
+    bsz, t, d = x.shape
+    d_in, h, hd, n = _mamba_dims(cfg)
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt_pre = _split_proj(proj, cfg)
+    xbc, _ = _causal_conv(xbc, p["conv_w"])
+    xs, b, c = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + p["dt_bias"])
+    a_neg = -jnp.exp(p["A_log"])
+    xh = xs.reshape(bsz, t, h, hd)
+    y = _ssd_scan(
+        xh.astype(jnp.float32),
+        b.astype(jnp.float32),
+        c.astype(jnp.float32),
+        dt,
+        a_neg,
+        unroll=cfg.unroll_stack,
+    )
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, t, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)) * p["norm"]["scale"]
+    return y.astype(x.dtype) @ p["out_proj"].astype(x.dtype)
+
+
+def mamba2_cache_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d_in, h, hd, n = _mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, d_in + 2 * n), dtype),
+        "h": jnp.zeros((batch, h, n, hd), jnp.float32),
+    }
+
+
+def mamba2_decode(p, x, cfg: ModelConfig, cache):
+    bsz, t, d = x.shape
+    assert t == 1
+    d_in, h, hd, n = _mamba_dims(cfg)
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt_pre = _split_proj(proj, cfg)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], state=cache["conv"])
+    xs, b, c = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    a = jnp.exp(dt * -jnp.exp(p["A_log"]))  # (B,H)
+    xh = xs.reshape(bsz, h, hd).astype(jnp.float32)
+    bv = b[:, 0].astype(jnp.float32)  # (B,N)
+    cv = c[:, 0].astype(jnp.float32)
+    hnew = cache["h"] * a[..., None, None] + jnp.einsum(
+        "bn,bh,bhd->bhnd", bv, dt, xh
+    )
+    y = jnp.einsum("bn,bhnd->bhd", cv, hnew) + p["D"][None, :, None] * xh
+    y = y.reshape(bsz, 1, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)) * p["norm"]["scale"]
+    out = y.astype(x.dtype) @ p["out_proj"].astype(x.dtype)
+    return out, {"conv": conv_state, "h": hnew}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM: matrix memory C (hd x hd+1 with fused normalizer column)
+# ---------------------------------------------------------------------------
+def mlstm_init(key, cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": _dense(ks[0], (d, d)),
+        "wk": _dense(ks[1], (d, d)),
+        "wv": _dense(ks[2], (d, d)),
+        "wgate": _dense(ks[3], (d, 2 * h)),  # i, f pre-activations
+        "wo_gate": _dense(ks[4], (d, d)),
+        "wout": _dense(ks[5], (d, d)),
+        "norm": {"scale": jnp.ones((d,), jnp.float32)},
+    }
+
+
+def _mlstm_chunk(q, k, v1, logf, logi, chunk=SSD_CHUNK, unroll=False):
+    """q/k (B,T,H,hd), v1 (B,T,H,hdv) [v with ones column], gates (B,T,H).
+    Same chunk-scan structure as _ssd_scan (carry = matrix memory C)."""
+    bsz, t, h, hd = q.shape
+    hdv = v1.shape[-1]
+    l = min(chunk, t)
+    nc = t // l
+    qr = q.reshape(bsz, nc, l, h, hd).swapaxes(0, 1)
+    kr = k.reshape(bsz, nc, l, h, hd).swapaxes(0, 1)
+    vr = v1.reshape(bsz, nc, l, h, hdv).swapaxes(0, 1)
+    lfr = logf.reshape(bsz, nc, l, h).swapaxes(0, 1)
+    lir = logi.reshape(bsz, nc, l, h).swapaxes(0, 1)
+    causal = jnp.tril(jnp.ones((l, l), bool))
+
+    def step(cprev, inp):
+        qc, kc, vc, lf, li = inp
+        cum = jnp.cumsum(lf, axis=1)  # (B,L,H)
+        qk = jnp.einsum("blhd,bmhd->blmh", qc, kc)
+        dec = jnp.exp(jnp.clip(cum[:, :, None, :] - cum[:, None, :, :], -60.0, 0.0))
+        gi = jnp.exp(jnp.clip(li, -60.0, 0.0))
+        w = qk * dec * gi[:, None, :, :]
+        w = jnp.where(causal[None, :, :, None], w, 0.0)
+        y = jnp.einsum("blmh,bmhe->blhe", w, vc)
+        y = y + jnp.einsum(
+            "blhd,blh,bhde->blhe", qc, jnp.exp(jnp.clip(cum, -60.0, 0.0)), cprev
+        )
+        dec_end = jnp.exp(jnp.clip(cum[:, -1:, :] - cum, -60.0, 0.0))
+        s_c = jnp.einsum("blhd,blh,blhe->bhde", kc, dec_end * gi, vc)
+        total = jnp.exp(jnp.clip(cum[:, -1, :], -60.0, 0.0))
+        cnew = cprev * total[..., None, None] + s_c
+        return cnew, y
+
+    c0 = jnp.zeros((bsz, h, hd, hdv), q.dtype)
+    _, ys = jax.lax.scan(
+        jax.checkpoint(step), c0, (qr, kr, vr, lfr, lir), unroll=True if unroll else 1
+    )
+    return ys.swapaxes(0, 1).reshape(bsz, t, h, hdv)
+
+
+def _mlstm_core(p, x, cfg, chunk=True, cache=None):
+    bsz, t, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    q = (x @ p["wq"].astype(x.dtype)).reshape(bsz, t, h, hd) / math.sqrt(hd)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(bsz, t, h, hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(bsz, t, h, hd)
+    gates = (x @ p["wgate"].astype(x.dtype)).astype(jnp.float32)
+    ipre, fpre = jnp.split(gates, 2, axis=-1)  # (B,T,h)
+    logf = -jax.nn.softplus(-fpre)  # log sigmoid
+    logi = -jax.nn.softplus(-ipre)
+    ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+    v1 = jnp.concatenate([v, ones], axis=-1)
+    if cache is None:
+        y = _mlstm_chunk(
+            q.astype(jnp.float32), k.astype(jnp.float32), v1.astype(jnp.float32),
+            logf, logi, unroll=cfg.unroll_stack,
+        )
+    else:
+        f = jnp.exp(logf[:, 0])  # (B,h)
+        i = jnp.exp(logi[:, 0])
+        cnew = cache["C"] * f[..., None, None] + jnp.einsum(
+            "bhd,bh,bhe->bhde", k[:, 0].astype(jnp.float32), i, v1[:, 0].astype(jnp.float32)
+        )
+        y = jnp.einsum("bhd,bhde->bhe", q[:, 0].astype(jnp.float32), cnew)[:, None]
+        cache = {"C": cnew}
+    num, den = y[..., :hd], y[..., hd]
+    out = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    out = out.reshape(bsz, t, d).astype(x.dtype)
+    out = out * jax.nn.sigmoid(x @ p["wo_gate"].astype(x.dtype))
+    return out @ p["wout"].astype(x.dtype), cache
+
+
+def mlstm_apply(p, x, cfg: ModelConfig):
+    return _mlstm_core(p, x, cfg)[0]
+
+
+def mlstm_cache_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    h = cfg.n_heads
+    hd = cfg.d_model // h
+    return {"C": jnp.zeros((batch, h, hd, hd + 1), jnp.float32)}
+
+
+def mlstm_decode(p, x, cfg: ModelConfig, cache):
+    return _mlstm_core(p, x, cfg, cache=cache)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM: sequential scalar memory with exp gating + stabilizer
+# ---------------------------------------------------------------------------
+def slstm_init(key, cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    ks = jax.random.split(key, 3)
+    return {
+        "wx": _dense(ks[0], (d, 4 * d)),  # i, f, z, o pre-activations
+        "r": _dense(ks[1], (h, hd, 4 * hd), scale=1.0 / math.sqrt(hd)),
+        "wout": _dense(ks[2], (d, d)),
+        "norm": {"scale": jnp.ones((d,), jnp.float32)},
+    }
+
+
+def _slstm_step(p, cfg, state, xt):
+    """state: (h, c, n, m) each (B,H,hd); xt (B, 4d) preactivations."""
+    hprev, cprev, nprev, mprev = state
+    bsz = xt.shape[0]
+    hh, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    rec = jnp.einsum("bhd,hde->bhe", hprev, p["r"])  # (B,H,4hd)
+    raw = xt.reshape(bsz, hh, 4 * hd) + rec
+    ipre, fpre, zpre, opre = jnp.split(raw, 4, axis=-1)
+    mnew = jnp.maximum(fpre + mprev, ipre)
+    i = jnp.exp(ipre - mnew)
+    f = jnp.exp(fpre + mprev - mnew)
+    z = jnp.tanh(zpre)
+    o = jax.nn.sigmoid(opre)
+    cnew = f * cprev + i * z
+    nnew = f * nprev + i
+    hnew = o * cnew / jnp.maximum(nnew, 1.0)
+    return (hnew, cnew, nnew, mnew)
+
+
+def slstm_apply(p, x, cfg: ModelConfig):
+    bsz, t, d = x.shape
+    hh, hd = cfg.n_heads, d // cfg.n_heads
+    xp = (x @ p["wx"].astype(x.dtype)).astype(jnp.float32)  # (B,T,4d)
+    zeros = jnp.zeros((bsz, hh, hd), jnp.float32)
+    init = (zeros, zeros, zeros, jnp.full((bsz, hh, hd), -1e30, jnp.float32))
+
+    def step(state, xt):
+        new = _slstm_step(p, cfg, state, xt)
+        return new, new[0]
+
+    _, hs = jax.lax.scan(step, init, xp.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).reshape(bsz, t, d).astype(x.dtype)
+    return y @ p["wout"].astype(x.dtype)
+
+
+def slstm_cache_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    hh, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    z = jnp.zeros((batch, hh, hd), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((batch, hh, hd), -1e30, jnp.float32)}
+
+
+def slstm_decode(p, x, cfg: ModelConfig, cache):
+    bsz = x.shape[0]
+    xp = (x[:, 0] @ p["wx"].astype(x.dtype)).astype(jnp.float32)
+    state = (cache["h"], cache["c"], cache["n"], cache["m"])
+    hnew, cnew, nnew, mnew = _slstm_step(p, cfg, state, xp)
+    y = hnew.reshape(bsz, 1, cfg.d_model).astype(x.dtype)
+    out = y @ p["wout"].astype(x.dtype)
+    return out, {"h": hnew, "c": cnew, "n": nnew, "m": mnew}

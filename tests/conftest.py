@@ -1,0 +1,28 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the
+real (single) device; multi-device tests spawn subprocesses that set
+--xla_force_host_platform_device_count themselves."""
+import numpy as np
+import pytest
+
+from repro.data.synth_aml import generate_aml_dataset
+
+
+@pytest.fixture(scope="session")
+def small_ds():
+    return generate_aml_dataset("HI-Small", seed=7, scale=0.25)
+
+
+@pytest.fixture(scope="session")
+def small_graph(small_ds):
+    return small_ds.graph
+
+
+def random_temporal_graph(rng, n_nodes=24, n_edges=160, t_max=512):
+    from repro.graph.csr import build_temporal_graph
+
+    src = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    dst = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    fix = src == dst
+    dst[fix] = (dst[fix] + 1) % n_nodes
+    t = rng.integers(0, t_max, n_edges).astype(np.int64)
+    return build_temporal_graph(src, dst, t, n_nodes=n_nodes)

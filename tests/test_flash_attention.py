@@ -1,0 +1,65 @@
+"""flash_attention Pallas kernel vs pure-jnp oracle (interpret mode):
+shape/dtype sweep + GQA + block-size sweep + hypothesis randomization."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _case(b, t, h, kvh, hd, causal, dtype, bq=64, bk=64, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, t, h, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, t, kvh, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, t, kvh, hd)), dtype)
+    got = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    g = h // kvh
+    kk = jnp.repeat(k, g, axis=2) if g > 1 else k
+    vv = jnp.repeat(v, g, axis=2) if g > 1 else v
+    ref = flash_attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(b * h, t, hd),
+        kk.transpose(0, 2, 1, 3).reshape(b * h, t, hd),
+        vv.transpose(0, 2, 1, 3).reshape(b * h, t, hd),
+        causal=causal,
+    ).reshape(b, h, t, hd).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize("t", [64, 128, 256])
+@pytest.mark.parametrize("causal", [True, False])
+def test_shapes(t, causal):
+    _case(2, t, 4, 4, 32, causal, jnp.float32)
+
+
+def test_gqa_heads():
+    _case(1, 128, 8, 2, 64, True, jnp.float32)
+
+
+def test_bf16():
+    _case(1, 128, 4, 4, 64, True, jnp.bfloat16)
+
+
+def test_unaligned_t_padding():
+    _case(1, 96, 2, 2, 32, True, jnp.float32, bq=64, bk=32)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_hypothesis_random(seed):
+    rng = np.random.default_rng(seed)
+    t = int(rng.choice([64, 128, 192]))
+    h = int(rng.choice([1, 2, 4]))
+    hd = int(rng.choice([16, 32, 64]))
+    _case(1, t, h, h, hd, bool(rng.integers(0, 2)), jnp.float32, seed=seed)
+
+
+def test_fully_masked_blocks_safe():
+    """First query tile sees only masked future blocks beyond the diagonal
+    — online softmax must not poison the accumulator."""
+    _case(1, 256, 1, 1, 32, True, jnp.float32, bq=32, bk=128)

@@ -1,0 +1,79 @@
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.ml.gbdt import GBDTClassifier, GBDTParams, _histograms
+from repro.ml.metrics import (
+    best_f1_threshold,
+    confusion,
+    f1_score,
+    precision_recall_f1,
+)
+from repro.kernels import hist_update
+
+
+def _toy(n=2000, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, 6)).astype(np.float32)
+    # nonlinear decision: XOR of two features + threshold on a third
+    y = ((x[:, 0] * x[:, 1] > 0) & (x[:, 2] > -0.3)).astype(np.float32)
+    return x, y
+
+
+def test_gbdt_learns_nonlinear():
+    x, y = _toy()
+    clf = GBDTClassifier(GBDTParams(n_trees=30, max_depth=4, learning_rate=0.3))
+    clf.fit(x[:1600], y[:1600])
+    acc = float(np.mean(clf.predict(x[1600:]) == y[1600:]))
+    assert acc > 0.9, acc
+
+
+def test_gbdt_deterministic():
+    x, y = _toy(800, 1)
+    p1 = GBDTClassifier(GBDTParams(n_trees=8)).fit(x, y).predict_proba(x)
+    p2 = GBDTClassifier(GBDTParams(n_trees=8)).fit(x, y).predict_proba(x)
+    np.testing.assert_array_equal(p1, p2)
+
+
+def test_gbdt_imbalanced_scale_pos_weight():
+    rng = np.random.default_rng(2)
+    n = 4000
+    x = rng.normal(size=(n, 4)).astype(np.float32)
+    y = np.zeros(n, dtype=np.float32)
+    pos = rng.choice(n, size=60, replace=False)
+    y[pos] = 1.0
+    x[pos.astype(int), 0] += 2.5  # separable-ish signal
+    clf = GBDTClassifier(GBDTParams(n_trees=25, max_depth=3))
+    clf.fit(x, y)
+    proba = clf.predict_proba(x)
+    thr = best_f1_threshold(y, proba)
+    f1 = f1_score(y, proba >= thr)
+    assert f1 > 0.5, f1
+
+
+def test_histogram_matches_pallas_kernel():
+    """The jnp segment-sum histogram and the one-hot-matmul Pallas kernel
+    are interchangeable backends."""
+    rng = np.random.default_rng(3)
+    n, f, n_bins, n_nodes = 512, 3, 16, 4
+    xb = rng.integers(0, n_bins, (n, f)).astype(np.uint8)
+    gh = rng.normal(size=(n, 2)).astype(np.float32)
+    node = rng.integers(0, n_nodes, n).astype(np.int32)
+    hist = np.asarray(
+        _histograms(jnp.asarray(xb), jnp.asarray(gh), jnp.asarray(node), n_nodes, n_bins)
+    )
+    for feat in range(f):
+        keys = node * n_bins + xb[:, feat].astype(np.int32)
+        hk = np.asarray(
+            hist_update(jnp.asarray(keys), jnp.asarray(gh), n_nodes * n_bins)
+        ).reshape(n_nodes, n_bins, 2)
+        np.testing.assert_allclose(hist[:, feat], hk, rtol=1e-4, atol=1e-4)
+
+
+def test_metrics_confusion():
+    y = np.array([1, 1, 0, 0, 1])
+    p = np.array([1, 0, 1, 0, 1])
+    c = confusion(y, p)
+    assert (c["tp"], c["fp"], c["fn"], c["tn"]) == (2, 1, 1, 1)
+    prec, rec, f1 = precision_recall_f1(y, p)
+    assert abs(prec - 2 / 3) < 1e-9 and abs(rec - 2 / 3) < 1e-9

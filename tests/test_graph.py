@@ -1,0 +1,64 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph.csr import build_temporal_graph
+from repro.graph.partition import partition_edges
+from tests.conftest import random_temporal_graph
+
+
+def test_csr_roundtrip_edges(small_graph):
+    g = small_graph
+    # every edge appears exactly once in out-CSR and in-CSC
+    recon = set()
+    for u in range(g.n_nodes):
+        s, e = g.out_indptr[u], g.out_indptr[u + 1]
+        for v, t, eid in zip(g.out_nbr[s:e], g.out_t[s:e], g.out_eid[s:e]):
+            recon.add((u, int(v), int(t)))
+            assert g.src[eid] == u and g.dst[eid] == v and g.t[eid] == t
+    orig = set(zip(g.src.tolist(), g.dst.tolist(), g.t.tolist()))
+    assert recon == orig
+
+
+def test_rows_sorted(small_graph):
+    g = small_graph
+    for u in range(g.n_nodes):
+        s, e = g.out_indptr[u], g.out_indptr[u + 1]
+        row = list(zip(g.out_nbr[s:e].tolist(), g.out_t[s:e].tolist()))
+        assert row == sorted(row)
+        ts = g.out_t_sorted[s:e]
+        assert np.all(np.diff(ts) >= 0)
+        s, e = g.in_indptr[u], g.in_indptr[u + 1]
+        row = list(zip(g.in_nbr[s:e].tolist(), g.in_t[s:e].tolist()))
+        assert row == sorted(row)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_csr_degree_sum(seed):
+    rng = np.random.default_rng(seed)
+    g = random_temporal_graph(rng)
+    assert g.out_deg.sum() == g.n_edges
+    assert g.in_deg.sum() == g.n_edges
+    assert np.array_equal(np.sort(g.out_eid), np.arange(g.n_edges))
+
+
+def test_negative_time_rejected():
+    with pytest.raises(ValueError):
+        build_temporal_graph(
+            np.array([0]), np.array([1]), np.array([-5]), n_nodes=2
+        )
+
+
+def test_partition_balance(small_graph):
+    plan = partition_edges(small_graph, 8)
+    # greedy LPT keeps expected-cost skew tight (straggler mitigation)
+    assert plan.skew < 1.25
+    ids = plan.edge_ids[plan.valid]
+    assert np.array_equal(np.sort(ids), np.arange(small_graph.n_edges))
+
+
+def test_partition_hash_strategy(small_graph):
+    plan = partition_edges(small_graph, 4, strategy="hash")
+    ids = plan.edge_ids[plan.valid]
+    assert np.array_equal(np.sort(ids), np.arange(small_graph.n_edges))

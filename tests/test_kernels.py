@@ -1,0 +1,80 @@
+"""Pallas kernel validation: interpret-mode vs pure-jnp oracle, with
+shape/dtype sweeps and hypothesis randomization."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import hist_update, intersect_count, window_degree
+from repro.kernels.hist_update.ref import hist_update_ref
+from repro.kernels.intersect_count.ref import intersect_count_ref
+from repro.kernels.window_degree.kernel import PAD_T
+from repro.kernels.window_degree.ref import window_degree_ref
+
+
+def _intersect_case(b, da, db, ordered):
+    rng = np.random.default_rng(b * 100 + da + db)
+    a_ids = rng.integers(-1, 8, (b, da)).astype(np.int32)
+    b_ids = rng.integers(-1, 8, (b, db)).astype(np.int32)
+    a_t = rng.integers(0, 64, (b, da)).astype(np.int32)
+    b_t = rng.integers(0, 64, (b, db)).astype(np.int32)
+    a_lo = rng.integers(-4, 32, b).astype(np.int32)
+    a_hi = a_lo + rng.integers(0, 64, b).astype(np.int32)
+    b_lo = rng.integers(-4, 32, b).astype(np.int32)
+    b_hi = b_lo + rng.integers(0, 64, b).astype(np.int32)
+    args = tuple(map(jnp.asarray, (a_ids, a_t, b_ids, b_t, a_lo, a_hi, b_lo, b_hi)))
+    got = intersect_count(*args, ordered=ordered)
+    ref = intersect_count_ref(*args, ordered=ordered)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("b,da,db", [(1, 1, 1), (5, 8, 3), (16, 32, 32), (33, 7, 65)])
+@pytest.mark.parametrize("ordered", [False, True])
+def test_intersect_count_shapes(b, da, db, ordered):
+    _intersect_case(b, da, db, ordered)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_intersect_count_hypothesis(seed):
+    rng = np.random.default_rng(seed)
+    _intersect_case(
+        int(rng.integers(1, 20)),
+        int(rng.integers(1, 40)),
+        int(rng.integers(1, 40)),
+        bool(rng.integers(0, 2)),
+    )
+
+
+@pytest.mark.parametrize("b,d", [(1, 1), (7, 16), (64, 128), (100, 33)])
+def test_window_degree_shapes(b, d):
+    rng = np.random.default_rng(b + d)
+    t = rng.integers(0, 128, (b, d)).astype(np.int32)
+    t[rng.random((b, d)) < 0.25] = PAD_T
+    lo = rng.integers(0, 64, b).astype(np.int32)
+    hi = lo + rng.integers(0, 64, b).astype(np.int32)
+    got = window_degree(jnp.asarray(t), jnp.asarray(lo), jnp.asarray(hi))
+    ref = window_degree_ref(jnp.asarray(t), jnp.asarray(lo), jnp.asarray(hi))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("n,s", [(16, 8), (1000, 97), (4096, 512), (513, 2048)])
+def test_hist_update_shapes(n, s):
+    rng = np.random.default_rng(n + s)
+    keys = rng.integers(-2, s + 2, n).astype(np.int32)
+    gh = rng.normal(size=(n, 2)).astype(np.float32)
+    got = hist_update(jnp.asarray(keys), jnp.asarray(gh), s)
+    ref = hist_update_ref(jnp.asarray(keys), jnp.asarray(gh), s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_hist_update_f32_accumulation():
+    # many duplicate keys: accumulation order differs (matmul), tolerance
+    rng = np.random.default_rng(0)
+    keys = np.zeros(2048, dtype=np.int32)
+    gh = rng.normal(size=(2048, 2)).astype(np.float32)
+    got = hist_update(jnp.asarray(keys), jnp.asarray(gh), 4)
+    np.testing.assert_allclose(
+        np.asarray(got)[0], gh.sum(axis=0), rtol=1e-4, atol=1e-4
+    )
+    assert np.all(np.asarray(got)[1:] == 0)

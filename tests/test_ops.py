@@ -1,0 +1,83 @@
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ops
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    data=st.data(),
+    n=st.integers(1, 60),
+)
+def test_lower_bound_matches_searchsorted(data, n):
+    vals = sorted(data.draw(st.lists(st.integers(0, 100), min_size=n, max_size=n)))
+    flat = jnp.asarray(np.array(vals, dtype=np.int32))
+    lo = data.draw(st.integers(0, n - 1))
+    hi = data.draw(st.integers(lo, n))
+    qs = np.array(
+        data.draw(st.lists(st.integers(-5, 105), min_size=5, max_size=5)),
+        dtype=np.int32,
+    )
+    got = ops.lower_bound(
+        flat, jnp.int32(lo), jnp.int32(hi), jnp.asarray(qs), ops.n_iters_for(n)
+    )
+    want = lo + np.searchsorted(np.asarray(vals)[lo:hi], qs, side="left")
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_count_id_in_window_brute():
+    rng = np.random.default_rng(0)
+    n_rows, max_len = 8, 20
+    rows = []
+    for _ in range(n_rows):
+        k = rng.integers(0, max_len)
+        ids = np.sort(rng.integers(0, 6, k))
+        ts = np.zeros(k, dtype=np.int64)
+        # times sorted within each id run
+        for v in np.unique(ids):
+            m = ids == v
+            ts[m] = np.sort(rng.integers(0, 50, m.sum()))
+        rows.append((ids.astype(np.int32), ts.astype(np.int32)))
+    indptr = np.zeros(n_rows + 1, dtype=np.int32)
+    for i, (ids, _) in enumerate(rows):
+        indptr[i + 1] = indptr[i] + len(ids)
+    nbr = np.concatenate([r[0] for r in rows]) if rows else np.zeros(0, np.int32)
+    tt = np.concatenate([r[1] for r in rows])
+
+    node = rng.integers(0, n_rows, 30).astype(np.int32)
+    x = rng.integers(-1, 6, 30).astype(np.int32)
+    after = rng.integers(-5, 40, 30).astype(np.int32)
+    until = after + rng.integers(0, 30, 30).astype(np.int32)
+    got = ops.count_id_in_window(
+        jnp.asarray(nbr),
+        jnp.asarray(tt),
+        jnp.asarray(indptr),
+        jnp.asarray(node),
+        jnp.asarray(x),
+        jnp.asarray(after),
+        jnp.asarray(until),
+        ops.n_iters_for(max_len),
+    )
+    want = []
+    for nd, xx, a, u in zip(node, x, after, until):
+        ids, ts = rows[nd]
+        want.append(
+            0 if xx < 0 else int(np.sum((ids == xx) & (ts > a) & (ts <= u)))
+        )
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_expand_mask_and_offset():
+    indptr = jnp.asarray(np.array([0, 3, 3, 7], dtype=np.int32))
+    flat = jnp.asarray(np.arange(7, dtype=np.int32) * 10)
+    node = jnp.asarray(np.array([0, 1, 2, -1], dtype=np.int32))
+    mask, vals = ops.expand(indptr, (flat,), node, 4)
+    np.testing.assert_array_equal(
+        np.asarray(mask),
+        [[True, True, True, False], [False] * 4, [True] * 4, [False] * 4],
+    )
+    np.testing.assert_array_equal(np.asarray(vals)[0, :3], [0, 10, 20])
+    # offset sweeps the tail of row 2 (len 4): offset 4 -> nothing left
+    mask2, _ = ops.expand(indptr, (flat,), node, 4, offset=4)
+    assert not np.asarray(mask2)[2].any()

@@ -1,0 +1,72 @@
+"""End-to-end pipeline behaviour (paper Table 2 trend) + data generators."""
+import numpy as np
+import pytest
+
+from repro.data.loader import temporal_split
+from repro.data.synth_aml import DATASET_PRESETS, generate_aml_dataset
+from repro.data.trovares import generate_trovares_graph
+from repro.ml.gbdt import GBDTParams
+from repro.ml.pipeline import run_aml_pipeline
+
+
+def test_dataset_presets_deterministic():
+    a = generate_aml_dataset("HI-Small", seed=5, scale=0.2)
+    b = generate_aml_dataset("HI-Small", seed=5, scale=0.2)
+    assert a.graph.n_edges == b.graph.n_edges
+    np.testing.assert_array_equal(a.graph.src, b.graph.src)
+    np.testing.assert_array_equal(a.labels, b.labels)
+
+
+def test_dataset_rates():
+    for name in ("LI-Small", "HI-Small"):
+        ds = generate_aml_dataset(name, seed=0, scale=0.4)
+        assert 0 < ds.illicit_rate < 0.05
+    hi = generate_aml_dataset("HI-Small", seed=0, scale=0.4)
+    li = generate_aml_dataset("LI-Small", seed=0, scale=0.4)
+    assert hi.illicit_rate > 2 * li.illicit_rate  # HI means high-illicit
+
+
+def test_temporal_split():
+    ds = generate_aml_dataset("LI-Small", seed=0, scale=0.2)
+    tr, te = temporal_split(ds)
+    assert len(tr) + len(te) == ds.graph.n_edges
+    assert ds.graph.t[tr].max() <= ds.graph.t[te].min()
+    assert 0.75 < len(tr) / ds.graph.n_edges < 0.85
+
+
+def test_trovares_sizes():
+    g = generate_trovares_graph(5000, seed=0)
+    assert g.n_edges == 5000
+
+
+@pytest.mark.slow
+def test_mined_features_beat_baseline():
+    """Paper Table 2: graph features lift F1 over the XGB-only baseline."""
+    ds = generate_aml_dataset("HI-Small", seed=0, scale=0.5)
+    base = run_aml_pipeline(ds, "xgb_only", params=GBDTParams(n_trees=30))
+    full = run_aml_pipeline(ds, "full", params=GBDTParams(n_trees=30))
+    assert full.f1 > base.f1, (base.f1, full.f1)
+    assert full.f1 > 0.3, full.f1
+
+
+def test_hlo_collective_parser():
+    from repro.launch.hlo_analysis import collective_bytes, roofline
+
+    text = """
+  %ag = bf16[4,1024]{1,0} all-gather(%p0), replica_groups=...
+  %ar.1 = f32[256]{0} all-reduce(%x), to_apply=%sum
+  %ars = (f32[128]{0}, f32[128]{0}) all-reduce-start(%y, %z)
+  %ard = f32[128]{0} all-reduce-done(%ars)
+  %cp = u8[64]{0} collective-permute(%w), source_target_pairs=...
+  %notacoll = f32[9]{0} add(%a, %b)
+"""
+    got = collective_bytes(text)
+    assert got["all-gather"] == 4 * 1024 * 2
+    assert got["all-reduce"] == 256 * 4 + 2 * 128 * 4
+    assert got["collective-permute"] == 64
+    assert got["total"] == got["all-gather"] + got["all-reduce"] + 64
+    r = roofline({"flops": 197e12, "bytes accessed": 819e9}, got, 256, model_flops=197e12 * 256)
+    assert abs(r["compute_s"] - 1.0) < 1e-9
+    assert abs(r["memory_s"] - 1.0) < 1e-9
+    assert r["dominant"] in ("compute_s", "memory_s")
+    assert abs(r["useful_flops_ratio"] - 1.0) < 1e-9

@@ -1,0 +1,50 @@
+"""GPipe pipeline parallelism: piped forward == sequential forward.
+Runs in a subprocess with 4 host devices (pipe axis)."""
+import json
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.pipeline import pipeline_forward
+
+mesh = jax.make_mesh((4,), ("pipe",))
+S, M, MB, D = 4, 8, 2, 16
+rng = np.random.default_rng(0)
+w = jnp.asarray(rng.normal(size=(S, D, D)).astype(np.float32) * 0.3)
+x = jnp.asarray(rng.normal(size=(M, MB, D)).astype(np.float32))
+
+def stage_fn(wi, h):
+    return jnp.tanh(h @ wi)
+
+got = pipeline_forward(mesh, stage_fn, w, x)
+
+ref = x
+for s in range(S):
+    ref = jnp.tanh(ref @ w[s])
+
+err = float(jnp.max(jnp.abs(got - ref)))
+print("RESULT " + json.dumps({"err": err}))
+"""
+
+
+def test_gpipe_matches_sequential():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert res.returncode == 0, res.stderr[-3000:]
+    line = [l for l in res.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    assert json.loads(line[len("RESULT "):])["err"] < 1e-5

@@ -1,0 +1,85 @@
+import pytest
+
+from repro.core.spec import (
+    Neigh,
+    NodeRef,
+    PatternSpec,
+    SEED_DST,
+    SEED_SRC,
+    Stage,
+    StageT,
+    TimeBound,
+    Window,
+)
+from repro.core.patterns import build_pattern, PATTERN_NAMES
+
+
+def test_all_library_patterns_validate():
+    for name in PATTERN_NAMES:
+        spec = build_pattern(name, 128)
+        assert spec.emit_stage is not None
+
+
+def test_duplicate_stage_rejected():
+    with pytest.raises(ValueError, match="duplicate"):
+        PatternSpec(
+            "bad",
+            stages=(
+                Stage("a", "count_window", operand=Neigh(SEED_SRC, "out")),
+                Stage("a", "count_window", operand=Neigh(SEED_SRC, "in"), emit=True),
+            ),
+        )
+
+
+def test_unbound_ref_rejected():
+    with pytest.raises(ValueError, match="unbound"):
+        PatternSpec(
+            "bad",
+            stages=(
+                Stage(
+                    "c",
+                    "count_edges",
+                    edge_src=NodeRef("ghost"),
+                    edge_dst=SEED_SRC,
+                    emit=True,
+                ),
+            ),
+        )
+
+
+def test_exactly_one_emit():
+    with pytest.raises(ValueError, match="emit"):
+        PatternSpec(
+            "bad",
+            stages=(
+                Stage("a", "count_window", operand=Neigh(SEED_SRC, "out")),
+            ),
+        )
+
+
+def test_anchor_on_undefined_stage_rejected():
+    with pytest.raises(ValueError, match="anchor"):
+        PatternSpec(
+            "bad",
+            stages=(
+                Stage(
+                    "c",
+                    "count_window",
+                    operand=Neigh(SEED_DST, "in"),
+                    window=Window(TimeBound(StageT("nope"), 0), TimeBound(None, 1)),
+                    emit=True,
+                ),
+            ),
+        )
+
+
+def test_bad_direction_rejected():
+    with pytest.raises(ValueError, match="direction"):
+        Neigh(SEED_SRC, "sideways")
+
+
+def test_window_helpers():
+    w = Window.after_seed(10)
+    assert w.after.offset == 0 and w.until.offset == 10
+    w = Window.before_seed(10)
+    assert w.until.offset == -1
