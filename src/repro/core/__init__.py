@@ -12,7 +12,12 @@ from repro.core.spec import (
     TimeBound,
     Window,
 )
-from repro.core.compiler import CompiledPattern, compile_pattern
+from repro.core.compiler import (
+    CompiledPattern,
+    StageGraphIR,
+    analyze_stage_graph,
+    compile_pattern,
+)
 from repro.core.oracle import GFPReference
 from repro.core.patterns import build_pattern, feature_pattern_set, PATTERN_NAMES
 from repro.core.features import featurize, mine_features, base_features
@@ -31,6 +36,8 @@ __all__ = [
     "TimeBound",
     "Window",
     "CompiledPattern",
+    "StageGraphIR",
+    "analyze_stage_graph",
     "compile_pattern",
     "GFPReference",
     "build_pattern",

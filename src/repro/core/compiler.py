@@ -1,42 +1,67 @@
 """Domain-specific compiler: PatternSpec -> optimized JAX executable (paper §6).
 
-Compilation pipeline (mirrors the paper's):
+The compiler is organized as a **pass pipeline over a stage-graph IR**: a
+spec is first turned into a DAG of stage nodes with explicit dataflow
+edges, and each subsequent pass refines that IR until it lowers onto the
+vectorized primitives in :mod:`repro.core.ops`.
 
-1. **Validate** — `PatternSpec.validate()` (operand dataflow, anchors).
-2. **Analyze/plan** — classify stages onto the primitive pipeline
-   (≤ 1 materializing ``for_all`` frontier, ≤ 1 ``intersect``, any number of
-   count stages), then make cost-model decisions per degree bucket:
+Graph-independent front-end (:func:`analyze_stage_graph`):
 
-   * *strategy selection* ("ordering set operations based on estimated
-     cost"): an intersect/count stage lowers to one of
-       - ``bs1``  — expand the frontier side, binary-search the fixed CSR
-                    rows (hub-safe, O(D log d) with gathers),
-       - ``bs2``  — expand the fixed side, binary-search frontier rows,
-       - ``pw``   — expand BOTH sides and broadcast-compare padded tiles
-                    (branch-free merge; the VPU-friendly lowering that the
-                    ``kernels/intersect_count`` Pallas kernel implements on
-                    TPU — no gathers at all).
-     Power-law graphs need *per-bucket* choices: low-degree seeds (the
-     bulk) take ``pw``; hub seeds fall back to binary search.
-   * *degree bucketing* ("degree-based workload balancing"): seeds are
-     grouped into power-of-two degree classes so padding waste is bounded,
-   * *hub tail* ("CPU post-processing stage" in the paper): rows beyond
-     the largest bucket are swept in fixed-size chunks via offset
-     parameters — counts are additive across chunks.
+1. **Validate** — `PatternSpec.validate()` (operand shapes, references
+   resolve, exactly one emit, acyclic dataflow).
+2. **Dependency analysis** — topological schedule of the stage DAG
+   (`PatternSpec.topo_order`), node roles, anchor legality (per-branch
+   time anchors must point at a non-union ``for_all`` frontier).
+3. **Frontier chaining** — the ``for_all`` stages are ordered into a
+   *nesting chain*: frontier level ``i`` owns query-shape axis ``i``, so a
+   pattern with chained frontiers lowers to nested padded shapes
+   ``(B, D1, ..., Dk)``.  Any DAG shape is allowed — a frontier may expand
+   from the seed or from any shallower frontier variable; independent
+   frontiers contribute a cross product (multiplicative ``for_all``
+   semantics).  This pass also derives the locality facts the streaming
+   layer consumes: ``hop_depth`` (max node distance from the seed),
+   ``dirty_radius`` (max over pattern edges of the *min* endpoint
+   distance — the ball radius an incremental update must re-mine), and
+   ``time_radius`` (max ``|t_edge - t_seed|`` over all windows, ``None``
+   when a window is unbounded).
 
-3. **Lower** — emit one jitted kernel per (strategy, bucket triple): pure
-   jnp broadcasting over ``(B,)``/``(B,D1)``/``(B,D1,D2[,D3])`` query
-   shapes built from ``repro.core.ops``.  No data-dependent control flow;
-   temporal constraints become closed-form rank differences / compares.
+Graph-dependent back-end (:class:`CompiledPattern`, degree statistics of
+the target graph feed the decisions):
+
+4. **Per-bucket strategy selection** ("ordering set operations based on
+   estimated cost"): an intersect/count stage lowers to one of
+     - ``bs1``  — expand the frontier side, binary-search the fixed CSR
+                  rows (hub-safe, O(D log d) with gathers),
+     - ``bs2``  — expand the fixed side, binary-search frontier rows,
+     - ``pw``   — expand BOTH sides and broadcast-compare padded tiles
+                  (branch-free merge; the VPU-friendly lowering that the
+                  ``kernels/intersect_count`` Pallas kernel implements on
+                  TPU — no gathers at all).
+   Power-law graphs need *per-bucket* choices: low-degree seeds (the
+   bulk) take ``pw``; hub seeds fall back to binary search.  Bucketing is
+   **per level**: every frontier level and both intersect expansions get
+   their own power-of-two degree class (ladder), so padding waste stays
+   bounded at every depth; rows beyond the largest bucket are swept in
+   fixed-size chunks via per-level offset parameters (counts are additive
+   across the sweep grid).  Seeds whose padded cost explodes are
+   decomposed into per-branch work items (the paper's two-phase "deep
+   tail" post-processing): the level-1 frontier is expanded host-side and
+   every branch is **re-bucketed per level** by its OWN degrees.
+5. **Lowering** — emit one jitted kernel per (strategy, bucket tuple):
+   pure jnp broadcasting over nested ``(B, D1, ..., Dk[, DA][, DB])``
+   query shapes built from ``repro.core.ops``.  No data-dependent control
+   flow; temporal constraints become closed-form rank differences.
 
 Counts are exact: `tests/test_compiler_oracle.py` checks them against the
-pure-Python GFP-reference enumerator on every pattern and every strategy.
+pure-Python GFP-reference enumerator on every pattern and every strategy,
+including the chained-frontier depth-3+ patterns (cycle5, peel_chain).
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 import jax
@@ -53,27 +78,36 @@ from repro.core.spec import (
     Stage,
     StageT,
     TimeBound,
+    Window,
     _SeedT,
 )
 from repro.graph.csr import DeviceGraph, TemporalGraph
 
-__all__ = ["CompiledPattern", "compile_pattern", "BUCKET_LADDER"]
+__all__ = [
+    "CompiledPattern",
+    "compile_pattern",
+    "analyze_stage_graph",
+    "StageGraphIR",
+    "StageNode",
+    "BUCKET_LADDER",
+]
 
 BUCKET_LADDER = (4, 16, 64, 256, 1024)
 BATCH_ELEM_CAP = 1 << 22  # max padded elements materialized per kernel call
 INVALID = np.int32(2**31 - 1)
+SEED_NAMES = ("seed.src", "seed.dst")
 # cost-model constants (relative op costs, calibrated on the CPU backend;
 # the ratio is what matters: one binary-search probe ≈ gather + compare)
 C_SEARCH_PER_ITER = 4.0 * 5.0  # 4 lower_bounds x gather-heavy iteration
 C_COMPARE = 1.0
 # seeds whose best padded strategy exceeds this are decomposed into
 # per-branch work items (the paper's two-phase "deep tail" post-processing):
-# the frontier is expanded host-side and every branch is re-bucketed by its
-# OWN degree.  Sweeping this threshold (EXPERIMENTS.md §Perf-mining M4)
-# showed the bulk path's max-over-branches padding loses even for mildly
-# hub-adjacent seeds: 2^11 beat 2^21 by 30x on scatter-gather — per-branch
-# decomposition is the right default for ALL intersect work, with the
-# bulk path kept for genuinely uniform low-degree seeds
+# the level-1 frontier is expanded host-side and every branch is re-bucketed
+# by its OWN degrees at every level.  Sweeping this threshold
+# (EXPERIMENTS.md §Perf-mining M4) showed the bulk path's max-over-branches
+# padding loses even for mildly hub-adjacent seeds: 2^11 beat 2^21 by 30x on
+# scatter-gather — per-branch decomposition is the right default for ALL
+# deep work, with the bulk path kept for genuinely uniform low-degree seeds
 BRANCH_DECOMP_COST = float(1 << 11)
 
 
@@ -86,19 +120,268 @@ def _ladder_class(req: np.ndarray, ladder=BUCKET_LADDER) -> np.ndarray:
     return np.searchsorted(np.asarray(ladder), req, side="left").astype(np.int32)
 
 
+def _sides(opn) -> List[Neigh]:
+    """All Neigh operands a for_all reads (including difference RHS)."""
+    if isinstance(opn, SetExpr):
+        return [opn.left, opn.right]
+    return [opn]
+
+
+def _expand_sides(opn) -> List[Neigh]:
+    """The Neigh operands whose rows actually *produce* frontier items
+    (a difference's RHS is only a membership filter)."""
+    if isinstance(opn, SetExpr):
+        return [opn.left, opn.right] if opn.op == "union" else [opn.left]
+    return [opn]
+
+
+# ----------------------------------------------------------------------
+# stage-graph IR
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class StageNode:
+    """One node of the stage-graph IR: a stage plus its dataflow edges."""
+
+    stage: Stage
+    deps: Tuple[str, ...]  # stage names this node reads (dataflow in-edges)
+    role: str  # "frontier" | "intersect" | "count" | "product"
+    level: int  # frontier nesting level (1-based); 0 for seed-level stages
+
+
 @dataclasses.dataclass
-class _Plan:
-    forall: Optional[Stage]
+class StageGraphIR:
+    """Analyzed stage graph: schedule, frontier chain, locality facts."""
+
+    spec: PatternSpec
+    nodes: Dict[str, StageNode]
+    schedule: Tuple[Stage, ...]  # topological order
+    frontiers: Tuple[Stage, ...]  # nesting order; frontier i owns axis i
     intersect: Optional[Stage]
-    counts: Tuple[Stage, ...]
+    counts: Tuple[Stage, ...]  # non-frontier/intersect stages, scheduled
     emit: Stage
-    # level-1 count_edges stage eligible for the pairwise strategy
-    ce_l1: Optional[Stage] = None
+    ce_pw: Optional[Stage]  # count_edges eligible for the pairwise strategy
+    node_dist: Dict[str, int]  # hop distance of every bound node (seeds = 0)
+    hop_depth: int  # max hop distance any pattern node reaches
+    dirty_radius: int  # ball radius for incremental dirty frontiers
+    time_radius: Optional[int]  # max |t_edge - t_seed|; None = unbounded
     est: Dict[str, float] = dataclasses.field(default_factory=dict)
 
+    @property
+    def n_levels(self) -> int:
+        return len(self.frontiers)
 
+
+def _pass_dependencies(spec: PatternSpec) -> Tuple[Tuple[Stage, ...], Dict[str, Tuple[str, ...]]]:
+    """Dependency-analysis pass: topological schedule + dataflow edges.
+
+    `PatternSpec.validate()` (the validate pass) has already run in the
+    spec constructor; `topo_order` raises on cyclic dataflow.
+    """
+    schedule = spec.topo_order()
+    deps = {st.name: spec.dependencies(st) for st in schedule}
+    return schedule, deps
+
+
+def _pass_frontier_chain(
+    spec: PatternSpec, schedule: Tuple[Stage, ...]
+) -> Tuple[Tuple[Stage, ...], Optional[Stage], Tuple[Stage, ...], Optional[Stage]]:
+    """Frontier-chaining pass: order for_all stages into nesting levels,
+    place the intersect, and pick the pairwise-eligible count stage."""
+    frontiers = tuple(st for st in schedule if st.op == "for_all")
+    levels = {st.name: i + 1 for i, st in enumerate(frontiers)}
+
+    intersects = [st for st in schedule if st.op == "intersect"]
+    if len(intersects) > 1:
+        raise NotImplementedError(
+            "compiler lowers at most one intersect stage; chain for_all "
+            "frontiers to express deeper programs"
+        )
+    inter = intersects[0] if intersects else None
+    if inter is not None and inter.operands[1].node.name not in SEED_NAMES:
+        raise NotImplementedError(
+            "intersect fixed side must be a seed endpoint"
+        )
+
+    # StageT anchors on a union frontier are undefined (a union is a node
+    # *set*: the representative's edge time is not canonical)
+    union_names = {
+        f.name
+        for f in frontiers
+        if isinstance(f.operand, SetExpr) and f.operand.op == "union"
+    }
+    if union_names:
+        for st in schedule:
+            for b in (
+                st.window.after,
+                st.window.until,
+                st.window2.after,
+                st.window2.until,
+            ):
+                if isinstance(b.anchor, StageT) and b.anchor.name in union_names:
+                    raise NotImplementedError(
+                        "StageT anchor on a union frontier is undefined"
+                    )
+
+    counts = tuple(
+        st for st in schedule if st.op not in ("for_all", "intersect")
+    )
+    # a count_edges (frontier var -> fixed node) may lower pairwise, but
+    # only when the pattern has no intersect competing for the fixed-row
+    # expansion slot (library patterns never have both)
+    ce_pw = None
+    if inter is None:
+        for st in counts:
+            if (
+                st.op == "count_edges"
+                and st.edge_src.name in levels
+                and st.edge_dst.name in SEED_NAMES
+            ):
+                ce_pw = st
+                break
+    return frontiers, inter, counts, ce_pw
+
+
+def _pass_locality(
+    schedule: Tuple[Stage, ...], frontiers: Tuple[Stage, ...]
+) -> Tuple[Dict[str, int], int, int]:
+    """Locality pass: hop distances, hop depth, and the dirty-ball radius.
+
+    ``dirty_radius`` is the max over pattern *edges* of the minimum
+    endpoint distance: a new graph edge can only participate in an
+    instance if it coincides with a pattern edge, and that pattern edge
+    has an endpoint within ``dirty_radius`` undirected hops of the seed
+    endpoints — so re-mining the ball of that radius around a new edge's
+    endpoints covers every affected seed.
+    """
+    dist = {"seed.src": 0, "seed.dst": 0}
+    for f in frontiers:
+        dist[f.name] = 1 + max(
+            dist[s.node.name] for s in _expand_sides(f.operand)
+        )
+    hop = max(dist.values())
+    dirty = 0
+    for st in schedule:
+        if st.op == "for_all":
+            dirty = max(
+                dirty, max(dist[s.node.name] for s in _sides(st.operand))
+            )
+        elif st.op == "intersect":
+            # the witness node y is a real graph neighbor of BOTH sides
+            # (edges a.node-y and y-b.node must exist), so its distance
+            # is 1 + min of theirs; each intersect edge then contributes
+            # its own min endpoint distance
+            d_a, d_b = dist[st.operands[0].node.name], dist[st.operands[1].node.name]
+            d_y = 1 + min(d_a, d_b)
+            dirty = max(dirty, min(d_a, d_y), min(d_b, d_y))
+            hop = max(hop, d_y)
+        elif st.op == "count_edges":
+            dirty = max(
+                dirty, min(dist[st.edge_src.name], dist[st.edge_dst.name])
+            )
+        elif st.op == "count_window":
+            d = dist[st.operand.node.name]
+            dirty = max(dirty, d)
+            hop = max(hop, d + 1)
+    return dist, hop, dirty
+
+
+def _span_of_bound(tb: TimeBound, spans: Dict[str, Optional[int]]) -> Optional[int]:
+    if tb.anchor is None:
+        return None  # absolute/unbounded: no seed-relative bound
+    if isinstance(tb.anchor, _SeedT):
+        return abs(int(tb.offset))
+    s = spans.get(tb.anchor.name)
+    return None if s is None else s + abs(int(tb.offset))
+
+
+def _span_of_window(win: Window, spans: Dict[str, Optional[int]]) -> Optional[int]:
+    a = _span_of_bound(win.after, spans)
+    u = _span_of_bound(win.until, spans)
+    return None if a is None or u is None else max(a, u)
+
+
+def _pass_time_radius(schedule: Tuple[Stage, ...]) -> Optional[int]:
+    """Temporal-locality pass: max |t_edge - t_seed| over all windows,
+    propagated through StageT anchor chains.  None = unbounded (some
+    pattern edge is checked over all time, e.g. a difference membership)."""
+    spans: Dict[str, Optional[int]] = {}
+    radius: Optional[int] = 0
+
+    def bump(s: Optional[int]) -> None:
+        nonlocal radius
+        if radius is None:
+            return
+        radius = None if s is None else max(radius, s)
+
+    for st in schedule:
+        if st.op == "for_all":
+            s = _span_of_window(st.window, spans)
+            spans[st.name] = s
+            bump(s)
+            if isinstance(st.operand, SetExpr) and st.operand.op == "difference":
+                bump(None)  # membership edges are checked over all time
+        elif st.op == "intersect":
+            bump(_span_of_window(st.window, spans))
+            bump(_span_of_window(st.window2, spans))
+        elif st.op in ("count_edges", "count_window"):
+            bump(_span_of_window(st.window, spans))
+    return radius
+
+
+def analyze_stage_graph(spec: PatternSpec) -> StageGraphIR:
+    """Run the graph-independent front-end passes: validate (already done
+    by the spec constructor) → dependency analysis → frontier chaining →
+    locality/anchor-span analysis.  The result is everything a backend —
+    or the streaming layer — needs to know about the pattern's shape."""
+    schedule, deps = _pass_dependencies(spec)
+    frontiers, inter, counts, ce_pw = _pass_frontier_chain(spec, schedule)
+    levels = {st.name: i + 1 for i, st in enumerate(frontiers)}
+    node_dist, hop_depth, dirty_radius = _pass_locality(schedule, frontiers)
+    time_radius = _pass_time_radius(schedule)
+    nodes = {}
+    for st in schedule:
+        role = {
+            "for_all": "frontier",
+            "intersect": "intersect",
+            "product": "product",
+        }.get(st.op, "count")
+        nodes[st.name] = StageNode(
+            stage=st,
+            deps=deps[st.name],
+            role=role,
+            level=levels.get(st.name, 0),
+        )
+    return StageGraphIR(
+        spec=spec,
+        nodes=nodes,
+        schedule=schedule,
+        frontiers=frontiers,
+        intersect=inter,
+        counts=counts,
+        emit=spec.emit_stage,
+        ce_pw=ce_pw,
+        node_dist=node_dist,
+        hop_depth=hop_depth,
+        dirty_radius=dirty_radius,
+        time_radius=time_radius,
+    )
+
+
+# ----------------------------------------------------------------------
+# backend: per-graph strategy selection + lowering
+# ----------------------------------------------------------------------
 class CompiledPattern:
-    """A pattern compiled against one graph (degree statistics feed the plan)."""
+    """A pattern compiled against one graph (degree statistics feed the
+    strategy/bucketing passes).
+
+    Query-shape axis model: frontier level ``i`` owns axis ``i`` of the
+    padded query shape; the intersect's frontier-side expansion owns axis
+    ``k+1`` and its fixed-side expansion axis ``k+2`` (``k+1`` for bs2 /
+    pairwise count_edges, which need only one extra axis).  A variable
+    bound at level ``j`` broadcasts against deeper levels through size-1
+    axes, so invalid slots propagate as ``-1`` sentinels and every
+    primitive returns 0 for them.
+    """
 
     def __init__(
         self,
@@ -115,79 +398,56 @@ class CompiledPattern:
         self.batch_elem_cap = int(batch_elem_cap)
         self.n_iters = ops.n_iters_for(self.dg.max_deg)
         self.force_strategy = force_strategy
-        self._rm_cache: Dict = {}
-        self.plan = self._analyze()
+        self.ir = analyze_stage_graph(spec)
+        self._frontier_by_name = {f.name: f for f in self.ir.frontiers}
+        self._vals_cache: Dict[str, np.ndarray] = {}
         self._kernels: Dict[Tuple, Callable] = {}
+        # observability: padded elements materialized / kernel invocations /
+        # host-decomposed branch items (bench_mining reports these so
+        # bucketing regressions are visible)
+        self.stats = {"padded_elements": 0, "kernel_calls": 0, "branch_items": 0}
 
-    # ------------------------------------------------------------------
-    # analysis
-    # ------------------------------------------------------------------
-    def _analyze(self) -> _Plan:
-        forall = None
-        inter = None
-        counts = []
-        for st in self.spec.stages:
-            if st.op == "for_all":
-                if forall is not None:
-                    raise NotImplementedError(
-                        "compiler v1 lowers at most one for_all frontier; "
-                        "express deeper programs via intersect (see DESIGN.md)"
-                    )
-                forall = st
-            elif st.op == "intersect":
-                if inter is not None:
-                    raise NotImplementedError("at most one intersect stage")
-                inter = st
-            else:
-                counts.append(st)
-        plan = _Plan(forall, inter, tuple(counts), self.spec.emit_stage)
+    # -- convenience re-exports from the IR ----------------------------
+    @property
+    def hop_depth(self) -> int:
+        return self.ir.hop_depth
 
-        if forall is not None and isinstance(forall.operand, SetExpr):
-            if forall.operand.op == "union":
-                for st in self.spec.stages:
-                    for b in (
-                        st.window.after,
-                        st.window.until,
-                        st.window2.after,
-                        st.window2.until,
-                    ):
-                        if isinstance(b.anchor, StageT) and b.anchor.name == forall.name:
-                            raise NotImplementedError(
-                                "StageT anchor on a union frontier is undefined"
-                            )
+    @property
+    def dirty_radius(self) -> int:
+        return self.ir.dirty_radius
 
-        # a level-1 count_edges (frontier -> fixed node) may lower pairwise,
-        # but only when the pattern has no intersect competing for the
-        # fixed-row expansion slot (library patterns never have both)
-        if inter is None and forall is not None:
-            for st in counts:
-                if st.op == "count_edges" and st.edge_src.name == forall.name:
-                    plan.ce_l1 = st
-                    break
-        return plan
+    @property
+    def time_radius(self) -> Optional[int]:
+        return self.ir.time_radius
 
     def plan_text(self) -> str:
-        p = self.plan
-        lines = [f"pattern {self.spec.name}: compiled plan"]
-        if p.forall is not None:
+        ir = self.ir
+        lines = [f"pattern {self.spec.name}: compiled stage-graph plan"]
+        for i, f in enumerate(ir.frontiers, start=1):
             lines.append(
-                f"  for_all {p.forall.name} <- {p.forall.operand!r} "
-                f"[buckets {self.ladder}]"
+                f"  L{i} for_all {f.name} <- {f.operand!r} "
+                f"[axis {i}; buckets {self.ladder}]"
             )
-        if p.intersect is not None:
-            a, b = p.intersect.operands
+        if ir.intersect is not None:
+            a, b = ir.intersect.operands
             lines.append(
-                f"  intersect {p.intersect.name} <- {a!r} (X) {b!r} "
-                f"[strategy per bucket: bs1|bs2|pw; est {p.est}]"
+                f"  intersect {ir.intersect.name} <- {a!r} (X) {b!r} "
+                f"[strategy per bucket: bs1|bs2|pw; est {ir.est}]"
             )
-        for st in p.counts:
-            tag = " [bs|pw]" if st is p.ce_l1 else ""
-            lines.append(f"  {st.op} {st.name}{tag}")
-        lines.append(f"  emit {p.emit.name}")
+        for st in ir.counts:
+            tag = " [bs|pw]" if st is ir.ce_pw else ""
+            deps = ir.nodes[st.name].deps
+            dep_s = f" reads({', '.join(deps)})" if deps else ""
+            lines.append(f"  {st.op} {st.name}{tag}{dep_s}")
+        lines.append(f"  emit {ir.emit.name}")
+        lines.append(
+            f"  locality: hop_depth={ir.hop_depth} "
+            f"dirty_radius={ir.dirty_radius} time_radius={ir.time_radius}"
+        )
         return "\n".join(lines)
 
     # ------------------------------------------------------------------
-    # host-side degree requirements (bucketing inputs)
+    # host-side degree requirements (per-level bucketing inputs)
     # ------------------------------------------------------------------
     def _seed_node(self, ref: NodeRef, seed_eids: np.ndarray) -> np.ndarray:
         if ref.name == "seed.src":
@@ -196,20 +456,26 @@ class CompiledPattern:
             return self.g.dst[seed_eids]
         raise KeyError(ref.name)
 
-    def _deg_of(self, ref: NodeRef, direction: str, seed_eids: np.ndarray):
-        deg = self.g.out_deg if direction == "out" else self.g.in_deg
-        return deg[self._seed_node(ref, seed_eids)].astype(np.int64)
+    def _deg_vals(self, direction: str) -> Tuple[str, np.ndarray]:
+        key = f"deg_{direction}"
+        if key not in self._vals_cache:
+            deg = self.g.out_deg if direction == "out" else self.g.in_deg
+            self._vals_cache[key] = deg.astype(np.int64)
+        return key, self._vals_cache[key]
 
-    def _row_max_nbr_deg(self, src_dir: str, nbr_dir: str) -> np.ndarray:
-        """Per node: max over its src_dir-neighbors w of nbr_dir-degree(w)."""
-        key = (src_dir, nbr_dir)
-        if key in self._rm_cache:
-            return self._rm_cache[key]
+    def _nbr_max(self, direction: str, key: str, vals: np.ndarray):
+        """Per node: max over its direction-neighbors w of vals[w].
+
+        The composition ``_nbr_max^(j)`` turns a leaf-level requirement
+        into a per-seed requirement down a j-level frontier chain; results
+        are cached by the symbolic key so chains share work."""
+        ck = f"max_{direction}({key})"
+        if ck in self._vals_cache:
+            return ck, self._vals_cache[ck]
         g = self.g
-        indptr = g.out_indptr if src_dir == "out" else g.in_indptr
-        nbr = g.out_nbr if src_dir == "out" else g.in_nbr
-        deg = g.out_deg if nbr_dir == "out" else g.in_deg
-        mapped = deg[nbr].astype(np.int64)
+        indptr = g.out_indptr if direction == "out" else g.in_indptr
+        nbr = g.out_nbr if direction == "out" else g.in_nbr
+        mapped = vals[nbr].astype(np.int64)
         n = len(indptr) - 1
         if mapped.size == 0:
             res = np.zeros(n, dtype=np.int64)
@@ -217,53 +483,78 @@ class CompiledPattern:
             starts = np.minimum(indptr[:-1], mapped.size - 1).astype(np.int64)
             res = np.maximum.reduceat(mapped, starts)
             res = np.where(np.diff(indptr) > 0, res, 0)
-        self._rm_cache[key] = res
+        self._vals_cache[ck] = res
+        return ck, res
+
+    def _req_seedwise(
+        self, ref: NodeRef, key: str, vals: np.ndarray, seed_eids: np.ndarray
+    ) -> np.ndarray:
+        """Per-seed upper bound of vals[] at the node `ref` binds, maxing
+        over every branch of the frontier chain that reaches it."""
+        if ref.name in SEED_NAMES:
+            return vals[self._seed_node(ref, seed_eids)]
+        f = self._frontier_by_name[ref.name]
+        res = None
+        for side in _expand_sides(f.operand):
+            k2, v2 = self._nbr_max(side.direction, key, vals)
+            r = self._req_seedwise(side.node, k2, v2, seed_eids)
+            res = r if res is None else np.maximum(res, r)
         return res
 
-    def _d1_req(self, seed_eids: np.ndarray) -> np.ndarray:
-        st = self.plan.forall
-        if st is None:
-            return np.ones(len(seed_eids), dtype=np.int64)
-        opn = st.operand
-        if isinstance(opn, SetExpr):
-            l = self._deg_of(opn.left.node, opn.left.direction, seed_eids)
-            if opn.op == "union":
-                r = self._deg_of(opn.right.node, opn.right.direction, seed_eids)
-                return np.maximum(l, r)
-            return l
-        return self._deg_of(opn.node, opn.direction, seed_eids)
+    def _req_itemwise(
+        self,
+        ref: NodeRef,
+        key: str,
+        vals: np.ndarray,
+        fr: np.ndarray,
+        src_b: np.ndarray,
+        dst_b: np.ndarray,
+    ) -> np.ndarray:
+        """Per-branch-item requirement for the hub decomposition path: the
+        level-1 frontier is a concrete host-expanded node, so deeper
+        levels re-bucket from its ACTUAL degrees."""
+        if self.ir.frontiers and ref.name == self.ir.frontiers[0].name:
+            return vals[fr]
+        if ref.name == "seed.src":
+            return vals[src_b]
+        if ref.name == "seed.dst":
+            return vals[dst_b]
+        f = self._frontier_by_name[ref.name]
+        res = None
+        for side in _expand_sides(f.operand):
+            k2, v2 = self._nbr_max(side.direction, key, vals)
+            r = self._req_itemwise(side.node, k2, v2, fr, src_b, dst_b)
+            res = r if res is None else np.maximum(res, r)
+        return res
 
-    def _d2_req(self, seed_eids: np.ndarray) -> np.ndarray:
-        """Frontier-side inner expansion (bs1/pw intersect)."""
-        st = self.plan.intersect
-        if st is None:
-            return np.ones(len(seed_eids), dtype=np.int64)
-        a, _ = st.operands
-        fa = self.plan.forall
-        if fa is None or a.node.name in ("seed.src", "seed.dst"):
-            return self._deg_of(a.node, a.direction, seed_eids)
-        opn = fa.operand
-        sides = (
-            [opn.left, opn.right]
-            if isinstance(opn, SetExpr) and opn.op == "union"
-            else [opn.left if isinstance(opn, SetExpr) else opn]
-        )
-        req = np.zeros(len(seed_eids), dtype=np.int64)
-        for side in sides:
-            rm = self._row_max_nbr_deg(side.direction, a.direction)
-            req = np.maximum(req, rm[self._seed_node(side.node, seed_eids)])
-        return req
+    def _frontier_reqs(self, seed_eids: np.ndarray) -> List[np.ndarray]:
+        """Per-seed width requirement of every frontier level."""
+        out = []
+        for f in self.ir.frontiers:
+            req = None
+            for side in _expand_sides(f.operand):
+                k, v = self._deg_vals(side.direction)
+                r = self._req_seedwise(side.node, k, v, seed_eids)
+                req = r if req is None else np.maximum(req, r)
+            out.append(req)
+        return out
 
-    def _d3_req(self, seed_eids: np.ndarray) -> np.ndarray:
-        """Fixed-side expansion (bs2/pw intersect, pw count_edges)."""
-        st = self.plan.intersect
-        if st is not None:
-            _, b = st.operands
-            return self._deg_of(b.node, b.direction, seed_eids)
-        ce = self.plan.ce_l1
+    def _intersect_reqs(self, seed_eids: np.ndarray):
+        """(dA, dB): frontier-side / fixed-side expansion requirements."""
+        ones = np.ones(len(seed_eids), dtype=np.int64)
+        it = self.ir.intersect
+        if it is not None:
+            a, b = it.operands
+            ka, va = self._deg_vals(a.direction)
+            d_a = self._req_seedwise(a.node, ka, va, seed_eids)
+            _, vb = self._deg_vals(b.direction)
+            d_b = vb[self._seed_node(b.node, seed_eids)]
+            return d_a, d_b
+        ce = self.ir.ce_pw
         if ce is not None:
-            return self._deg_of(ce.edge_dst, "in", seed_eids)
-        return np.ones(len(seed_eids), dtype=np.int64)
+            _, vb = self._deg_vals("in")
+            return ones, vb[self._seed_node(ce.edge_dst, seed_eids)]
+        return ones, ones
 
     def _pad(self, req: np.ndarray) -> np.ndarray:
         ladder = np.asarray(self.ladder, dtype=np.int64)
@@ -275,59 +566,76 @@ class CompiledPattern:
         )
 
     # ------------------------------------------------------------------
-    # per-seed strategy choice (cost model)
+    # strategy-selection pass (per-seed, per-bucket cost model)
     # ------------------------------------------------------------------
-    def _strategies(self, d1p, d2p, d3p):
+    def _pass_strategy(self, w_pads, d_a_p, d_b_p):
         """Per-seed (strategy code, cost): 0=bs1, 1=bs2, 2=pw, 3=plain."""
         cs = C_SEARCH_PER_ITER * self.n_iters
-        if self.plan.intersect is not None:
+        w_prod = np.ones(d_a_p.shape, dtype=np.float64)
+        for wp in w_pads:
+            w_prod = w_prod * wp.astype(np.float64)
+        if self.ir.intersect is not None:
             cost = np.stack(
                 [
-                    d1p * d2p * cs,  # bs1
-                    d1p * d3p * cs,  # bs2
-                    d1p * d2p * d3p * C_COMPARE,  # pw
+                    w_prod * d_a_p * cs,  # bs1
+                    w_prod * d_b_p * cs,  # bs2
+                    w_prod * d_a_p * d_b_p * C_COMPARE,  # pw
                 ],
                 axis=0,
             )
-            self.plan.est = {
+            self.ir.est = {
                 k: float(cost[i].mean()) for i, k in enumerate(("bs1", "bs2", "pw"))
             }
             if self.force_strategy is not None:
                 code = {"bs1": 0, "bs2": 1, "pw": 2}[self.force_strategy]
-                out = np.full(d1p.shape, code, dtype=np.int32)
+                out = np.full(w_prod.shape, code, dtype=np.int32)
                 return out, cost[code]
             st = np.argmin(cost, axis=0).astype(np.int32)
             return st, cost.min(axis=0)
-        if self.plan.ce_l1 is not None:
-            cost = np.stack([d1p * cs, d1p * d3p * C_COMPARE], axis=0)
+        if self.ir.ce_pw is not None:
+            cost = np.stack(
+                [w_prod * cs, w_prod * d_b_p * C_COMPARE], axis=0
+            )
             if self.force_strategy in ("bs1", "bs2"):
-                return np.zeros(d1p.shape, dtype=np.int32), cost[0]
+                return np.zeros(w_prod.shape, dtype=np.int32), cost[0]
             if self.force_strategy == "pw":
-                return np.full(d1p.shape, 2, dtype=np.int32), cost[1]
+                return np.full(w_prod.shape, 2, dtype=np.int32), cost[1]
             st = np.where(cost[1] < cost[0], 2, 0).astype(np.int32)
             return st, cost.min(axis=0)
-        return np.full(d1p.shape, 3, dtype=np.int32), d1p.astype(np.float64)
+        return np.full(w_prod.shape, 3, dtype=np.int32), w_prod
 
-    def _branch_strategies(self, d2p, d3p):
-        """Per-branch-item (strategy, _) for the hub decomposition path."""
+    def _branch_strategies(self, wb_pads, d_a_p, d_b_p):
+        """Per-branch-item strategy for the hub decomposition path (the
+        level-1 width is 1; deeper levels use re-bucketed actual widths)."""
         cs = C_SEARCH_PER_ITER * self.n_iters
-        if self.plan.intersect is not None:
+        w_prod = np.ones(d_a_p.shape, dtype=np.float64)
+        for wp in wb_pads:
+            w_prod = w_prod * wp.astype(np.float64)
+        if self.ir.intersect is not None:
             cost = np.stack(
-                [d2p * cs, d3p * cs, d2p * d3p * C_COMPARE], axis=0
+                [
+                    w_prod * d_a_p * cs,
+                    w_prod * d_b_p * cs,
+                    w_prod * d_a_p * d_b_p * C_COMPARE,
+                ],
+                axis=0,
             )
             if self.force_strategy is not None:
                 code = {"bs1": 0, "bs2": 1, "pw": 2}[self.force_strategy]
-                return np.full(d2p.shape, code, dtype=np.int32)
+                return np.full(d_a_p.shape, code, dtype=np.int32)
             return np.argmin(cost, axis=0).astype(np.int32)
-        # ce_l1: one binary search per item vs d3 compares
-        if self.force_strategy == "pw":
-            return np.full(d2p.shape, 2, dtype=np.int32)
-        if self.force_strategy in ("bs1", "bs2"):
-            return np.zeros(d2p.shape, dtype=np.int32)
-        return np.where(d3p * C_COMPARE < cs, 2, 0).astype(np.int32)
+        if self.ir.ce_pw is not None:
+            if self.force_strategy == "pw":
+                return np.full(d_a_p.shape, 2, dtype=np.int32)
+            if self.force_strategy in ("bs1", "bs2"):
+                return np.zeros(d_a_p.shape, dtype=np.int32)
+            return np.where(
+                w_prod * d_b_p * C_COMPARE < w_prod * cs, 2, 0
+            ).astype(np.int32)
+        return np.full(d_a_p.shape, 3, dtype=np.int32)
 
     # ------------------------------------------------------------------
-    # lowering
+    # lowering pass
     # ------------------------------------------------------------------
     def _rows(self, dg: DeviceGraph, direction: str):
         if direction == "out":
@@ -335,9 +643,15 @@ class CompiledPattern:
         return dg.in_indptr, dg.in_nbr, dg.in_t, dg.in_t_sorted
 
     def _build_kernel(
-        self, strat: int, d1: int, d2: int, d3: int, branch_mode: bool = False
+        self, strat: int, dims: Tuple[int, ...], branch_mode: bool = False
     ) -> Callable:
-        plan, n_iters = self.plan, self.n_iters
+        """Lower the stage graph to one jitted kernel for a fixed
+        (strategy, per-level bucket widths) combination.
+
+        ``dims`` is (W1..Wk, DA, DB): the padded width of every frontier
+        level plus the two intersect expansions (1 when unused)."""
+        ir, n_iters = self.ir, self.n_iters
+        k = len(ir.frontiers)
 
         def lift(arr, lvl):
             arr = jnp.asarray(arr)
@@ -345,7 +659,12 @@ class CompiledPattern:
                 arr = arr[..., None]
             return arr
 
-        def kernel(dg: DeviceGraph, s, d, st_, fr, frt, off1, off2, off3):
+        def mid_lift(arr, axis_lvl):
+            """Place a (B, d) expansion at query-shape axis `axis_lvl`."""
+            a = jnp.asarray(arr)
+            return a.reshape(a.shape[0], *([1] * (axis_lvl - 1)), a.shape[1])
+
+        def kernel(dg: DeviceGraph, s, d, st_, fr, frt, offs):
             node_env = {"seed.src": (s, 0), "seed.dst": (d, 0)}
             time_env: Dict[str, Tuple] = {}
             mask_env: Dict[str, Tuple] = {}
@@ -364,52 +683,52 @@ class CompiledPattern:
                 arr, _ = node_env[ref.name]
                 return lift(arr, lvl)
 
-            def expand_side(nb: Neigh, width: int, off):
-                indptr, nbr, t, _ = self._rows(dg, nb.direction)
-                base, _ = node_env[nb.node.name]
-                return ops.expand(indptr, (nbr, t), base, width, offset=off)
-
-            # ---- for_all frontier ------------------------------------
-            if plan.forall is not None and branch_mode:
-                # hub decomposition: the frontier was expanded host-side;
-                # each kernel row is ONE branch (width-1 frontier)
-                fa = plan.forall
+            # ---- frontier chain: level i owns axis i ------------------
+            start_level = 1
+            if branch_mode:
+                # hub decomposition: the level-1 frontier was expanded
+                # host-side; each kernel row is ONE branch (width-1 axis)
+                f1 = ir.frontiers[0]
                 bmask = (fr >= 0)[:, None]
-                node_env[fa.name] = (jnp.where(bmask, fr[:, None], -1), 1)
-                time_env[fa.name] = (frt[:, None], 1)
-                mask_env[fa.name] = (bmask, 1)
-                count_env[fa.name] = (bmask.astype(jnp.int32), 1, None)
-            elif plan.forall is not None:
-                fa = plan.forall
-                opn = fa.operand
-                a1 = bound_at(fa.window.after, 1)
-                u1 = bound_at(fa.window.until, 1)
+                node_env[f1.name] = (jnp.where(bmask, fr[:, None], -1), 1)
+                time_env[f1.name] = (frt[:, None], 1)
+                mask_env[f1.name] = (bmask, 1)
+                count_env[f1.name] = (bmask.astype(jnp.int32), 1)
+                start_level = 2
 
-                def filt(mask, ids, ts):
-                    m = mask & (ts > a1) & (ts <= u1)
-                    for ref in fa.skip_eq:
-                        m = m & (ids != node_at(ref, 1))
+            for lvl in range(start_level, k + 1):
+                fa = ir.frontiers[lvl - 1]
+                width = dims[lvl - 1]
+                off = offs[lvl - 1]
+                opn = fa.operand
+                a1 = bound_at(fa.window.after, lvl)
+                u1 = bound_at(fa.window.until, lvl)
+
+                def expand_side(nb: Neigh, _w=width, _off=off, _lvl=lvl):
+                    indptr, nbr, t, _ = self._rows(dg, nb.direction)
+                    base, _ = node_env[nb.node.name]
+                    return ops.expand(
+                        indptr, (nbr, t), lift(base, _lvl - 1), _w, offset=_off
+                    )
+
+                def filt(mask, ids, ts, _fa=fa, _a1=a1, _u1=u1, _lvl=lvl):
+                    m = mask & (ts > _a1) & (ts <= _u1)
+                    for ref in _fa.skip_eq:
+                        m = m & (ids != node_at(ref, _lvl))
                     return m
 
                 if isinstance(opn, SetExpr) and opn.op == "union":
-                    m1, i1, t1 = expand_side(opn.left, d1, off1)
-                    m2, i2, t2 = expand_side(opn.right, d1, off1)
+                    m1, i1, t1 = expand_side(opn.left)
+                    m2, i2, t2 = expand_side(opn.right)
                     m1, m2 = filt(m1, i1, t1), filt(m2, i2, t2)
                     ids = jnp.concatenate([i1, i2], axis=-1)
                     ts = jnp.concatenate([t1, t2], axis=-1)
                     mask = jnp.concatenate([m1, m2], axis=-1)
-                    # dedup on node id (union is a node-set); filter first so
-                    # each id's surviving representative is in-window
-                    key = jnp.where(mask, ids, INVALID)
-                    order = jnp.argsort(key, axis=-1)
-                    ids = jnp.take_along_axis(key, order, axis=-1)
-                    ts = jnp.take_along_axis(ts, order, axis=-1)
-                    prev = jnp.concatenate(
-                        [jnp.full_like(ids[..., :1], -1), ids[..., :-1]], axis=-1
-                    )
-                    mask = (ids != INVALID) & (ids != prev)
+                    # dedup on node id (union is a node-set); filter first
+                    # so each id's surviving representative is in-window
+                    ids, ts, mask = ops.dedup_ids(ids, ts, mask, INVALID)
                 elif isinstance(opn, SetExpr) and opn.op == "difference":
-                    mask, ids, ts = expand_side(opn.left, d1, off1)
+                    mask, ids, ts = expand_side(opn.left)
                     mask = filt(mask, ids, ts)
                     rb = opn.right
                     indptr_r, nbr_r, t_r, _ = self._rows(dg, rb.direction)
@@ -417,7 +736,7 @@ class CompiledPattern:
                         nbr_r,
                         t_r,
                         indptr_r,
-                        node_at(rb.node, 1),
+                        node_at(rb.node, lvl),
                         jnp.where(mask, ids, -1),
                         NEG_INF,
                         POS_INF,
@@ -425,134 +744,151 @@ class CompiledPattern:
                     )
                     mask = mask & (member == 0)
                 else:
-                    mask, ids, ts = expand_side(opn, d1, off1)
+                    mask, ids, ts = expand_side(opn)
                     mask = filt(mask, ids, ts)
                 ids = jnp.where(mask, ids, -1)
-                node_env[fa.name] = (ids, 1)
-                time_env[fa.name] = (ts, 1)
-                mask_env[fa.name] = (mask, 1)
-                count_env[fa.name] = (mask.astype(jnp.int32), 1, None)
+                node_env[fa.name] = (ids, lvl)
+                time_env[fa.name] = (ts, lvl)
+                mask_env[fa.name] = (mask, lvl)
+                count_env[fa.name] = (mask.astype(jnp.int32), lvl)
 
-            # ---- intersect -------------------------------------------
-            if plan.intersect is not None:
-                it = plan.intersect
+            # ---- intersect: expansions own axes k+1 / k+2 -------------
+            if ir.intersect is not None:
+                it = ir.intersect
                 a, b = it.operands
-                if a.node.name in ("seed.src", "seed.dst"):
-                    fr_ids = lift(node_env[a.node.name][0], 1)  # (B,1)
-                    fr_mask = fr_ids >= 0
-                else:
-                    fr_ids = node_env[a.node.name][0]
-                    fr_mask = mask_env[a.node.name][0]
+                d_a, d_b = dims[k], dims[k + 1]
+                off_a, off_b = offs[k], offs[k + 1]
+                fr_ids = lift(node_env[a.node.name][0], k)
                 indptr_a, nbr_a, t_a, _ = self._rows(dg, a.direction)
                 indptr_b, nbr_b, t_b, _ = self._rows(dg, b.direction)
                 fixed = node_env[b.node.name][0]  # (B,)
-                a1 = bound_at(it.window.after, 2)
-                u1 = bound_at(it.window.until, 2)
-                a2 = bound_at(it.window2.after, 2)
-                u2 = bound_at(it.window2.until, 2)
+                lx = k + 1  # frontier-side expansion axis
 
-                if strat == 0:  # bs1: expand frontier-nbr rows, bsearch fixed
+                if strat == 0:  # bs1: expand frontier rows, bsearch fixed
                     m2, x_ids, x_t = ops.expand(
-                        indptr_a, (nbr_a, t_a), fr_ids, d2, offset=off2
-                    )  # (B, D1, d2)
-                    m = m2 & fr_mask[..., None] & (x_t > a1) & (x_t <= u1)
+                        indptr_a, (nbr_a, t_a), fr_ids, d_a, offset=off_a
+                    )
+                    a1 = bound_at(it.window.after, lx)
+                    u1 = bound_at(it.window.until, lx)
+                    a2 = bound_at(it.window2.after, lx)
+                    u2 = bound_at(it.window2.until, lx)
+                    m = m2 & (x_t > a1) & (x_t <= u1)
                     for ref in it.skip_eq:
-                        m = m & (x_ids != node_at(ref, 2))
+                        m = m & (x_ids != node_at(ref, lx))
                     aa2 = jnp.maximum(a2, x_t) if it.ordered else a2
                     cnt = ops.count_id_in_window(
                         nbr_b,
                         t_b,
                         indptr_b,
-                        lift(fixed, 2),
+                        lift(fixed, lx),
                         jnp.where(m, x_ids, -1),
                         aa2,
                         u2,
                         n_iters,
                     )
-                    branch = jnp.sum(jnp.where(m, cnt, 0), axis=-1)  # (B, D1)
-                elif strat == 1:  # bs2: expand fixed row, bsearch frontier rows
+                    branch = jnp.sum(jnp.where(m, cnt, 0), axis=-1)
+                elif strat == 1:  # bs2: expand fixed row, bsearch frontier
                     m3, y_ids, y_t = ops.expand(
-                        indptr_b, (nbr_b, t_b), fixed, d3, offset=off3
-                    )  # (B, d3)
-                    y_ids2 = y_ids[:, None, :]
-                    y_t2 = y_t[:, None, :]
-                    mY = m3[:, None, :] & (y_t2 > a2) & (y_t2 <= u2)
+                        indptr_b, (nbr_b, t_b), fixed, d_b, offset=off_b
+                    )  # (B, DB) -> placed at axis k+1
+                    y_ids2 = mid_lift(y_ids, lx)
+                    y_t2 = mid_lift(y_t, lx)
+                    a1 = bound_at(it.window.after, lx)
+                    u1 = bound_at(it.window.until, lx)
+                    a2 = bound_at(it.window2.after, lx)
+                    u2 = bound_at(it.window2.until, lx)
+                    m_y = mid_lift(m3, lx) & (y_t2 > a2) & (y_t2 <= u2)
                     for ref in it.skip_eq:
-                        mY = mY & (y_ids2 != node_at(ref, 2))
+                        m_y = m_y & (y_ids2 != node_at(ref, lx))
                     uu1 = jnp.minimum(u1, y_t2 - 1) if it.ordered else u1
                     cnt = ops.count_id_in_window(
                         nbr_a,
                         t_a,
                         indptr_a,
-                        lift(fr_ids, 2),
-                        jnp.where(mY, y_ids2, -1),
+                        lift(fr_ids, lx),
+                        jnp.where(m_y, y_ids2, -1),
                         a1,
                         uu1,
                         n_iters,
                     )
-                    branch = jnp.sum(
-                        jnp.where(mY & fr_mask[..., None], cnt, 0), axis=-1
-                    )
-                else:  # pw: expand both sides, broadcast-compare (merge tile)
+                    branch = jnp.sum(jnp.where(m_y, cnt, 0), axis=-1)
+                else:  # pw: expand both sides, broadcast-compare merge tile
                     m2, x_ids, x_t = ops.expand(
-                        indptr_a, (nbr_a, t_a), fr_ids, d2, offset=off2
-                    )  # (B, D1, d2)
-                    mX = m2 & fr_mask[..., None] & (x_t > a1) & (x_t <= u1)
+                        indptr_a, (nbr_a, t_a), fr_ids, d_a, offset=off_a
+                    )
+                    a1 = bound_at(it.window.after, lx)
+                    u1 = bound_at(it.window.until, lx)
+                    m_x = m2 & (x_t > a1) & (x_t <= u1)
                     for ref in it.skip_eq:
-                        mX = mX & (x_ids != node_at(ref, 2))
+                        m_x = m_x & (x_ids != node_at(ref, lx))
                     m3, y_ids, y_t = ops.expand(
-                        indptr_b, (nbr_b, t_b), fixed, d3, offset=off3
-                    )  # (B, d3)
-                    yb = y_ids[:, None, None, :]  # (B,1,1,d3)
-                    yt = y_t[:, None, None, :]
+                        indptr_b, (nbr_b, t_b), fixed, d_b, offset=off_b
+                    )  # (B, DB) -> axis k+2
+                    yb = mid_lift(y_ids, lx + 1)
+                    yt = mid_lift(y_t, lx + 1)
+                    a2 = bound_at(it.window2.after, lx + 1)
+                    u2 = bound_at(it.window2.until, lx + 1)
                     pair = (
-                        mX[..., None]
-                        & m3[:, None, None, :]
+                        m_x[..., None]
+                        & mid_lift(m3, lx + 1)
                         & (x_ids[..., None] == yb)
-                        & (yt > a2[..., None])
-                        & (yt <= u2[..., None])
+                        & (yt > a2)
+                        & (yt <= u2)
                     )
                     if it.ordered:
                         pair = pair & (yt > x_t[..., None])
                     branch = jnp.sum(pair, axis=(-1, -2)).astype(jnp.int32)
-                count_env[it.name] = (branch, 1, fr_mask)
+                count_env[it.name] = (branch, k)
 
-            # ---- count stages ----------------------------------------
-            for st in plan.counts:
+            # ---- count stages -----------------------------------------
+            # a count evaluates at the max level among its node refs AND
+            # its window anchors (a window anchored per deeper branch
+            # makes the count vary per deeper assignment)
+            def win_level(st: Stage) -> int:
+                lvl = 0
+                for b in (st.window.after, st.window.until):
+                    if isinstance(b.anchor, StageT):
+                        lvl = max(lvl, ir.nodes[b.anchor.name].level)
+                return lvl
+
+            for st in ir.counts:
                 if st.op == "count_window":
                     nb = st.operand
                     base, lvl = node_env[nb.node.name]
+                    lvl = max(lvl, win_level(st))
                     indptr, _, _, t_sorted = self._rows(dg, nb.direction)
                     cnt = ops.count_window(
                         t_sorted,
                         indptr,
-                        base,
+                        lift(base, lvl),
                         bound_at(st.window.after, lvl),
                         bound_at(st.window.until, lvl),
                         n_iters,
                     )
-                    msk = mask_env.get(nb.node.name, (None,))[0]
-                    count_env[st.name] = (cnt, lvl, msk)
+                    count_env[st.name] = (cnt, lvl)
                 elif st.op == "count_edges":
                     base, lvl_s = node_env[st.edge_src.name]
                     dst_arr, lvl_d = node_env[st.edge_dst.name]
-                    lvl = max(lvl_s, lvl_d)
-                    if st is plan.ce_l1 and strat == 2:
+                    lvl = max(lvl_s, lvl_d, win_level(st))
+                    if st is ir.ce_pw and strat == 2:
                         # pairwise: compare frontier ids against the
                         # expanded in-row of the fixed destination
+                        d_b, off_b = dims[k + 1], offs[k + 1]
+                        lx = k + 1
                         indptr_i, nbr_i, t_i, _ = self._rows(dg, "in")
                         m3, y_ids, y_t = ops.expand(
-                            indptr_i, (nbr_i, t_i), dst_arr, d3, offset=off3
-                        )  # (B, d3) — in-neighbors of dst (= edge sources)
-                        aw = bound_at(st.window.after, 2)
-                        uw = bound_at(st.window.until, 2)
+                            indptr_i, (nbr_i, t_i), dst_arr, d_b, offset=off_b
+                        )  # (B, DB) — in-neighbors of dst (= edge sources)
+                        aw = bound_at(st.window.after, lx)
+                        uw = bound_at(st.window.until, lx)
+                        y2, yt2 = mid_lift(y_ids, lx), mid_lift(y_t, lx)
                         pair = (
-                            m3[:, None, :]
-                            & (lift(base, 2) == y_ids[:, None, :])
-                            & (y_t[:, None, :] > aw)
-                            & (y_t[:, None, :] <= uw)
+                            mid_lift(m3, lx)
+                            & (lift(base, lx) == y2)
+                            & (yt2 > aw)
+                            & (yt2 <= uw)
                         )
-                        cnt = jnp.sum(pair, axis=-1).astype(jnp.int32)  # (B, D1)
+                        cnt = jnp.sum(pair, axis=-1).astype(jnp.int32)
                     else:
                         indptr, nbr, t, _ = self._rows(dg, "out")
                         cnt = ops.count_id_in_window(
@@ -565,79 +901,97 @@ class CompiledPattern:
                             bound_at(st.window.until, lvl),
                             n_iters,
                         )
-                    mname = st.edge_src.name if lvl_s >= lvl_d else st.edge_dst.name
-                    msk = mask_env.get(mname, (None,))[0]
-                    count_env[st.name] = (cnt, lvl, msk)
+                    count_env[st.name] = (cnt, lvl)
                 elif st.op == "product":
-                    f1, f2 = st.factors
-                    c1, l1, _ = count_env[f1]
-                    c2, l2, _ = count_env[f2]
-                    if l1 != 0 or l2 != 0:
+                    f1_, f2_ = st.factors
+                    c1, _ = count_env[f1_]
+                    c2, _ = count_env[f2_]
+                    if c1.ndim != 1 or c2.ndim != 1:
                         raise NotImplementedError("product of scalar counts only")
-                    count_env[st.name] = (c1 * c2, 0, None)
+                    count_env[st.name] = (c1 * c2, 0)
 
-            cnt, lvl, msk = count_env[plan.emit.name]
-            if msk is not None:
-                cnt = jnp.where(msk, cnt, 0)
-            while cnt.ndim > 1:
-                cnt = cnt.sum(axis=-1)
-            return cnt.astype(jnp.int32)
+            # ---- emit: multiplicative for_all semantics ---------------
+            # total = emit value summed over every complete assignment of
+            # all frontier variables.  Counts are already zero at invalid
+            # slots of materialized axes (the -1 sentinel), so multiplying
+            # by every frontier mask is idempotent there and contributes
+            # the cross product over frontiers the emit never touched.
+            cnt, _ = count_env[ir.emit.name]
+            masks = [mask_env[f.name][0] for f in ir.frontiers]
+            rank = max([cnt.ndim] + [m.ndim for m in masks])
+            total = lift(cnt, rank - 1)  # axes are leading-aligned: lift
+            for m in masks:  # everything to a common rank before multiply
+                total = total * lift(m, rank - 1).astype(jnp.int32)
+            while total.ndim > 1:
+                total = total.sum(axis=-1)
+            return total.astype(jnp.int32)
 
         return kernel
 
-    def _kernel(self, strat: int, d1: int, d2: int, d3: int, branch=False) -> Callable:
-        key = (strat, d1, d2, d3, branch)
+    def _kernel(
+        self, strat: int, dims: Tuple[int, ...], branch=False
+    ) -> Callable:
+        key = (strat, dims, branch)
         if key not in self._kernels:
             self._kernels[key] = jax.jit(
-                self._build_kernel(strat, d1, d2, d3, branch)
+                self._build_kernel(strat, dims, branch)
             )
         return self._kernels[key]
 
     # ------------------------------------------------------------------
     # execution
     # ------------------------------------------------------------------
+    def _union_dims(self) -> set:
+        return {
+            i
+            for i, f in enumerate(self.ir.frontiers)
+            if isinstance(f.operand, SetExpr) and f.operand.op == "union"
+        }
+
     def _run_buckets(
         self, out, sel_all, src, dst, st, fr, frt, strat, reqs, classes, branch, seed_of
     ):
-        """Group rows by (strategy, bucket classes), run kernels, accumulate.
+        """Group rows by (strategy, per-level bucket classes), run kernels,
+        accumulate.
 
-        ``reqs``/``classes`` are (d1, d2, d3) requirement / class arrays;
-        class -1 means the dim is unused by that row's strategy.  In branch
-        mode, row results are segment-summed into ``out[seed_of[row]]``.
+        ``reqs``/``classes`` are per-dim requirement / class arrays over
+        (W1..Wk, DA, DB); class -1 means the dim is unused by that row's
+        strategy.  In branch mode, row results are segment-summed into
+        ``out[seed_of[row]]``.
         """
+        n_levels = len(self.ir.frontiers)
+        n_dims = n_levels + 2
+        assert len(reqs) == n_dims and len(classes) == n_dims
         nL = len(self.ladder)
         bmax = self.ladder[-1]
-        d1r, d2r, d3r = reqs
-        c1, c2, c3 = classes
-        has_union = (
-            self.plan.forall is not None
-            and isinstance(self.plan.forall.operand, SetExpr)
-            and self.plan.forall.operand.op == "union"
-        )
-        keys = np.stack([strat, c1, c2, c3], axis=1)
+        union_dims = self._union_dims()
+        keys = np.stack([strat] + list(classes), axis=1)
         uniq = np.unique(keys, axis=0)
-        for sk, k1, k2, k3 in uniq:
-            sel = sel_all[
-                (strat == sk) & (c1 == k1) & (c2 == k2) & (c3 == k3)
-            ]
-
-            def _dim(kc, req, allow_pow2_tail=False):
+        for key in uniq:
+            sk, kcs = int(key[0]), key[1:]
+            sel = sel_all[np.all(keys == key, axis=1)]
+            dims: List[int] = []
+            sweeps: List[int] = []
+            for j, (kc, req) in enumerate(zip(kcs, reqs)):
                 if kc < 0:
-                    return 1, 1
-                if kc >= nL:
+                    dims.append(1)
+                    sweeps.append(1)
+                elif kc >= nL:
                     mx = int(req[sel].max())
-                    if allow_pow2_tail:  # one-off bucket (unions: no sweeps)
-                        return _pow2ceil(mx), 1
-                    return bmax, math.ceil(mx / bmax)
-                return self.ladder[kc], 1
-
-            d1, sweeps1 = _dim(k1, d1r, allow_pow2_tail=has_union)
-            d2, sweeps2 = _dim(k2, d2r)
-            d3, sweeps3 = _dim(k3, d3r)
-            fn = self._kernel(int(sk), d1, d2, d3, branch)
-            per_row = max(1, d1 * max(d2 * d3, d2, d3))
+                    if j in union_dims:  # one-off bucket (unions: no sweeps)
+                        dims.append(_pow2ceil(mx))
+                        sweeps.append(1)
+                    else:
+                        dims.append(bmax)
+                        sweeps.append(math.ceil(mx / bmax))
+                else:
+                    dims.append(int(self.ladder[kc]))
+                    sweeps.append(1)
+            fn = self._kernel(sk, tuple(dims), branch)
+            per_row = max(1, int(np.prod(dims, dtype=np.int64)))
             bchunk = max(32, self.batch_elem_cap // per_row)
             bchunk = min(bchunk, _pow2ceil(len(sel)))
+            n_sweep = int(np.prod(sweeps, dtype=np.int64))
             for s0 in range(0, len(sel), bchunk):
                 idx = sel[s0 : s0 + bchunk]
                 want = bchunk if len(sel) - s0 >= bchunk else _pow2ceil(
@@ -656,21 +1010,22 @@ class CompiledPattern:
                     ff = np.full(want, -1, np.int32)
                     fft = np.zeros(want, np.int32)
                 acc = np.zeros(want, dtype=np.int64)
-                for o1 in range(sweeps1):
-                    for o2 in range(sweeps2):
-                        for o3 in range(sweeps3):
-                            res = fn(
-                                self.dg,
-                                jnp.asarray(ss),
-                                jnp.asarray(dd_),
-                                jnp.asarray(tt),
-                                jnp.asarray(ff),
-                                jnp.asarray(fft),
-                                jnp.int32(o1 * d1),
-                                jnp.int32(o2 * d2),
-                                jnp.int32(o3 * d3),
-                            )
-                            acc += np.asarray(res, dtype=np.int64)
+                for combo in itertools.product(*(range(s) for s in sweeps)):
+                    offs = tuple(
+                        jnp.int32(o * dim) for o, dim in zip(combo, dims)
+                    )
+                    res = fn(
+                        self.dg,
+                        jnp.asarray(ss),
+                        jnp.asarray(dd_),
+                        jnp.asarray(tt),
+                        jnp.asarray(ff),
+                        jnp.asarray(fft),
+                        offs,
+                    )
+                    acc += np.asarray(res, dtype=np.int64)
+                self.stats["kernel_calls"] += n_sweep
+                self.stats["padded_elements"] += want * per_row * n_sweep
                 acc = acc[: len(idx)]
                 if branch:
                     np.add.at(out, seed_of[idx], acc)
@@ -680,12 +1035,13 @@ class CompiledPattern:
     def _host_bound(self, tb: TimeBound, st: np.ndarray) -> np.ndarray:
         if tb.anchor is None:
             return np.full(st.shape, tb.offset, dtype=np.int64)
-        assert isinstance(tb.anchor, _SeedT), "for_all anchors are seed-level"
+        assert isinstance(tb.anchor, _SeedT), "level-1 anchors are seed-level"
         return st.astype(np.int64) + tb.offset
 
     def _expand_branches(self, src, dst, st):
-        """Host-side frontier expansion for hub seeds (numpy CSR slices)."""
-        fa = self.plan.forall
+        """Host-side level-1 frontier expansion for hub seeds (numpy CSR
+        slices)."""
+        fa = self.ir.frontiers[0]
         opn = fa.operand
         g = self.g
         indptr = g.out_indptr if opn.direction == "out" else g.in_indptr
@@ -710,6 +1066,7 @@ class CompiledPattern:
 
     def mine(self, seed_eids: Optional[np.ndarray] = None) -> np.ndarray:
         g = self.g
+        ir = self.ir
         if seed_eids is None:
             seed_eids = np.arange(g.n_edges, dtype=np.int32)
         seed_eids = np.asarray(seed_eids, dtype=np.int32)
@@ -718,19 +1075,17 @@ class CompiledPattern:
         if n == 0:
             return out
 
-        d1r = self._d1_req(seed_eids)
-        d2r = self._d2_req(seed_eids)
-        d3r = self._d3_req(seed_eids)
-        d1p, d2p, d3p = self._pad(d1r), self._pad(d2r), self._pad(d3r)
-        strat, cost = self._strategies(d1p, d2p, d3p)
-
-        has_inter = self.plan.intersect is not None
-        has_ce = self.plan.ce_l1 is not None
-        branch_ok = (
-            (has_inter or has_ce)
-            and self.plan.forall is not None
-            and isinstance(self.plan.forall.operand, Neigh)
+        k = len(ir.frontiers)
+        w_reqs = self._frontier_reqs(seed_eids)
+        d_a_req, d_b_req = self._intersect_reqs(seed_eids)
+        w_pads = [self._pad(r) for r in w_reqs]
+        strat, cost = self._pass_strategy(
+            w_pads, self._pad(d_a_req), self._pad(d_b_req)
         )
+
+        has_inter = ir.intersect is not None
+        has_ce = ir.ce_pw is not None
+        branch_ok = k >= 1 and isinstance(ir.frontiers[0].operand, Neigh)
         go_branch = (
             (cost > BRANCH_DECOMP_COST)
             if branch_ok
@@ -744,11 +1099,13 @@ class CompiledPattern:
         # ---- normal (bulk) path --------------------------------------
         norm = np.nonzero(~go_branch)[0]
         if len(norm):
-            use2 = has_inter & np.isin(strat, (0, 2))
-            use3 = (has_inter & np.isin(strat, (1, 2))) | (has_ce & (strat == 2))
-            c1 = _ladder_class(d1r, self.ladder)
-            c2 = np.where(use2, _ladder_class(d2r, self.ladder), -1)
-            c3 = np.where(use3, _ladder_class(d3r, self.ladder), -1)
+            use_a = has_inter & np.isin(strat, (0, 2))
+            use_b = (has_inter & np.isin(strat, (1, 2))) | (
+                has_ce & (strat == 2)
+            )
+            cls = [_ladder_class(r, self.ladder)[norm] for r in w_reqs]
+            c_a = np.where(use_a, _ladder_class(d_a_req, self.ladder), -1)
+            c_b = np.where(use_b, _ladder_class(d_b_req, self.ladder), -1)
             self._run_buckets(
                 out,
                 norm,
@@ -758,13 +1115,13 @@ class CompiledPattern:
                 None,
                 None,
                 strat[norm],
-                (d1r, d2r, d3r),
-                (c1[norm], c2[norm], c3[norm]),
+                w_reqs + [d_a_req, d_b_req],
+                cls + [c_a[norm], c_b[norm]],
                 branch=False,
                 seed_of=None,
             )
 
-        # ---- hub tail: per-branch decomposition ----------------------
+        # ---- hub tail: per-branch decomposition, re-bucketed per level
         hub = np.nonzero(go_branch)[0]
         if len(hub):
             item_seed_l, fr, frt = self._expand_branches(
@@ -772,38 +1129,59 @@ class CompiledPattern:
             )
             if len(fr):
                 seed_of = hub[item_seed_l]
-                # per-item requirements use ACTUAL branch degrees
+                src_b = src[seed_of]
+                dst_b = dst[seed_of]
+                self.stats["branch_items"] += len(fr)
+                ones = np.ones(len(fr), dtype=np.int64)
+                # per-item requirements use ACTUAL branch degrees at every
+                # level below the decomposed frontier
+                wb_reqs: List[np.ndarray] = [ones]
+                for f in ir.frontiers[1:]:
+                    req = None
+                    for side in _expand_sides(f.operand):
+                        key, v = self._deg_vals(side.direction)
+                        r = self._req_itemwise(
+                            side.node, key, v, fr, src_b, dst_b
+                        )
+                        req = r if req is None else np.maximum(req, r)
+                    wb_reqs.append(req)
                 if has_inter:
-                    a, b = self.plan.intersect.operands
-                    deg_a = (
-                        self.g.out_deg if a.direction == "out" else self.g.in_deg
-                    )
-                    bd2r = deg_a[fr].astype(np.int64)
-                    bd3r = d3r[seed_of]
-                else:  # ce_l1
-                    bd2r = np.ones(len(fr), dtype=np.int64)
-                    bd3r = d3r[seed_of]
-                bstrat = self._branch_strategies(self._pad(bd2r), self._pad(bd3r))
-                use2b = has_inter & np.isin(bstrat, (0, 2))
-                use3b = (has_inter & np.isin(bstrat, (1, 2))) | (
+                    a, b = ir.intersect.operands
+                    ka, va = self._deg_vals(a.direction)
+                    bd_a = self._req_itemwise(a.node, ka, va, fr, src_b, dst_b)
+                    bd_b = d_b_req[seed_of]
+                elif has_ce:
+                    bd_a = ones
+                    bd_b = d_b_req[seed_of]
+                else:
+                    bd_a = ones
+                    bd_b = ones
+                bstrat = self._branch_strategies(
+                    [self._pad(r) for r in wb_reqs[1:]],
+                    self._pad(bd_a),
+                    self._pad(bd_b),
+                )
+                use_a = has_inter & np.isin(bstrat, (0, 2))
+                use_b = (has_inter & np.isin(bstrat, (1, 2))) | (
                     has_ce & (bstrat == 2)
                 )
-                bc2 = np.where(use2b, _ladder_class(bd2r, self.ladder), -1)
-                bc3 = np.where(use3b, _ladder_class(bd3r, self.ladder), -1)
-                bc1 = np.full(len(fr), -1, dtype=np.int32)
-                bd1r = np.ones(len(fr), dtype=np.int64)
+                bcls = [np.full(len(fr), -1, dtype=np.int32)] + [
+                    _ladder_class(r, self.ladder) for r in wb_reqs[1:]
+                ]
+                bc_a = np.where(use_a, _ladder_class(bd_a, self.ladder), -1)
+                bc_b = np.where(use_b, _ladder_class(bd_b, self.ladder), -1)
                 items = np.arange(len(fr))
                 self._run_buckets(
                     out,
                     items,
-                    src[seed_of],
-                    dst[seed_of],
+                    src_b,
+                    dst_b,
                     st[seed_of],
                     fr,
                     frt,
                     bstrat,
-                    (bd1r, bd2r, bd3r),
-                    (bc1, bc2, bc3),
+                    wb_reqs + [bd_a, bd_b],
+                    bcls + [bc_a, bc_b],
                     branch=True,
                     seed_of=seed_of,
                 )

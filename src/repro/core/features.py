@@ -63,9 +63,16 @@ def featurize(
     patterns: Optional[Sequence[str]] = None,
     backend: str = "compiled",
 ) -> Tuple[np.ndarray, Tuple[str, ...]]:
-    """Full feature matrix: base transaction columns + mined pattern counts."""
+    """Full feature matrix: base transaction columns + mined pattern counts.
+
+    `patterns` may be an explicit sequence of pattern names or a feature
+    group name (e.g. ``"full"``, ``"deep"``, ``"full_deep"`` — the last
+    adds the depth-3+ typologies the stage-graph compiler unlocked).
+    """
     if patterns is None:
         patterns = feature_pattern_set("full")
+    elif isinstance(patterns, str):
+        patterns = feature_pattern_set(patterns)
     base = base_features(g)
     if len(patterns) == 0:
         return base, BASE_COLUMNS

@@ -30,6 +30,7 @@ __all__ = [
     "count_id_in_window",
     "count_window",
     "expand",
+    "dedup_ids",
     "n_iters_for",
 ]
 
@@ -64,10 +65,16 @@ def lower_bound(flat, lo, hi, q, n_iters: int):
 
 
 def count_t_in(t_flat, start, end, after, until, n_iters: int):
-    """# of times in t_flat[start:end) with  after < t <= until."""
+    """# of times in t_flat[start:end) with  after < t <= until.
+
+    Clamped at 0: callers clamp per-branch windows (e.g. the `ordered`
+    intersect lowers to until=min(u, t2-1)), which can invert the window
+    (until < after); the rank difference would then go negative by the
+    number of edges inside the inverted range.
+    """
     a = lower_bound(t_flat, start, end, jnp.asarray(after, jnp.int32) + 1, n_iters)
     b = lower_bound(t_flat, start, end, jnp.asarray(until, jnp.int32) + 1, n_iters)
-    return b - a
+    return jnp.maximum(b - a, 0)
 
 
 def count_id_in_window(
@@ -105,6 +112,25 @@ def count_window(t_sorted_flat, indptr, node, after, until, n_iters: int):
     end = indptr[safe + 1]
     cnt = count_t_in(t_sorted_flat, start, end, after, until, n_iters)
     return jnp.where(node >= 0, cnt, 0)
+
+
+def dedup_ids(ids, ts, mask, invalid):
+    """Keep one representative per id along the last axis (node-set dedup).
+
+    Sorts masked-out slots to the end (as `invalid`), compares neighbors,
+    and returns (ids, ts, mask) with duplicates masked off.  Filter the
+    mask *before* calling so each id's surviving representative satisfies
+    the window — union ``for_all`` frontiers lower onto this.
+    """
+    key = jnp.where(mask, ids, invalid)
+    order = jnp.argsort(key, axis=-1)
+    ids = jnp.take_along_axis(key, order, axis=-1)
+    ts = jnp.take_along_axis(ts, order, axis=-1)
+    prev = jnp.concatenate(
+        [jnp.full_like(ids[..., :1], -1), ids[..., :-1]], axis=-1
+    )
+    mask = (ids != invalid) & (ids != prev)
+    return ids, ts, mask
 
 
 def expand(

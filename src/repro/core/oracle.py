@@ -9,33 +9,47 @@ Two roles (both from the paper's evaluation):
    (GFP) the paper benchmarks against in Figs. 6-10.
 
 It interprets the *same* spec the compiler lowers, so pattern semantics are
-defined once.
+defined once.  The interpreter handles arbitrary stage DAGs: ``for_all``
+frontiers are enumerated as a nested cross product in topological order
+(chained frontiers narrow per branch; independent frontiers multiply), and
+the emitted total is the emit stage's per-assignment value summed over
+every complete assignment of all frontier variables — the same
+multiplicative semantics the compiled kernels realize with masked
+broadcasting.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.spec import (
     Neigh,
-    NodeRef,
     PatternSpec,
     SetExpr,
     Stage,
     StageT,
     TimeBound,
+    Window,
     _SeedT,
 )
 from repro.graph.csr import TemporalGraph
 
 __all__ = ["GFPReference"]
 
+# assignment environment: name -> (node id, per-branch edge time or None)
+_Env = Dict[str, Tuple[int, Optional[int]]]
+
 
 class GFPReference:
     def __init__(self, spec: PatternSpec, graph: TemporalGraph):
         self.spec = spec
         self.g = graph
+        schedule = spec.topo_order()
+        self.frontiers: List[Stage] = [
+            st for st in schedule if st.op == "for_all"
+        ]
+        self._by_name = {st.name: st for st in spec.stages}
 
     # -- adjacency helpers (numpy row views; row sorted by (id, t)) -------
     def _row(self, node: int, direction: str) -> Tuple[np.ndarray, np.ndarray]:
@@ -57,146 +71,127 @@ class GFPReference:
             )
         return out
 
-    # ------------------------------------------------------------------
+    # -- window evaluation under an assignment ---------------------------
+    def _bound(self, tb: TimeBound, env: _Env, t: int) -> int:
+        if tb.anchor is None:
+            return tb.offset
+        if isinstance(tb.anchor, _SeedT):
+            return t + tb.offset
+        assert isinstance(tb.anchor, StageT)
+        tw = env[tb.anchor.name][1]
+        assert tw is not None, "StageT anchor on a union frontier"
+        return tw + tb.offset
+
+    def _in_win(self, win: Window, te: int, env: _Env, t: int) -> bool:
+        return self._bound(win.after, env, t) < te <= self._bound(win.until, env, t)
+
+    # -- frontier enumeration (nested cross product in topo order) -------
+    def _items(
+        self, st: Stage, env: _Env, t: int
+    ) -> List[Tuple[int, Optional[int]]]:
+        opn = st.operand
+        skips = {env[r.name][0] for r in st.skip_eq}
+        items: List[Tuple[int, Optional[int]]] = []
+        if isinstance(opn, SetExpr) and opn.op == "union":
+            seen = set()
+            for nb in (opn.left, opn.right):
+                ns, ts = self._row(env[nb.node.name][0], nb.direction)
+                for x, te in zip(ns, ts):
+                    x, te = int(x), int(te)
+                    if not self._in_win(st.window, te, env, t):
+                        continue
+                    if x in skips or x in seen:
+                        continue
+                    seen.add(x)
+                    items.append((x, None))
+        elif isinstance(opn, SetExpr) and opn.op == "difference":
+            rset = set(
+                int(x)
+                for x in self._row(
+                    env[opn.right.node.name][0], opn.right.direction
+                )[0]
+            )
+            ns, ts = self._row(env[opn.left.node.name][0], opn.left.direction)
+            for x, te in zip(ns, ts):
+                x, te = int(x), int(te)
+                if not self._in_win(st.window, te, env, t):
+                    continue
+                if x in skips or x in rset:
+                    continue
+                items.append((x, te))
+        else:
+            ns, ts = self._row(env[opn.node.name][0], opn.direction)
+            for x, te in zip(ns, ts):
+                x, te = int(x), int(te)
+                if not self._in_win(st.window, te, env, t):
+                    continue
+                if x in skips:
+                    continue
+                items.append((x, te))
+        return items
+
+    def _assignments(self, i: int, env: _Env, t: int) -> Iterator[_Env]:
+        if i == len(self.frontiers):
+            yield env
+            return
+        st = self.frontiers[i]
+        for x, te in self._items(st, env, t):
+            env2 = dict(env)
+            env2[st.name] = (x, te)
+            yield from self._assignments(i + 1, env2, t)
+
+    # -- per-assignment stage evaluation ----------------------------------
+    def _stage_value(self, st: Stage, env: _Env, t: int) -> int:
+        if st.op == "for_all":
+            return 1  # a complete assignment instantiates each frontier once
+        if st.op == "intersect":
+            a, b = st.operands
+            w = env[a.node.name][0]
+            fixed = env[b.node.name][0]
+            skips = {env[r.name][0] for r in st.skip_eq}
+            an, at = self._row(w, a.direction)
+            bn, bt = self._row(fixed, b.direction)
+            total = 0
+            for x, t1 in zip(an, at):
+                x, t1 = int(x), int(t1)
+                if not self._in_win(st.window, t1, env, t):
+                    continue
+                if x in skips:
+                    continue
+                for y, t2 in zip(bn, bt):
+                    y, t2 = int(y), int(t2)
+                    if y != x:
+                        continue
+                    if not self._in_win(st.window2, t2, env, t):
+                        continue
+                    if st.ordered and not (t2 > t1):
+                        continue
+                    total += 1
+            return total
+        if st.op == "count_window":
+            nb = st.operand
+            _, ts = self._row(env[nb.node.name][0], nb.direction)
+            return sum(1 for te in ts if self._in_win(st.window, int(te), env, t))
+        if st.op == "count_edges":
+            sval = env[st.edge_src.name][0]
+            dval = env[st.edge_dst.name][0]
+            ns, ts = self._row(sval, "out")
+            return sum(
+                1
+                for x, te in zip(ns, ts)
+                if int(x) == dval and self._in_win(st.window, int(te), env, t)
+            )
+        if st.op == "product":
+            f1, f2 = st.factors
+            return self._stage_value(
+                self._by_name[f1], env, t
+            ) * self._stage_value(self._by_name[f2], env, t)
+        raise ValueError(st.op)  # pragma: no cover
+
     def _mine_seed(self, u: int, v: int, t: int) -> int:
-        spec = self.spec
-        nodes: Dict[str, int] = {"seed.src": u, "seed.dst": v}
-        # frontier: list of (node, time or None)
-        frontier: Optional[List[Tuple[int, Optional[int]]]] = None
-        fr_name: Optional[str] = None
-        counts: Dict[str, object] = {}
-
-        def bound(tb: TimeBound, tw: Optional[int]) -> int:
-            if tb.anchor is None:
-                return tb.offset
-            if isinstance(tb.anchor, _SeedT):
-                return t + tb.offset
-            assert isinstance(tb.anchor, StageT)
-            assert tw is not None, "StageT anchor on union frontier"
-            return tw + tb.offset
-
-        def in_win(win, te: int, tw: Optional[int]) -> bool:
-            return bound(win.after, tw) < te <= bound(win.until, tw)
-
-        def skip_vals(refs, w: Optional[int]):
-            vals = []
-            for r in refs:
-                if r.name == fr_name:
-                    vals.append(w)
-                else:
-                    vals.append(nodes[r.name])
-            return vals
-
-        for st in spec.stages:
-            if st.op == "for_all":
-                opn = st.operand
-                items: List[Tuple[int, Optional[int]]] = []
-                if isinstance(opn, SetExpr) and opn.op == "union":
-                    seen = set()
-                    for nb in (opn.left, opn.right):
-                        ns, ts = self._row(nodes[nb.node.name], nb.direction)
-                        for x, te in zip(ns, ts):
-                            x, te = int(x), int(te)
-                            if not in_win(st.window, te, None):
-                                continue
-                            if x in (nodes[r.name] for r in st.skip_eq):
-                                continue
-                            if x not in seen:
-                                seen.add(x)
-                                items.append((x, None))
-                elif isinstance(opn, SetExpr) and opn.op == "difference":
-                    rset = set(
-                        int(x)
-                        for x in self._row(
-                            nodes[opn.right.node.name], opn.right.direction
-                        )[0]
-                    )
-                    ns, ts = self._row(
-                        nodes[opn.left.node.name], opn.left.direction
-                    )
-                    for x, te in zip(ns, ts):
-                        x, te = int(x), int(te)
-                        if not in_win(st.window, te, None):
-                            continue
-                        if x in (nodes[r.name] for r in st.skip_eq):
-                            continue
-                        if x in rset:
-                            continue
-                        items.append((x, te))
-                else:
-                    ns, ts = self._row(nodes[opn.node.name], opn.direction)
-                    for x, te in zip(ns, ts):
-                        x, te = int(x), int(te)
-                        if not in_win(st.window, te, None):
-                            continue
-                        if x in (nodes[r.name] for r in st.skip_eq):
-                            continue
-                        items.append((x, te))
-                frontier = items
-                fr_name = st.name
-                counts[st.name] = len(items)
-            elif st.op == "intersect":
-                a, b = st.operands
-                if a.node.name in ("seed.src", "seed.dst"):
-                    fr = [(nodes[a.node.name], None)]
-                else:
-                    assert a.node.name == fr_name
-                    fr = frontier
-                fixed = nodes[b.node.name]
-                bn, bt = self._row(fixed, b.direction)
-                total = 0
-                for w, tw in fr:
-                    an, at = self._row(w, a.direction)
-                    for x, t1 in zip(an, at):
-                        x, t1 = int(x), int(t1)
-                        if not in_win(st.window, t1, tw):
-                            continue
-                        if x in skip_vals(st.skip_eq, w):
-                            continue
-                        for y, t2 in zip(bn, bt):
-                            y, t2 = int(y), int(t2)
-                            if y != x:
-                                continue
-                            if not in_win(st.window2, t2, tw):
-                                continue
-                            if st.ordered and not (t2 > t1):
-                                continue
-                            total += 1
-                counts[st.name] = total
-            elif st.op == "count_window":
-                nb = st.operand
-                if nb.node.name == fr_name:
-                    tot = 0
-                    for w, tw in frontier:
-                        _, ts = self._row(w, nb.direction)
-                        tot += sum(
-                            1 for te in ts if in_win(st.window, int(te), tw)
-                        )
-                    counts[st.name] = tot
-                else:
-                    _, ts = self._row(nodes[nb.node.name], nb.direction)
-                    counts[st.name] = sum(
-                        1 for te in ts if in_win(st.window, int(te), None)
-                    )
-            elif st.op == "count_edges":
-                srcs: List[Tuple[int, Optional[int]]]
-                if st.edge_src.name == fr_name:
-                    srcs = frontier
-                else:
-                    srcs = [(nodes[st.edge_src.name], None)]
-                if st.edge_dst.name == fr_name:
-                    raise NotImplementedError("frontier as count_edges dst")
-                dval = nodes[st.edge_dst.name]
-                tot = 0
-                for w, tw in srcs:
-                    ns, ts = self._row(w, "out")
-                    for x, te in zip(ns, ts):
-                        if int(x) == dval and in_win(st.window, int(te), tw):
-                            tot += 1
-                counts[st.name] = tot
-            elif st.op == "product":
-                f1, f2 = st.factors
-                counts[st.name] = counts[f1] * counts[f2]
-            else:  # pragma: no cover
-                raise ValueError(st.op)
-        return int(counts[spec.emit_stage.name])
+        emit = self.spec.emit_stage
+        base: _Env = {"seed.src": (u, None), "seed.dst": (v, None)}
+        total = 0
+        for env in self._assignments(0, base, t):
+            total += self._stage_value(emit, env, t)
+        return int(total)

@@ -180,6 +180,101 @@ def cycle4(w: int) -> PatternSpec:
     )
 
 
+def cycle5(w: int) -> PatternSpec:
+    """u->v->w->x->y->u, ordered, all inside (t, t+W] — a chained
+    two-frontier program (w, x) closed by an intersect; the depth the
+    fixed-shape compiler could not express."""
+    return PatternSpec(
+        "cycle5",
+        stages=(
+            Stage(
+                "w",
+                "for_all",
+                operand=Neigh(SEED_DST, "out"),
+                skip_eq=(SEED_SRC, SEED_DST),
+                window=Window.after_seed(w),
+            ),
+            Stage(
+                "x",
+                "for_all",
+                operand=Neigh(NodeRef("w"), "out"),
+                skip_eq=(SEED_SRC, SEED_DST, NodeRef("w")),
+                window=Window(TimeBound(StageT("w"), 0), TimeBound(SEED_T, w)),
+            ),
+            Stage(
+                "close",
+                "intersect",
+                operands=(Neigh(NodeRef("x"), "out"), Neigh(SEED_SRC, "in")),
+                skip_eq=(SEED_SRC, SEED_DST, NodeRef("w"), NodeRef("x")),
+                window=Window(TimeBound(StageT("x"), 0), TimeBound(SEED_T, w)),
+                window2=Window(TimeBound(SEED_T, 0), TimeBound(SEED_T, w)),
+                ordered=True,
+                emit=True,
+            ),
+        ),
+    )
+
+
+def peel_chain(w: int) -> PatternSpec:
+    """Layered peeling: funds forwarded hop by hop, u->v->m1->m2->(moves
+    on), each leg after its own predecessor and all inside (t, t+W].  Two
+    chained frontiers plus a leaf-level windowed-degree count — a depth-3
+    pattern (the onward edge is three hops past the seed receiver)."""
+    return PatternSpec(
+        "peel_chain",
+        stages=(
+            Stage(
+                "m1",
+                "for_all",
+                operand=Neigh(SEED_DST, "out"),
+                skip_eq=(SEED_SRC, SEED_DST),
+                window=Window.after_seed(w),
+            ),
+            Stage(
+                "m2",
+                "for_all",
+                operand=Neigh(NodeRef("m1"), "out"),
+                skip_eq=(SEED_SRC, SEED_DST, NodeRef("m1")),
+                window=Window(TimeBound(StageT("m1"), 0), TimeBound(SEED_T, w)),
+            ),
+            Stage(
+                "fwd",
+                "count_window",
+                operand=Neigh(NodeRef("m2"), "out"),
+                window=Window(TimeBound(StageT("m2"), 0), TimeBound(SEED_T, w)),
+                emit=True,
+            ),
+        ),
+    )
+
+
+def fan_in_chain(w: int) -> PatternSpec:
+    """Placement sandwich: many sources scatter into u before the seed
+    (s), u forwards to v (the seed edge), and v scatters onward after it
+    (d).  Two *independent* frontiers — the emitted count is their cross
+    product, the multiplicative for_all semantics."""
+    return PatternSpec(
+        "fan_in_chain",
+        stages=(
+            Stage(
+                "s",
+                "for_all",
+                operand=Neigh(SEED_SRC, "in"),
+                skip_eq=(SEED_DST,),
+                window=Window.before_seed(w),
+            ),
+            Stage(
+                "d",
+                "for_all",
+                operand=Neigh(SEED_DST, "out"),
+                skip_eq=(SEED_SRC,),
+                window=Window.after_seed(w),
+                emit=True,
+            ),
+        ),
+    )
+
+
 def scatter_gather(w: int) -> PatternSpec:
     """Seed edge = one gather leg (mid u -> sink v).  Stage s finds scatter
     sources; the intersect counts sibling mid chains s->x->v whose gather
@@ -298,6 +393,9 @@ _BUILDERS = {
     "cycle3": cycle3,
     "cycle3_fuzzy": cycle3_fuzzy,
     "cycle4": cycle4,
+    "cycle5": cycle5,
+    "peel_chain": peel_chain,
+    "fan_in_chain": fan_in_chain,
     "scatter_gather": scatter_gather,
     "stack": stack,
     "reciprocal": reciprocal,
@@ -315,13 +413,17 @@ def build_pattern(name: str, window: int) -> PatternSpec:
 
 
 def feature_pattern_set(kind: str = "full") -> tuple:
-    """Feature groups matching the paper's Table 2 columns."""
+    """Feature groups matching the paper's Table 2 columns, plus the
+    depth-3+ typologies the stage-graph IR unlocked ("deep")."""
     groups = {
         "fan": ("fan_in", "fan_out"),
         "degree": ("deg_in", "deg_out"),
         "cycle": ("cycle2", "cycle3", "cycle4"),
         "sg": ("scatter_gather", "stack"),
+        "deep": ("cycle5", "peel_chain", "fan_in_chain"),
     }
     if kind == "full":
         return groups["fan"] + groups["degree"] + groups["cycle"] + groups["sg"]
+    if kind == "full_deep":
+        return feature_pattern_set("full") + groups["deep"]
     return groups[kind]

@@ -26,6 +26,16 @@ from the seed time (``SEED_T``), from the *per-branch* time of an earlier
 stage (``StageT``), or unbounded.  Per-branch anchors express partial
 orders ("gather after its own scatter") without imposing a global edge
 order — the O(n!) enumeration the paper eliminates.
+
+Dataflow semantics: stages form a **DAG** (references may appear in any
+listing order; the compiler topologically schedules them, and a cyclic
+dataflow is a validation error).  ``for_all`` stages may *chain* — a
+frontier can enumerate the neighborhood of an earlier frontier variable —
+which is how deep typologies (5-cycles, layered peel chains) are written.
+Counting is multiplicative over frontiers: the emitted value is the emit
+stage's per-assignment count summed over every complete assignment of all
+``for_all`` variables, so independent frontiers contribute a cross
+product (the depth-k generalization of the ``product`` stage).
 """
 from __future__ import annotations
 
@@ -170,15 +180,25 @@ class PatternSpec:
         object.__setattr__(self, "stages", tuple(self.stages))
         self.validate()
 
-    # -- static validation (compiler front-end, paper §6) -----------------
+    # -- static validation (the compiler's *validate* pass, paper §6) -----
+    #
+    # Validation is order-independent: a stage may reference any other
+    # stage in the DAG regardless of listing position.  What must hold:
+    # the per-op operand shape, that node references resolve to a seed
+    # endpoint or a for_all stage, that time anchors resolve to a for_all
+    # stage (only frontiers carry per-branch times), and that the induced
+    # dataflow graph is acyclic (the compiler schedules it topologically).
     def validate(self) -> None:
-        bound = {"seed.src", "seed.dst"}
-        names = set()
+        seeds = {"seed.src", "seed.dst"}
+        names: List[str] = []
+        for st in self.stages:
+            if st.name in names or st.name in seeds:
+                raise ValueError(f"duplicate stage name {st.name!r}")
+            names.append(st.name)
+        name_set = set(names)
+        forall_names = {st.name for st in self.stages if st.op == "for_all"}
         emits = 0
         for st in self.stages:
-            if st.name in names or st.name in bound:
-                raise ValueError(f"duplicate stage name {st.name!r}")
-            names.add(st.name)
             refs: List[NodeRef] = []
             if st.op == "for_all":
                 if st.operand is None:
@@ -189,7 +209,8 @@ class PatternSpec:
                     else [st.operand]
                 )
                 refs += [n.node for n in ns]
-                bound.add(st.name)
+                if any(n.node.name == st.name for n in ns):
+                    raise ValueError(f"{st.name}: cyclic dataflow (self reference)")
             elif st.op == "intersect":
                 if st.operands is None:
                     raise ValueError(f"{st.name}: intersect needs operands")
@@ -207,23 +228,83 @@ class PatternSpec:
                 if st.factors is None:
                     raise ValueError(f"{st.name}: product needs factors")
                 for f in st.factors:
-                    if f not in names:
-                        raise ValueError(f"{st.name}: factor {f!r} not defined yet")
+                    if f not in name_set:
+                        raise ValueError(f"{st.name}: factor {f!r} not a stage")
             else:
                 raise ValueError(f"{st.name}: unknown op {st.op!r}")
             for r in refs + list(st.skip_eq):
-                if r.name not in bound:
+                if r.name not in seeds and r.name not in forall_names:
                     raise ValueError(
                         f"{st.name}: reference to unbound node {r.name!r}"
                     )
             for b in (st.window.after, st.window.until, st.window2.after, st.window2.until):
-                if isinstance(b.anchor, StageT) and b.anchor.name not in bound | names:
+                if isinstance(b.anchor, StageT) and b.anchor.name not in forall_names:
                     raise ValueError(
                         f"{st.name}: time anchor on undefined stage {b.anchor.name!r}"
                     )
             emits += int(st.emit)
         if emits != 1:
             raise ValueError(f"pattern {self.name!r}: exactly one stage must emit")
+        self.topo_order()  # raises on cyclic dataflow
+
+    def dependencies(self, st: Stage) -> Tuple[str, ...]:
+        """Stage names `st` reads (dataflow edges; seed refs excluded)."""
+        deps: List[str] = []
+
+        def add(name: str) -> None:
+            if name not in ("seed.src", "seed.dst") and name not in deps:
+                deps.append(name)
+
+        refs: List[NodeRef] = list(st.skip_eq)
+        if st.op == "for_all":
+            ns = (
+                [st.operand.left, st.operand.right]
+                if isinstance(st.operand, SetExpr)
+                else [st.operand]
+            )
+            refs += [n.node for n in ns]
+        elif st.op == "intersect":
+            refs += [st.operands[0].node, st.operands[1].node]
+        elif st.op == "count_edges":
+            refs += [st.edge_src, st.edge_dst]
+        elif st.op == "count_window":
+            refs += [st.operand.node]
+        elif st.op == "product":
+            for f in st.factors:
+                add(f)
+        for r in refs:
+            add(r.name)
+        for b in (st.window.after, st.window.until, st.window2.after, st.window2.until):
+            if isinstance(b.anchor, StageT):
+                add(b.anchor.name)
+        return tuple(deps)
+
+    def topo_order(self) -> Tuple[Stage, ...]:
+        """Stages in dependency order (stable by listing order).
+
+        Raises ValueError on cyclic dataflow — the *dependency analysis*
+        pass of the compiler front-end.
+        """
+        by_name = {st.name: st for st in self.stages}
+        deps = {
+            st.name: tuple(d for d in self.dependencies(st) if d in by_name)
+            for st in self.stages
+        }
+        placed: List[Stage] = []
+        done: set = set()
+        remaining = [st.name for st in self.stages]
+        while remaining:
+            ready = [n for n in remaining if all(d in done for d in deps[n])]
+            if not ready:
+                raise ValueError(
+                    f"pattern {self.name!r}: cyclic dataflow among "
+                    f"{sorted(remaining)}"
+                )
+            for n in ready:
+                done.add(n)
+                placed.append(by_name[n])
+            remaining = [n for n in remaining if n not in done]
+        return tuple(placed)
 
     @property
     def emit_stage(self) -> Stage:

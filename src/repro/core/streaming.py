@@ -2,16 +2,28 @@
 analytics"): new transactions trigger *localized* pattern updates instead
 of full-graph recomputation.
 
-Locality argument: every library pattern reaches at most two edges away
-from its seed edge, so a new edge (a -> b) can only change the counts of
-seed edges whose endpoints lie in the undirected 2-hop ball of {a, b} and
-whose timestamp is within 2W of the new edge (the scatter-gather anchor
-chain spans at most 2W).  ``ingest`` re-mines exactly that dirty frontier.
+Locality is **derived, not assumed**: the compiler front-end
+(:func:`repro.core.compiler.analyze_stage_graph`) computes, per pattern,
 
-The graph snapshot is rebuilt per batch (O(E log E) numpy sort) — a
-production deployment would swap in a mutable two-level index; the update
-*set* computation is the contribution being modeled here, and
-`tests/test_streaming.py` asserts incremental == batch recompute.
+* ``dirty_radius`` — the max over pattern edges of the *min* endpoint
+  hop distance from the seed.  A new edge (a -> b) can only change the
+  count of a seed edge if it coincides with some pattern edge, and that
+  pattern edge always has an endpoint within ``dirty_radius`` undirected
+  hops of the seed endpoints — so the ball of that radius around {a, b}
+  covers every affected seed.  Depth-3+ typologies (cycle5, peel_chain)
+  simply report a larger radius; nothing here is hardcoded to the old
+  2-hop locality ball.
+* ``time_radius`` — the max ``|t_edge - t_seed|`` over every window,
+  propagated through per-branch StageT anchor chains (``None`` when some
+  pattern edge is checked over unbounded time, e.g. a difference
+  membership — then no temporal pruning is sound).
+
+``ingest`` re-mines exactly that dirty frontier, taking the max radius
+over the configured pattern set.  The graph snapshot is rebuilt per batch
+(O(E log E) numpy sort) — a production deployment would swap in a mutable
+two-level index; the update *set* computation is the contribution being
+modeled here, and `tests/test_streaming.py` asserts incremental == batch
+recompute, including for depth-3 patterns.
 """
 from __future__ import annotations
 
@@ -19,7 +31,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.compiler import CompiledPattern
+from repro.core.compiler import CompiledPattern, analyze_stage_graph
 from repro.core.patterns import build_pattern
 from repro.graph.csr import TemporalGraph, build_temporal_graph
 
@@ -30,6 +42,19 @@ class StreamingMiner:
     def __init__(self, patterns: Sequence[str], window: int):
         self.pattern_names = tuple(patterns)
         self.window = int(window)
+        # graph-independent front-end analysis: one IR per pattern gives
+        # the locality facts that size the dirty frontier
+        irs = {
+            n: analyze_stage_graph(build_pattern(n, self.window))
+            for n in self.pattern_names
+        }
+        self.hop_radius: int = max(
+            (ir.dirty_radius for ir in irs.values()), default=0
+        )
+        spans = [ir.time_radius for ir in irs.values()]
+        self.time_radius: Optional[int] = (
+            None if (not spans or any(s is None for s in spans)) else max(spans)
+        )
         self._src: List[np.ndarray] = []
         self._dst: List[np.ndarray] = []
         self._t: List[np.ndarray] = []
@@ -52,11 +77,13 @@ class StreamingMiner:
         n = int(max(src.max(initial=-1), dst.max(initial=-1))) + 1
         return build_temporal_graph(src, dst, t, amt, n_nodes=n)
 
-    def _two_hop_ball(self, g: TemporalGraph, seeds: np.ndarray) -> np.ndarray:
-        """Undirected 2-hop ball membership mask over nodes."""
+    def _hop_ball(
+        self, g: TemporalGraph, seeds: np.ndarray, radius: int
+    ) -> np.ndarray:
+        """Undirected `radius`-hop ball membership mask over nodes."""
         mask = np.zeros(g.n_nodes, dtype=bool)
         mask[seeds] = True
-        for _ in range(2):
+        for _ in range(radius):
             cur = np.nonzero(mask)[0]
             nxt = []
             for n in cur:
@@ -98,9 +125,10 @@ class StreamingMiner:
             dirty = np.arange(g.n_edges, dtype=np.int32)
         else:
             touched = np.unique(np.concatenate([src, dst]))
-            ball = self._two_hop_ball(g, touched)
-            t_min = int(t.min()) - 2 * self.window
-            cand = (ball[g.src] | ball[g.dst]) & (g.t >= t_min)
+            ball = self._hop_ball(g, touched, self.hop_radius)
+            cand = ball[g.src] | ball[g.dst]
+            if self.time_radius is not None:
+                cand &= g.t >= int(t.min()) - self.time_radius
             cand[n_old:] = True  # all new edges are dirty
             dirty = np.nonzero(cand)[0].astype(np.int32)
 

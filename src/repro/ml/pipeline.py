@@ -30,6 +30,9 @@ FEATURE_SETS = {
     + feature_pattern_set("degree")
     + feature_pattern_set("cycle"),
     "full": feature_pattern_set("full"),
+    # depth-3+ typologies (cycle5 / peel_chain / fan_in_chain) unlocked by
+    # the stage-graph compiler IR
+    "full_deep": feature_pattern_set("full_deep"),
 }
 
 

@@ -1,0 +1,44 @@
+"""Optional-dependency guard for property tests.
+
+`hypothesis` is a dev-only dependency (see requirements-dev.txt).  Tier-1
+collection must never error when it is missing: modules import
+``given/settings/st`` from here instead of hard-importing hypothesis.
+When hypothesis is absent, ``@given`` turns the test into a clean pytest
+skip (the module-level alternative, ``pytest.importorskip``, would skip
+the *whole* file and silently drop the non-property tests that live
+alongside).
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without dev deps
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # keep the original signature (pytest.mark.parametrize may
+            # still bind other arguments); the skip mark short-circuits
+            # before fixture resolution ever looks at the given-params
+            return pytest.mark.skip(
+                reason="hypothesis not installed "
+                "(pip install -r requirements-dev.txt)"
+            )(fn)
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _AnyStrategy:
+        """Stand-in for hypothesis.strategies: every call returns None."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **kw: None
+
+    st = _AnyStrategy()

@@ -1,15 +1,20 @@
 """The core correctness contract: compiled counts == GFP-reference counts,
-for every pattern, every lowering strategy, and the hub decomposition."""
+for every pattern, every lowering strategy, and the hub decomposition —
+including the depth-3+ chained-frontier patterns the stage-graph IR
+lowers (cycle5, peel_chain, fan_in_chain)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core.compiler import CompiledPattern
+from tests.hypothesis_compat import given, settings, st
+
+from repro.core.compiler import CompiledPattern, analyze_stage_graph
 from repro.core.oracle import GFPReference
 from repro.core.patterns import build_pattern, PATTERN_NAMES
 from tests.conftest import random_temporal_graph
 
 W = 96
+
+DEEP = ("cycle5", "peel_chain", "fan_in_chain")
 
 
 @pytest.mark.parametrize("name", PATTERN_NAMES)
@@ -24,7 +29,7 @@ def test_pattern_matches_oracle(small_graph, name):
     np.testing.assert_array_equal(got, ref)
 
 
-@pytest.mark.parametrize("name", ["cycle4", "scatter_gather", "reciprocal"])
+@pytest.mark.parametrize("name", ["cycle4", "cycle5", "scatter_gather", "reciprocal"])
 @pytest.mark.parametrize("strategy", ["bs1", "bs2", "pw"])
 def test_intersect_strategies_agree(small_graph, name, strategy):
     spec = build_pattern(name, 4096)
@@ -35,14 +40,56 @@ def test_intersect_strategies_agree(small_graph, name, strategy):
     np.testing.assert_array_equal(base, forced)
 
 
-@pytest.mark.parametrize("name", ["cycle3", "cycle4", "scatter_gather"])
+@pytest.mark.parametrize("strategy", ["bs1", "bs2", "pw"])
+def test_cycle5_exact_all_strategies(strategy):
+    """The chained-frontier intersect must match the enumerator exactly
+    under every forced lowering strategy (dense random graph)."""
+    rng = np.random.default_rng(11)
+    g = random_temporal_graph(rng, n_nodes=18, n_edges=140, t_max=256)
+    spec = build_pattern("cycle5", W)
+    got = CompiledPattern(spec, g, force_strategy=strategy).mine()
+    ref = GFPReference(spec, g).mine()
+    np.testing.assert_array_equal(got, ref)
+
+
+@pytest.mark.parametrize("name", DEEP)
+@pytest.mark.parametrize("mode", ["default", "branch", "sweeps", "chunked"])
+def test_deep_patterns_exact(name, mode):
+    """Chained-frontier patterns must match the enumerator exactly down
+    every execution path that varies for them: the bulk path, forced hub
+    branch decomposition (per-level re-bucketing), forced tail sweeps,
+    and tiny-batch chunking.  (peel_chain / fan_in_chain have no
+    intersect, so force_strategy is exercised separately on cycle5.)"""
+    import repro.core.compiler as C
+
+    rng = np.random.default_rng(11)
+    g = random_temporal_graph(rng, n_nodes=18, n_edges=140, t_max=256)
+    spec = build_pattern(name, W)
+    ref = GFPReference(spec, g).mine()
+    assert name == "cycle5" or ref.sum() > 0  # dense graph => nonzero counts
+    if mode == "branch":
+        old = C.BRANCH_DECOMP_COST
+        C.BRANCH_DECOMP_COST = -1.0
+        try:
+            got = CompiledPattern(spec, g).mine()
+        finally:
+            C.BRANCH_DECOMP_COST = old
+    elif mode == "sweeps":
+        got = CompiledPattern(spec, g, ladder=(2, 4)).mine()
+    elif mode == "chunked":
+        got = CompiledPattern(spec, g, batch_elem_cap=1 << 8).mine()
+    else:
+        got = CompiledPattern(spec, g).mine()
+    np.testing.assert_array_equal(got, ref)
+
+
+@pytest.mark.parametrize("name", ["cycle3", "cycle4", "cycle5", "peel_chain", "scatter_gather"])
 def test_hub_branch_decomposition(small_graph, name):
     """Force EVERY seed down the per-branch hub path; counts must match."""
     spec = build_pattern(name, 4096)
     rng = np.random.default_rng(2)
     seeds = rng.choice(small_graph.n_edges, size=80, replace=False).astype(np.int32)
     normal = CompiledPattern(spec, small_graph).mine(seeds)
-    cp = CompiledPattern(spec, small_graph)
     import repro.core.compiler as C
 
     old = C.BRANCH_DECOMP_COST
@@ -66,9 +113,23 @@ def test_random_graphs_match_oracle(name, seed):
     np.testing.assert_array_equal(got, ref)
 
 
-def test_tiny_ladder_sweeps(small_graph):
-    """A minuscule ladder forces tail sweeps everywhere; counts invariant."""
-    spec = build_pattern("cycle3", 4096)
+@pytest.mark.parametrize("name", DEEP)
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 1_000))
+def test_random_graphs_match_oracle_deep(name, seed):
+    rng = np.random.default_rng(seed)
+    g = random_temporal_graph(rng, n_nodes=14, n_edges=100, t_max=256)
+    spec = build_pattern(name, W)
+    got = CompiledPattern(spec, g).mine()
+    ref = GFPReference(spec, g).mine()
+    np.testing.assert_array_equal(got, ref)
+
+
+@pytest.mark.parametrize("name", ["cycle3", "peel_chain"])
+def test_tiny_ladder_sweeps(small_graph, name):
+    """A minuscule ladder forces tail sweeps at every level; counts
+    invariant."""
+    spec = build_pattern(name, 4096)
     rng = np.random.default_rng(3)
     seeds = rng.choice(small_graph.n_edges, size=60, replace=False).astype(np.int32)
     base = CompiledPattern(spec, small_graph).mine(seeds)
@@ -81,6 +142,35 @@ def test_plan_text(small_graph):
     cp = CompiledPattern(spec, small_graph)
     txt = cp.plan_text()
     assert "intersect" in txt and "for_all" in txt and "emit" in txt
+    deep = CompiledPattern(build_pattern("cycle5", 4096), small_graph)
+    txt = deep.plan_text()
+    assert "L1" in txt and "L2" in txt  # nested frontier levels are visible
+
+
+def test_stage_graph_ir_locality():
+    """The IR reports hop depth / dirty radius / time span per pattern."""
+    ir = analyze_stage_graph(build_pattern("cycle5", 64))
+    assert len(ir.frontiers) == 2
+    # dirty radius is min-endpoint based, not max-node-distance based:
+    # the closing witness y is a graph neighbor of seed.src, so every
+    # cycle5 edge has an endpoint within 1 undirected hop of the seeds
+    assert ir.hop_depth == 2 and ir.dirty_radius == 1
+    assert ir.time_radius == 64
+    ir = analyze_stage_graph(build_pattern("peel_chain", 64))
+    assert ir.hop_depth == 3
+    assert ir.dirty_radius == 2  # counted edges hang off m2 (2 hops out)
+    ir = analyze_stage_graph(build_pattern("scatter_gather", 64))
+    assert ir.dirty_radius == 1
+    assert ir.time_radius == 2 * 64 + 2  # StageT anchor chain span
+    ir = analyze_stage_graph(build_pattern("new_counterparty", 64))
+    assert ir.time_radius is None  # difference membership is unbounded
+
+
+def test_mining_stats_observable(small_graph):
+    cp = CompiledPattern(build_pattern("cycle3", 4096), small_graph)
+    cp.mine(np.arange(64, dtype=np.int32))
+    assert cp.stats["kernel_calls"] > 0
+    assert cp.stats["padded_elements"] > 0
 
 
 def test_known_cycle_counts():
@@ -98,6 +188,49 @@ def test_known_cycle_counts():
     fuzzy = build_pattern("cycle3_fuzzy", 100)
     got = CompiledPattern(fuzzy, g).mine()
     np.testing.assert_array_equal(got, [0, 0, 0, 0])
+
+
+def test_known_cycle5_counts():
+    """Hand-built ordered 5-cycle: only the first edge sees it in-window."""
+    from repro.graph.csr import build_temporal_graph
+
+    src = np.array([0, 1, 2, 3, 4], dtype=np.int32)
+    dst = np.array([1, 2, 3, 4, 0], dtype=np.int32)
+    t = np.array([10, 20, 30, 40, 50], dtype=np.int64)
+    g = build_temporal_graph(src, dst, t, n_nodes=5)
+    got = CompiledPattern(build_pattern("cycle5", 100), g).mine()
+    ref = GFPReference(build_pattern("cycle5", 100), g).mine()
+    np.testing.assert_array_equal(got, ref)
+    np.testing.assert_array_equal(got, [1, 0, 0, 0, 0])
+
+
+def test_known_peel_chain_counts():
+    """u->v->m1->m2->x with increasing times: seed edge counts the chain."""
+    from repro.graph.csr import build_temporal_graph
+
+    src = np.array([0, 1, 2, 3], dtype=np.int32)
+    dst = np.array([1, 2, 3, 4], dtype=np.int32)
+    t = np.array([10, 20, 30, 40], dtype=np.int64)
+    g = build_temporal_graph(src, dst, t, n_nodes=5)
+    got = CompiledPattern(build_pattern("peel_chain", 100), g).mine()
+    ref = GFPReference(build_pattern("peel_chain", 100), g).mine()
+    np.testing.assert_array_equal(got, ref)
+    # only the first edge has the full 3 hops ahead of it
+    np.testing.assert_array_equal(got, [1, 0, 0, 0])
+
+
+def test_known_fan_in_chain_counts():
+    """2 sources into u before seed, 3 sinks out of v after: 2*3 pairs."""
+    from repro.graph.csr import build_temporal_graph
+
+    src = np.array([5, 6, 0, 1, 1, 1], dtype=np.int32)
+    dst = np.array([0, 0, 1, 2, 3, 4], dtype=np.int32)
+    t = np.array([5, 6, 10, 20, 21, 22], dtype=np.int64)
+    g = build_temporal_graph(src, dst, t, n_nodes=7)
+    got = CompiledPattern(build_pattern("fan_in_chain", 100), g).mine()
+    ref = GFPReference(build_pattern("fan_in_chain", 100), g).mine()
+    np.testing.assert_array_equal(got, ref)
+    assert got[2] == 2 * 3  # the u->v seed edge sees the cross product
 
 
 def test_known_scatter_gather():

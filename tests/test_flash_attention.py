@@ -4,7 +4,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests.hypothesis_compat import given, settings, st
 
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref

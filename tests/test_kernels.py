@@ -3,7 +3,7 @@ shape/dtype sweeps and hypothesis randomization."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests.hypothesis_compat import given, settings, st
 
 from repro.kernels import hist_update, intersect_count, window_degree
 from repro.kernels.hist_update.ref import hist_update_ref

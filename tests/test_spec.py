@@ -6,6 +6,7 @@ from repro.core.spec import (
     PatternSpec,
     SEED_DST,
     SEED_SRC,
+    SEED_T,
     Stage,
     StageT,
     TimeBound,
@@ -83,3 +84,98 @@ def test_window_helpers():
     assert w.after.offset == 0 and w.until.offset == 10
     w = Window.before_seed(10)
     assert w.until.offset == -1
+
+
+def _chain_stages():
+    """A two-level frontier chain closed by a count (a 4-path program)."""
+    return (
+        Stage(
+            "a",
+            "for_all",
+            operand=Neigh(SEED_DST, "out"),
+            window=Window.after_seed(32),
+        ),
+        Stage(
+            "b",
+            "for_all",
+            operand=Neigh(NodeRef("a"), "out"),
+            window=Window(TimeBound(StageT("a"), 0), TimeBound(SEED_T, 32)),
+        ),
+        Stage(
+            "close",
+            "count_edges",
+            edge_src=NodeRef("b"),
+            edge_dst=SEED_SRC,
+            window=Window.after_seed(32),
+            emit=True,
+        ),
+    )
+
+
+def test_multi_frontier_spec_validates():
+    spec = PatternSpec("deep", stages=_chain_stages())
+    order = [st.name for st in spec.topo_order()]
+    assert order == ["a", "b", "close"]
+    assert spec.dependencies(spec.stages[1]) == ("a",)
+
+
+def test_multi_frontier_out_of_order_listing_is_scheduled():
+    """Stages may be listed in any order; the dependency pass sorts them."""
+    a, b, close = _chain_stages()
+    spec = PatternSpec("deep_shuffled", stages=(close, b, a))
+    order = [st.name for st in spec.topo_order()]
+    assert order.index("a") < order.index("b") < order.index("close")
+
+
+def test_cyclic_dataflow_rejected():
+    with pytest.raises(ValueError, match="cyclic"):
+        PatternSpec(
+            "loopy",
+            stages=(
+                Stage("a", "for_all", operand=Neigh(NodeRef("b"), "out")),
+                Stage(
+                    "b",
+                    "for_all",
+                    operand=Neigh(NodeRef("a"), "out"),
+                    emit=True,
+                ),
+            ),
+        )
+
+
+def test_self_referential_frontier_rejected():
+    with pytest.raises(ValueError, match="cyclic"):
+        PatternSpec(
+            "selfloop",
+            stages=(
+                Stage(
+                    "a",
+                    "for_all",
+                    operand=Neigh(NodeRef("a"), "out"),
+                    emit=True,
+                ),
+            ),
+        )
+
+
+def test_cyclic_anchor_rejected():
+    """A time-anchor cycle between two frontiers is cyclic dataflow too."""
+    with pytest.raises(ValueError, match="cyclic"):
+        PatternSpec(
+            "anchor_loop",
+            stages=(
+                Stage(
+                    "a",
+                    "for_all",
+                    operand=Neigh(SEED_SRC, "out"),
+                    window=Window(TimeBound(StageT("b"), 0), TimeBound(SEED_T, 8)),
+                ),
+                Stage(
+                    "b",
+                    "for_all",
+                    operand=Neigh(SEED_DST, "out"),
+                    window=Window(TimeBound(StageT("a"), 0), TimeBound(SEED_T, 8)),
+                    emit=True,
+                ),
+            ),
+        )

@@ -11,7 +11,10 @@ from tests.conftest import random_temporal_graph
 W = 64
 
 
-@pytest.mark.parametrize("name", ["fan_in", "cycle3", "scatter_gather", "stack"])
+@pytest.mark.parametrize(
+    "name",
+    ["fan_in", "cycle3", "scatter_gather", "stack", "peel_chain", "cycle5"],
+)
 def test_streaming_matches_batch(name):
     rng = np.random.default_rng(5)
     g = random_temporal_graph(rng, n_nodes=20, n_edges=150, t_max=300)
@@ -26,6 +29,21 @@ def test_streaming_matches_batch(name):
     spec = build_pattern(name, W)
     want = CompiledPattern(spec, full).mine()
     np.testing.assert_array_equal(sm.counts[name], want)
+
+
+def test_streaming_radius_derived_from_ir():
+    """The dirty ball is sized by the compiled pattern's IR, not a
+    hardcoded 2-hop/2W constant."""
+    assert StreamingMiner(["fan_in"], window=W).hop_radius == 0
+    # cycle5's closing witness is adjacent to seed.src, so radius 1
+    # suffices even though the pattern reaches 2 hops deep
+    assert StreamingMiner(["cycle5"], window=W).hop_radius == 1
+    assert StreamingMiner(["peel_chain"], window=W).hop_radius == 2
+    sm = StreamingMiner(["scatter_gather"], window=W)
+    assert sm.hop_radius == 1
+    assert sm.time_radius == 2 * W + 2  # anchor-chain span, not "2W"
+    # unbounded membership windows disable temporal pruning entirely
+    assert StreamingMiner(["new_counterparty"], window=W).time_radius is None
 
 
 def test_streaming_dirty_frontier_is_local():
