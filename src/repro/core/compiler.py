@@ -81,7 +81,7 @@ from repro.core.spec import (
     Window,
     _SeedT,
 )
-from repro.graph.csr import DeviceGraph, TemporalGraph
+from repro.graph.csr import DeviceGraph, TemporalGraph, csr_row_offsets
 
 __all__ = [
     "CompiledPattern",
@@ -480,8 +480,12 @@ class CompiledPattern:
         if mapped.size == 0:
             res = np.zeros(n, dtype=np.int64)
         else:
-            starts = np.minimum(indptr[:-1], mapped.size - 1).astype(np.int64)
-            res = np.maximum.reduceat(mapped, starts)
+            # One trailing identity element makes indptr values equal to
+            # mapped.size valid reduceat starts (trailing empty rows)
+            # without perturbing any real segment boundary; requirements
+            # are non-negative, so a 0 sentinel never wins a max.
+            padded = np.concatenate([mapped, np.zeros(1, dtype=np.int64)])
+            res = np.maximum.reduceat(padded, indptr[:-1].astype(np.int64))
             res = np.where(np.diff(indptr) > 0, res, 0)
         self._vals_cache[ck] = res
         return ck, res
@@ -965,6 +969,21 @@ class CompiledPattern:
         nL = len(self.ladder)
         bmax = self.ladder[-1]
         union_dims = self._union_dims()
+        # Union frontiers cannot sweep (dedup is per-row), so their tail
+        # rows get a one-off width.  Sub-bucket them on the geometric
+        # grid bmax*2^e: the JIT cache holds one kernel per doubling
+        # rather than one per distinct hub max, and a single huge union
+        # row no longer sets the width for every row sharing the tail.
+        classes = list(classes)
+        for j in union_dims:
+            c = np.asarray(classes[j])
+            tail = c >= nL
+            if tail.any():
+                m = (reqs[j][sel_all[tail]] + bmax - 1) // bmax
+                e = np.ceil(np.log2(np.maximum(m, 1))).astype(np.int32)
+                c = c.copy()
+                c[tail] = nL + np.maximum(e, 1)
+                classes[j] = c
         keys = np.stack([strat] + list(classes), axis=1)
         uniq = np.unique(keys, axis=0)
         for key in uniq:
@@ -977,11 +996,11 @@ class CompiledPattern:
                     dims.append(1)
                     sweeps.append(1)
                 elif kc >= nL:
-                    mx = int(req[sel].max())
-                    if j in union_dims:  # one-off bucket (unions: no sweeps)
-                        dims.append(_pow2ceil(mx))
+                    if j in union_dims:  # one-off geometric-grid bucket
+                        dims.append(int(bmax) << (int(kc) - nL))
                         sweeps.append(1)
                     else:
+                        mx = int(req[sel].max())
                         dims.append(bmax)
                         sweeps.append(math.ceil(mx / bmax))
                 else:
@@ -1048,12 +1067,8 @@ class CompiledPattern:
         nbr = g.out_nbr if opn.direction == "out" else g.in_nbr
         tt = g.out_t if opn.direction == "out" else g.in_t
         base = src if opn.node.name == "seed.src" else dst
-        starts = indptr[base]
-        lens = (indptr[base + 1] - starts).astype(np.int64)
-        tot = int(lens.sum())
+        offs, lens = csr_row_offsets(indptr, base)
         item_seed = np.repeat(np.arange(len(src), dtype=np.int64), lens)
-        first = np.repeat(np.cumsum(lens) - lens, lens)
-        offs = np.repeat(starts, lens) + (np.arange(tot, dtype=np.int64) - first)
         fr = nbr[offs].astype(np.int32)
         frt = tt[offs].astype(np.int64)
         a1 = self._host_bound(fa.window.after, st)

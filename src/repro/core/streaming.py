@@ -33,7 +33,11 @@ import numpy as np
 
 from repro.core.compiler import CompiledPattern, analyze_stage_graph
 from repro.core.patterns import build_pattern
-from repro.graph.csr import TemporalGraph, build_temporal_graph
+from repro.graph.csr import (
+    TemporalGraph,
+    build_temporal_graph,
+    csr_row_offsets,
+)
 
 __all__ = ["StreamingMiner"]
 
@@ -80,17 +84,26 @@ class StreamingMiner:
     def _hop_ball(
         self, g: TemporalGraph, seeds: np.ndarray, radius: int
     ) -> np.ndarray:
-        """Undirected `radius`-hop ball membership mask over nodes."""
+        """Undirected `radius`-hop ball membership mask over nodes.
+
+        BFS over the newly-discovered frontier only — each hop is a
+        vectorized CSR gather, not a per-node Python loop, so deep
+        pattern radii stay cheap on large dirty frontiers."""
         mask = np.zeros(g.n_nodes, dtype=bool)
-        mask[seeds] = True
+        frontier = np.unique(np.asarray(seeds, dtype=np.int64))
+        mask[frontier] = True
         for _ in range(radius):
-            cur = np.nonzero(mask)[0]
-            nxt = []
-            for n in cur:
-                nxt.append(g.out_nbr[g.out_indptr[n] : g.out_indptr[n + 1]])
-                nxt.append(g.in_nbr[g.in_indptr[n] : g.in_indptr[n + 1]])
-            if nxt:
-                mask[np.concatenate(nxt)] = True
+            if frontier.size == 0:
+                break
+            nxt = np.concatenate(
+                [
+                    g.out_nbr[csr_row_offsets(g.out_indptr, frontier)[0]],
+                    g.in_nbr[csr_row_offsets(g.in_indptr, frontier)[0]],
+                ]
+            ).astype(np.int64)
+            nxt = np.unique(nxt)
+            frontier = nxt[~mask[nxt]]
+            mask[frontier] = True
         return mask
 
     def ingest(

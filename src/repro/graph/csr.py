@@ -23,7 +23,24 @@ from typing import Optional
 
 import numpy as np
 
-__all__ = ["TemporalGraph", "DeviceGraph", "build_temporal_graph"]
+__all__ = [
+    "TemporalGraph",
+    "DeviceGraph",
+    "build_temporal_graph",
+    "csr_row_offsets",
+]
+
+
+def csr_row_offsets(indptr: np.ndarray, nodes: np.ndarray):
+    """Flat CSR positions of the adjacency rows of `nodes`, concatenated
+    in node order, plus per-node row lengths (so callers can map entries
+    back to their source node with ``np.repeat(..., lens)``)."""
+    starts = indptr[nodes].astype(np.int64)
+    lens = (indptr[nodes + 1] - indptr[nodes]).astype(np.int64)
+    tot = int(lens.sum())
+    first = np.repeat(np.cumsum(lens) - lens, lens)
+    offs = np.repeat(starts, lens) + (np.arange(tot, dtype=np.int64) - first)
+    return offs, lens
 
 
 @dataclasses.dataclass(frozen=True)

@@ -125,9 +125,10 @@ def test_random_graphs_match_oracle_deep(name, seed):
     np.testing.assert_array_equal(got, ref)
 
 
-@pytest.mark.parametrize("name", ["cycle3", "peel_chain"])
+@pytest.mark.parametrize("name", ["cycle3", "peel_chain", "counterparty"])
 def test_tiny_ladder_sweeps(small_graph, name):
-    """A minuscule ladder forces tail sweeps at every level; counts
+    """A minuscule ladder forces tail sweeps at every level (and, for
+    the union pattern, one-off geometric-grid tail buckets); counts
     invariant."""
     spec = build_pattern(name, 4096)
     rng = np.random.default_rng(3)
@@ -135,6 +136,27 @@ def test_tiny_ladder_sweeps(small_graph, name):
     base = CompiledPattern(spec, small_graph).mine(seeds)
     swept = CompiledPattern(spec, small_graph, ladder=(4, 8)).mine(seeds)
     np.testing.assert_array_equal(base, swept)
+
+
+def test_trailing_empty_row_degree_requirements():
+    """Regression: the per-seed degree requirement reduceat (_nbr_max)
+    must not truncate the last non-empty CSR row when trailing nodes
+    have empty adjacency.  seed.dst (node 9) is the last node with
+    out-edges, the final CSR slot holds the neighbor carrying the whole
+    deep chain, and node 10 is a trailing isolate; the tiny ladder
+    leaves no padding slack to hide an under-estimated frontier width."""
+    from repro.graph.csr import build_temporal_graph
+
+    src = np.array([0, 9, 9, 5, 5, 5, 6, 7, 8], dtype=np.int32)
+    dst = np.array([9, 4, 5, 6, 7, 8, 1, 1, 1], dtype=np.int32)
+    t = np.array([10, 20, 21, 30, 31, 32, 40, 41, 42], dtype=np.int64)
+    g = build_temporal_graph(src, dst, t, n_nodes=11)
+    spec = build_pattern("peel_chain", 100)
+    ref = GFPReference(spec, g).mine()
+    assert ref[0] == 3  # m1=5 fans the chain out to three onward edges
+    for kw in ({}, {"ladder": (2, 4)}):
+        got = CompiledPattern(spec, g, **kw).mine()
+        np.testing.assert_array_equal(got, ref)
 
 
 def test_plan_text(small_graph):
