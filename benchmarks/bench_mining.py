@@ -5,13 +5,14 @@ Both systems mine the SAME seed-edge sample (hub seeds included), so the
 comparison is apples-to-apples.  The compiled numbers are steady-state
 (kernels compiled); first-compile latency is reported separately.
 
-Beyond wall time, every pattern reports the compiler's padding
-observability counters (padded elements materialized, kernel calls,
-host-decomposed branch items) so per-level bucketing regressions show up
-in benchmark diffs, not just in runtime noise.  The depth-3+ stage-graph
-patterns (cycle5 / peel_chain / fan_in_chain) verify against the
-enumerator on a smaller subsample — the pure-Python reference is
-exponential in frontier depth.
+All patterns run through one portfolio :class:`repro.api.MiningSession`
+(shared device graph + requirement cache), mined one at a time so the
+per-pattern timing and padding observability counters (padded elements
+materialized, kernel calls, host-decomposed branch items) stay
+attributable — bucketing regressions show up in benchmark diffs, not
+just runtime noise.  The depth-3+ stage-graph patterns (cycle5 /
+peel_chain / fan_in_chain) verify against the enumerator on a smaller
+subsample — the pure-Python reference is exponential in frontier depth.
 """
 from __future__ import annotations
 
@@ -20,7 +21,7 @@ import time
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core.compiler import CompiledPattern
+from repro.api import MiningSession
 from repro.core.oracle import GFPReference
 from repro.core.patterns import build_pattern
 from repro.data.synth_aml import load_dataset
@@ -53,21 +54,20 @@ def run(
     sample = rng.choice(
         g.n_edges, size=min(n_oracle_seeds, g.n_edges), replace=False
     ).astype(np.int32)
+    session = MiningSession(g, window=window).register(*FIGS.values())
     out = {}
     for label, name in FIGS.items():
-        spec = build_pattern(name, window)
-        cp = CompiledPattern(spec, g)
         t0 = time.perf_counter()
-        cp.mine(sample)  # compile + first run
+        session.mine([name], seeds=sample)  # compile + first run
         compile_s = time.perf_counter() - t0
-        cp.stats = {k: 0 for k in cp.stats}  # steady-state counters only
         t0 = time.perf_counter()
-        got = cp.mine(sample)
+        res = session.mine([name], seeds=sample)  # steady state
         blazing_s = time.perf_counter() - t0
+        got = res.column(name)
         # exactness check: full sample for the classic patterns, a
         # subsample for deep ones (the reference enumerator is O(d^depth))
-        verify = sample if name not in DEEP else sample[: n_deep_oracle_seeds]
-        orc = GFPReference(spec, g)
+        verify = sample if name not in DEEP else sample[:n_deep_oracle_seeds]
+        orc = GFPReference(build_pattern(name, window), g)
         t0 = time.perf_counter()
         ref = orc.mine(verify)
         gfp_s = time.perf_counter() - t0
@@ -79,16 +79,16 @@ def run(
             if np.isfinite(gfp_rate)
             else float("inf")
         )
-        out[name] = (blazing_s, gfp_s, speedup, dict(cp.stats))
+        out[name] = (blazing_s, gfp_s, speedup, dict(res.stats))
         emit(
             label,
             blazing_s / len(sample) * 1e6,
             f"edges_per_s={len(sample)/blazing_s:.0f};gfp_edges_per_s="
             f"{gfp_rate:.0f};speedup={speedup:.1f}x;"
             f"first_compile_s={compile_s:.1f};"
-            f"padded_elements={cp.stats['padded_elements']};"
-            f"kernel_calls={cp.stats['kernel_calls']};"
-            f"branch_items={cp.stats['branch_items']};"
+            f"padded_elements={res.stats['padded_elements']};"
+            f"kernel_calls={res.stats['kernel_calls']};"
+            f"branch_items={res.stats['branch_items']};"
             f"counts_match=True",
         )
     return out

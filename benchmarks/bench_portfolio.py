@@ -1,0 +1,99 @@
+"""Portfolio mining: one shared MiningSession vs the naive per-pattern
+CompiledPattern loop (the pre-`repro.api` front-end behavior).
+
+The session compiles the portfolio once — canonical-plan dedup, one
+shared device graph + host requirement cache, and the seed-local
+windowed-degree family (fan_in/fan_out/deg_in/deg_out/cycle2/stack)
+fused into a single kernel — so it must win on kernel calls and padded
+elements, not just wall time.  Counts are asserted identical.
+
+Emits one CSV row per feature group plus ``BENCH_portfolio.json``.
+
+  PYTHONPATH=src python -m benchmarks.bench_portfolio
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.api import MiningSession
+from repro.core.compiler import CompiledPattern
+from repro.core.patterns import build_pattern, feature_pattern_set
+from repro.data.synth_aml import load_dataset
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "results", "BENCH_portfolio.json")
+
+
+def _naive_loop(g, patterns, window, seeds):
+    """The old front-end: fresh CompiledPattern (own device mirror, own
+    requirement cache, own kernels) per pattern per call."""
+    cols = {}
+    stats = {"kernel_calls": 0, "padded_elements": 0, "branch_items": 0}
+    t0 = time.perf_counter()
+    for name in patterns:
+        cp = CompiledPattern(build_pattern(name, window), g)
+        cols[name] = cp.mine(seeds)
+        for k in stats:
+            stats[k] += cp.stats[k]
+    return cols, time.perf_counter() - t0, stats
+
+
+def run(dataset="HI-Small", scale=0.5, window=4096, n_seeds=4000, out_path=OUT_PATH):
+    ds = load_dataset(dataset, scale=scale)
+    g = ds.graph
+    rng = np.random.default_rng(0)
+    seeds = rng.choice(
+        g.n_edges, size=min(n_seeds, g.n_edges), replace=False
+    ).astype(np.int32)
+    report = {"dataset": ds.name, "scale": scale, "window": window,
+              "n_seeds": int(len(seeds)), "groups": {}}
+    for group in ("full", "full_deep"):
+        patterns = feature_pattern_set(group)
+        # steady state for both sides: warm up, then measure
+        _naive_loop(g, patterns, window, seeds)
+        loop_cols, loop_s, loop_stats = _naive_loop(g, patterns, window, seeds)
+        session = MiningSession(g, window=window).register(*patterns)
+        session.mine(list(patterns), seeds=seeds)  # compile + warm-up
+        t0 = time.perf_counter()
+        res = session.mine(list(patterns), seeds=seeds)
+        sess_s = time.perf_counter() - t0
+        for name in patterns:
+            assert np.array_equal(res.column(name), loop_cols[name]), name
+        assert res.stats["kernel_calls"] < loop_stats["kernel_calls"], (
+            "portfolio session must issue fewer kernel calls than the loop"
+        )
+        report["groups"][group] = {
+            "patterns": list(patterns),
+            "fused_columns": list(res.fused),
+            "session": {"wall_s": sess_s, **res.stats},
+            "per_pattern_loop": {"wall_s": loop_s, **loop_stats},
+            "speedup": loop_s / sess_s if sess_s > 0 else float("inf"),
+            "kernel_call_ratio": loop_stats["kernel_calls"]
+            / max(1, res.stats["kernel_calls"]),
+            "counts_match": True,
+        }
+        emit(
+            f"portfolio/{group}",
+            sess_s / len(seeds) * 1e6,
+            f"loop_wall_s={loop_s:.2f};session_wall_s={sess_s:.2f};"
+            f"speedup={loop_s/max(sess_s,1e-9):.2f}x;"
+            f"kernel_calls={res.stats['kernel_calls']}"
+            f"_vs_{loop_stats['kernel_calls']};"
+            f"padded_elements={res.stats['padded_elements']}"
+            f"_vs_{loop_stats['padded_elements']};"
+            f"n_fused={len(res.fused)};counts_match=True",
+        )
+    out_path = os.path.abspath(out_path)
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {out_path}")
+    return report
+
+
+if __name__ == "__main__":
+    run()

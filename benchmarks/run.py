@@ -16,8 +16,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "--only",
-        default="kernels,mining,scaling,f1,fraudgt,roofline",
-        help="comma list: kernels,mining,scaling,f1,fraudgt,roofline",
+        default="kernels,mining,portfolio,scaling,f1,fraudgt,roofline",
+        help="comma list: kernels,mining,portfolio,scaling,f1,fraudgt,roofline",
     )
     args = ap.parse_args()
     only = set(args.only.split(","))
@@ -33,6 +33,10 @@ def main() -> None:
         from benchmarks import bench_mining
 
         jobs.append(("mining", bench_mining.run))
+    if "portfolio" in only:
+        from benchmarks import bench_portfolio
+
+        jobs.append(("portfolio", bench_portfolio.run))
     if "scaling" in only:
         from benchmarks import bench_scaling
 

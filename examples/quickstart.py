@@ -1,70 +1,54 @@
-"""Quickstart: express a fuzzy AML pattern, compile it, mine a synthetic
-transaction graph, and train the downstream classifier.
+"""Quickstart: author a fuzzy AML pattern in the fluent DSL, mine a whole
+pattern portfolio in one session, and train the downstream classifier.
 
-  PYTHONPATH=src python examples/quickstart.py
+  PYTHONPATH=src python examples/quickstart.py            # full demo
+  PYTHONPATH=src python examples/quickstart.py --scale 0.1 --trees 5  # CI smoke
 """
+import argparse
+
 import numpy as np
 
-from repro.core import (
-    CompiledPattern,
-    GFPReference,
-    Neigh,
-    NodeRef,
-    PatternSpec,
-    SEED_DST,
-    SEED_SRC,
-    Stage,
-    StageT,
-    TimeBound,
-    Window,
-    build_pattern,
-)
+from repro.api import MiningSession, pattern, seed
+from repro.core import GFPReference
 from repro.data import generate_aml_dataset
 from repro.ml.gbdt import GBDTParams
 from repro.ml.pipeline import run_aml_pipeline
 
+ap = argparse.ArgumentParser()
+ap.add_argument("--scale", type=float, default=0.5, help="dataset scale factor")
+ap.add_argument("--trees", type=int, default=30, help="GBDT size for step 3")
+args = ap.parse_args()
+
 W = 4096
 
-# 1. a library pattern: temporally-fuzzy scatter-gather ---------------------
-ds = generate_aml_dataset("HI-Small", seed=0, scale=0.5)
-sg = build_pattern("scatter_gather", W)
-miner = CompiledPattern(sg, ds.graph)
-print(miner.plan_text())
-counts = miner.mine()
-print(f"scatter-gather participation: {counts.sum()} instances "
-      f"over {ds.graph.n_edges} edges; max/edge {counts.max()}")
+# 1. a pattern portfolio: register once, compile once, mine everything ------
+ds = generate_aml_dataset("HI-Small", seed=0, scale=args.scale)
+session = MiningSession(ds.graph, window=W)
+session.register("scatter_gather", "fan_in", "fan_out", "cycle3")
+print(session.plan_text())
+res = session.mine()
+sg = res.column("scatter_gather")
+print(f"scatter-gather participation: {sg.sum()} instances "
+      f"over {ds.graph.n_edges} edges; max/edge {sg.max()}; "
+      f"portfolio mined with {res.stats['kernel_calls']} kernel calls "
+      f"(fused seed-local columns: {', '.join(res.fused)})")
 
-# 2. a CUSTOM pattern in the multi-stage DSL --------------------------------
+# 2. a CUSTOM pattern in the fluent DSL -------------------------------------
 # "round-trip laundering": v routes money back to u through one intermediary
 # within the window, in order  u->v (seed), v->w, w->u.
-custom = PatternSpec(
-    "roundtrip3",
-    stages=(
-        Stage(
-            "w",
-            "for_all",
-            operand=Neigh(SEED_DST, "out"),
-            skip_eq=(SEED_SRC, SEED_DST),
-            window=Window.after_seed(W),
-        ),
-        Stage(
-            "close",
-            "count_edges",
-            edge_src=NodeRef("w"),
-            edge_dst=SEED_SRC,
-            window=Window(TimeBound(StageT("w"), 0), TimeBound(None, 1 << 30)),
-            emit=True,
-        ),
-    ),
+roundtrip3 = (
+    pattern("roundtrip3")
+    .for_all("w", seed.dst.out, after_seed=W, skip=[seed.src, seed.dst])
+    .count_edges("close", "w", seed.src, after_stage="w")
+    .emit("close")
 )
-cp = CompiledPattern(custom, ds.graph)
-got = cp.mine()
-ref = GFPReference(custom, ds.graph).mine()
+got = session.mine([roundtrip3]).column("roundtrip3")
+ref = GFPReference(roundtrip3.build(), ds.graph).mine()
 assert np.array_equal(got, ref)
 print(f"custom roundtrip3: {got.sum()} instances (matches the reference)")
 
 # 3. end-to-end: mined features -> GBDT -> F1 -------------------------------
-res = run_aml_pipeline(ds, feature_set="full", params=GBDTParams(n_trees=30))
+res = run_aml_pipeline(ds, feature_set="full", params=GBDTParams(n_trees=args.trees))
 print(
     f"AML pipeline on {ds.name}: F1={res.f1:.3f} "
     f"(precision={res.precision:.3f}, recall={res.recall:.3f}); "

@@ -1,18 +1,24 @@
 """Streaming AML: transactions arrive in batches; pattern counts update
 incrementally over the dirty frontier only (paper §5 streaming).
 
+The streaming miner is spawned from the same portfolio session API used
+for batch mining — the hop/time radius of the dirty ball is derived from
+the registered specs' stage-graph IR.
+
   PYTHONPATH=src python examples/streaming_detection.py
 """
 import numpy as np
 
-from repro.core import StreamingMiner
+from repro.api import MiningSession
 from repro.data import generate_aml_dataset
 
 ds = generate_aml_dataset("HI-Small", seed=3, scale=0.3)
 g = ds.graph
 order = np.argsort(g.t, kind="stable")
 
-sm = StreamingMiner(["fan_in", "cycle3", "scatter_gather"], window=4096)
+session = MiningSession(window=4096)  # graph-less: streaming-only portfolio
+session.register("fan_in", "cycle3", "scatter_gather")
+sm = session.streaming()
 batches = np.array_split(order, 6)
 for i, ch in enumerate(batches):
     dirty = sm.ingest(g.src[ch], g.dst[ch], g.t[ch])

@@ -1,0 +1,51 @@
+"""`repro.api` — the unified BlazingAML front-end.
+
+Two pillars (paper §5-6, portfolio framing from Tariq et al. / Weber et
+al.):
+
+* the fluent authoring DSL (:mod:`repro.api.dsl`): ``pattern(...)``
+  chains stage clauses and lowers to a validated ``PatternSpec``;
+* the portfolio :class:`MiningSession` (:mod:`repro.api.session`):
+  register many patterns, compile ONCE against a shared device graph with
+  cross-pattern plan dedup + seed-local kernel fusion, and mine
+  everything through one `mine()` call (compiled / oracle / streaming /
+  partitioned backends) into a structured :class:`MiningResult`.
+
+Quick tour::
+
+    from repro.api import MiningSession, pattern, seed, var
+
+    roundtrip3 = (
+        pattern("roundtrip3")
+        .for_all("w", seed.dst.out, after_seed=W, skip=[seed.src, seed.dst])
+        .count_edges("close", "w", seed.src, after_stage="w")
+        .emit("close")
+    )
+    session = MiningSession(graph, window=W)
+    session.register("fan_in", "cycle3", roundtrip3)
+    res = session.mine()
+    res.column("roundtrip3"), res.stats["kernel_calls"]
+"""
+from repro.api.dsl import NodeExpr, PatternBuilder, pattern, seed, var
+from repro.api.session import (
+    MiningResult,
+    MiningSession,
+    canonical_key,
+    canonicalize,
+    featurize,
+    mine_features,
+)
+
+__all__ = [
+    "pattern",
+    "PatternBuilder",
+    "seed",
+    "var",
+    "NodeExpr",
+    "MiningSession",
+    "MiningResult",
+    "canonical_key",
+    "canonicalize",
+    "featurize",
+    "mine_features",
+]

@@ -1,0 +1,732 @@
+"""Portfolio mining sessions (the `repro.api` front-end, pillar 2).
+
+AML detection runs a *portfolio* of typologies over one shared graph
+(Tariq et al.; Weber et al.), so the portfolio — not the single pattern —
+is the unit of work.  :class:`MiningSession` registers many patterns,
+runs ONE shared analysis, and mines everything:
+
+* every compiled plan is **canonicalized and hashed** (stage names are
+  renamed in schedule order), so structurally identical patterns share a
+  single compiled plan and a single mining pass;
+* **seed-local patterns** (no frontiers, no intersect: the windowed
+  degree / seed-edge-multiplicity / product family — fan_in, fan_out,
+  deg_in, deg_out, cycle2, stack, ...) are **fused into one jitted
+  portfolio kernel**: their count stages are deduplicated across patterns
+  and evaluated in a single pass over the seed batch, instead of one
+  kernel launch per pattern;
+* the remaining patterns compile against a **shared device graph** and a
+  **session-level host requirement cache** (`_vals_cache`), so the
+  windowed-degree / frontier-width arrays that fan_in/fan_out/deg_in/
+  deg_out/cycle*/... all need are computed once per graph, not once per
+  `CompiledPattern`.
+
+`session.mine(...)` returns a structured :class:`MiningResult` (counts
+matrix, column names, kernel-call / padded-element counters, per-pattern
+wall time) and supports four backends: ``"compiled"`` (default),
+``"oracle"`` (GFP enumerator), ``"streaming"`` (single-shot ingest
+through :class:`~repro.core.streaming.StreamingMiner`), and
+``"partitioned"`` (degree-balanced edge partitions mined sequentially
+through the same compiled plans — the shard_map layout).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core import ops
+from repro.core.compiler import (
+    BATCH_ELEM_CAP,
+    BUCKET_LADDER,
+    CompiledPattern,
+    StageGraphIR,
+    analyze_stage_graph,
+)
+from repro.core.spec import (
+    Neigh,
+    NodeRef,
+    PatternSpec,
+    SetExpr,
+    Stage,
+    StageT,
+    TimeBound,
+    Window,
+    _SeedT,
+)
+from repro.api.dsl import PatternBuilder
+from repro.graph.csr import TemporalGraph
+
+__all__ = [
+    "MiningSession",
+    "MiningResult",
+    "canonical_key",
+    "canonicalize",
+    "mine_features",
+    "featurize",
+]
+
+BACKENDS = ("compiled", "oracle", "streaming", "partitioned")
+
+
+# ----------------------------------------------------------------------
+# canonicalization: structural plan identity across stage renamings
+# ----------------------------------------------------------------------
+def _rename_stage(st: Stage, m: Dict[str, str]) -> Stage:
+    def rref(r: NodeRef) -> NodeRef:
+        return NodeRef(m.get(r.name, r.name))
+
+    def rneigh(n: Neigh) -> Neigh:
+        return Neigh(rref(n.node), n.direction)
+
+    def ropn(o):
+        if isinstance(o, SetExpr):
+            return SetExpr(o.op, rneigh(o.left), rneigh(o.right))
+        if isinstance(o, Neigh):
+            return rneigh(o)
+        return o
+
+    def rbound(b: TimeBound) -> TimeBound:
+        if isinstance(b.anchor, StageT):
+            return TimeBound(StageT(m.get(b.anchor.name, b.anchor.name)), b.offset)
+        return b
+
+    def rwin(w: Window) -> Window:
+        return Window(rbound(w.after), rbound(w.until))
+
+    return dataclasses.replace(
+        st,
+        name=m.get(st.name, st.name),
+        operand=ropn(st.operand) if st.operand is not None else None,
+        operands=(
+            tuple(rneigh(x) for x in st.operands) if st.operands is not None else None
+        ),
+        edge_src=rref(st.edge_src) if st.edge_src is not None else None,
+        edge_dst=rref(st.edge_dst) if st.edge_dst is not None else None,
+        skip_eq=tuple(sorted((rref(r) for r in st.skip_eq), key=lambda r: r.name)),
+        window=rwin(st.window),
+        window2=rwin(st.window2),
+        factors=(
+            tuple(m.get(f, f) for f in st.factors) if st.factors is not None else None
+        ),
+    )
+
+
+def canonicalize(spec: PatternSpec) -> Tuple[Stage, ...]:
+    """Stages in schedule order with names rewritten to s0..sk and skip
+    sets sorted — a structural identity that ignores the author's naming
+    and (partially) listing order.  Conservative: two canonical forms
+    being different does not prove the patterns differ, but equal forms
+    are guaranteed-identical plans."""
+    schedule = spec.topo_order()
+    m = {st.name: f"s{i}" for i, st in enumerate(schedule)}
+    return tuple(_rename_stage(st, m) for st in schedule)
+
+
+def canonical_key(spec: PatternSpec) -> str:
+    """Stable hash of the canonicalized stage tuple."""
+    return hashlib.sha1(repr(canonicalize(spec)).encode()).hexdigest()[:16]
+
+
+# ----------------------------------------------------------------------
+# seed-local fusion: one kernel for the whole windowed-degree family
+# ----------------------------------------------------------------------
+def _bound_key(tb: TimeBound):
+    if tb.anchor is None:
+        return ("abs", int(tb.offset))
+    assert isinstance(tb.anchor, _SeedT), "seed-local stages anchor at the seed"
+    return ("seed", int(tb.offset))
+
+
+def _window_key(w: Window):
+    return (_bound_key(w.after), _bound_key(w.until))
+
+
+def _unit_key(st: Stage):
+    if st.op == "count_window":
+        return ("cw", st.operand.node.name, st.operand.direction, _window_key(st.window))
+    if st.op == "count_edges":
+        return ("ce", st.edge_src.name, st.edge_dst.name, _window_key(st.window))
+    raise TypeError(st.op)
+
+
+def _is_seed_local(ir: StageGraphIR) -> bool:
+    return not ir.frontiers and ir.intersect is None
+
+
+class _FusedSeedPlan:
+    """All seed-local patterns of a session lowered to ONE jitted kernel.
+
+    Count stages are deduplicated across patterns by
+    ``(op, node, direction, window)``; the kernel evaluates every unique
+    unit over the seed batch in a single launch, and pattern outputs
+    (possibly ``product`` combinations) are assembled host-side.
+    """
+
+    def __init__(
+        self,
+        members: Dict[str, PatternSpec],  # canonical key -> representative
+        graph: TemporalGraph,
+        device_graph,
+        batch_elem_cap: int = BATCH_ELEM_CAP,
+    ):
+        self.g = graph
+        self.dg = device_graph
+        self.batch_elem_cap = int(batch_elem_cap)
+        self.n_iters = ops.n_iters_for(self.dg.max_deg)
+        self._unit_keys: List[tuple] = []
+        self._unit_stages: List[Stage] = []
+        # canonical key -> tuple of unit indices multiplied into the emit
+        self.emits: Dict[str, Tuple[int, ...]] = {}
+        for key, spec in members.items():
+            self.emits[key] = self._resolve_emit(spec, spec.emit_stage)
+        # one jitted kernel per requested unit subset (a subset mine must
+        # not launch — or get charged for — unrequested patterns' units)
+        self._jitted: Dict[Tuple[int, ...], Callable] = {}
+
+    # -- unit registry --------------------------------------------------
+    def _unit_index(self, st: Stage) -> int:
+        k = _unit_key(st)
+        try:
+            return self._unit_keys.index(k)
+        except ValueError:
+            self._unit_keys.append(k)
+            self._unit_stages.append(st)
+            return len(self._unit_keys) - 1
+
+    def _resolve_emit(self, spec: PatternSpec, st: Stage) -> Tuple[int, ...]:
+        if st.op == "product":
+            by_name = {s.name: s for s in spec.stages}
+            out: Tuple[int, ...] = ()
+            for f in st.factors:
+                out += self._resolve_emit(spec, by_name[f])
+            return out
+        return (self._unit_index(st),)
+
+    @property
+    def n_units(self) -> int:
+        return len(self._unit_stages)
+
+    def units_for(self, keys) -> Tuple[int, ...]:
+        """Sorted unit indices needed to emit the given canonical keys."""
+        return tuple(sorted({i for k in keys for i in self.emits[k]}))
+
+    # -- lowering -------------------------------------------------------
+    def _build(self, unit_sel: Tuple[int, ...]) -> Callable:
+        import jax
+        import jax.numpy as jnp
+
+        units = tuple(self._unit_stages[i] for i in unit_sel)
+        n_iters = self.n_iters
+
+        def bound(tb: TimeBound, t):
+            if tb.anchor is None:
+                return jnp.int32(tb.offset)
+            return t + jnp.int32(tb.offset)
+
+        def kernel(dg, s, d, t):
+            env = {"seed.src": s, "seed.dst": d}
+            cols = []
+            for st in units:
+                a = bound(st.window.after, t)
+                u = bound(st.window.until, t)
+                if st.op == "count_window":
+                    if st.operand.direction == "out":
+                        indptr, t_sorted = dg.out_indptr, dg.out_t_sorted
+                    else:
+                        indptr, t_sorted = dg.in_indptr, dg.in_t_sorted
+                    cols.append(
+                        ops.count_window(
+                            t_sorted, indptr, env[st.operand.node.name], a, u, n_iters
+                        )
+                    )
+                else:  # count_edges between two bound seed endpoints
+                    cols.append(
+                        ops.count_id_in_window(
+                            dg.out_nbr,
+                            dg.out_t,
+                            dg.out_indptr,
+                            env[st.edge_src.name],
+                            env[st.edge_dst.name],
+                            a,
+                            u,
+                            n_iters,
+                        )
+                    )
+            return jnp.stack(cols, axis=1)  # (B, U)
+
+        return jax.jit(kernel)
+
+    # -- execution ------------------------------------------------------
+    def mine_units(
+        self,
+        seed_eids: np.ndarray,
+        stats: Dict[str, int],
+        unit_sel: Optional[Tuple[int, ...]] = None,
+    ) -> np.ndarray:
+        """(n_seeds, len(unit_sel)) int64 unit values; one kernel launch
+        per (pow2-padded) seed chunk regardless of how many patterns
+        fused.  `unit_sel` (default: all units) restricts the launch to
+        the units the requested patterns actually need, so subset mines
+        neither compute nor get charged for the rest of the portfolio."""
+        import jax.numpy as jnp
+
+        if unit_sel is None:
+            unit_sel = tuple(range(self.n_units))
+        n_units = len(unit_sel)
+        if unit_sel not in self._jitted:
+            self._jitted[unit_sel] = self._build(unit_sel)
+        fn = self._jitted[unit_sel]
+        g = self.g
+        n = len(seed_eids)
+        out = np.zeros((n, n_units), dtype=np.int64)
+        if n == 0 or n_units == 0:
+            return out
+        src = g.src[seed_eids].astype(np.int32)
+        dst = g.dst[seed_eids].astype(np.int32)
+        st = g.t[seed_eids].astype(np.int32)
+
+        def pow2ceil(x: int) -> int:
+            return 1 << max(0, int(x - 1).bit_length())
+
+        bchunk = max(32, self.batch_elem_cap // max(1, n_units))
+        bchunk = 1 << (bchunk.bit_length() - 1)  # round DOWN to a power of
+        # two: full chunks are pow2-shaped and a pow2ceil-padded tail can
+        # never exceed bchunk (keeping every launch under batch_elem_cap)
+        bchunk = min(bchunk, pow2ceil(n))
+        for s0 in range(0, n, bchunk):
+            idx = slice(s0, min(n, s0 + bchunk))
+            ln = idx.stop - idx.start
+            want = bchunk if n - s0 >= bchunk else pow2ceil(ln)
+            pad = want - ln
+            neg = np.full(pad, -1, np.int32)
+            zero = np.zeros(pad, np.int32)
+            res = fn(
+                self.dg,
+                jnp.asarray(np.concatenate([src[idx], neg])),
+                jnp.asarray(np.concatenate([dst[idx], neg])),
+                jnp.asarray(np.concatenate([st[idx], zero])),
+            )
+            stats["kernel_calls"] += 1
+            stats["padded_elements"] += want * n_units
+            out[idx] = np.asarray(res, dtype=np.int64)[:ln]
+        return out
+
+    def assemble(
+        self, key: str, unit_vals: np.ndarray, unit_sel: Tuple[int, ...]
+    ) -> np.ndarray:
+        """Pattern output from unit columns (product factors multiply)."""
+        idxs = [unit_sel.index(i) for i in self.emits[key]]
+        col = unit_vals[:, idxs[0]].copy()
+        for i in idxs[1:]:
+            col *= unit_vals[:, i]
+        return col
+
+
+# ----------------------------------------------------------------------
+# results
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class MiningResult:
+    """Structured portfolio mining output.
+
+    ``counts[:, j]`` is the participation count of every requested seed
+    edge in pattern ``columns[j]``.  ``seconds`` is per-pattern wall time;
+    patterns listed in ``fused`` were mined by ONE shared kernel pass, and
+    each reports that shared pass's wall time (not additive).  ``stats``
+    are the kernel-call / padded-element / branch-item counters of this
+    call only.
+    """
+
+    columns: Tuple[str, ...]
+    counts: np.ndarray  # (n_seeds, n_patterns) int64
+    backend: str
+    n_seeds: int
+    seconds: Dict[str, float]
+    stats: Dict[str, int]
+    fused: Tuple[str, ...] = ()
+    per_part_seconds: Optional[List[float]] = None
+    partition_plan: Optional[object] = None
+
+    def column(self, name: str) -> np.ndarray:
+        return self.counts[:, self.columns.index(name)]
+
+    def as_features(self) -> np.ndarray:
+        """float32 feature block, one column per pattern."""
+        return self.counts.astype(np.float32)
+
+    def totals(self) -> Dict[str, int]:
+        return {c: int(self.counts[:, j].sum()) for j, c in enumerate(self.columns)}
+
+
+# ----------------------------------------------------------------------
+# the session
+# ----------------------------------------------------------------------
+PatternLike = Union[str, PatternSpec, PatternBuilder]
+
+
+class MiningSession:
+    """Register a pattern portfolio once, compile once, mine everything.
+
+    >>> session = MiningSession(graph, window=4096)
+    >>> session.register("fan_in", "cycle3", my_builder, my_spec)
+    >>> res = session.mine()              # all registered patterns
+    >>> res.column("cycle3"), res.stats["kernel_calls"]
+
+    ``graph`` may be None for a streaming-only session (see
+    :meth:`streaming`).  ``window`` is the default window used to
+    instantiate library patterns referenced by name.
+    """
+
+    def __init__(
+        self,
+        graph: Optional[TemporalGraph] = None,
+        *,
+        window: Optional[int] = None,
+        ladder: Tuple[int, ...] = BUCKET_LADDER,
+        batch_elem_cap: int = BATCH_ELEM_CAP,
+    ):
+        self.graph = graph
+        self.window = window
+        self.ladder = tuple(ladder)
+        self.batch_elem_cap = int(batch_elem_cap)
+        self._specs: Dict[str, PatternSpec] = {}  # name -> spec (reg. order)
+        self._canon_of: Dict[str, str] = {}  # name -> canonical key
+        self._members: Dict[str, PatternSpec] = {}  # key -> representative
+        self._irs: Dict[str, StageGraphIR] = {}  # key -> IR
+        # shared backend state (one per session, every plan reuses it)
+        self._dg = None
+        self._vals_cache: Dict[str, np.ndarray] = {}
+        self._compiled: Dict[str, CompiledPattern] = {}
+        self._fused: Optional[_FusedSeedPlan] = None
+        self._oracles: Dict[str, object] = {}
+        self._analyzed = False
+        # lifetime counters (mirrors CompiledPattern.stats, portfolio-wide)
+        self.stats = {"kernel_calls": 0, "padded_elements": 0, "branch_items": 0}
+
+    # -- registration ---------------------------------------------------
+    def _as_spec(self, pat: PatternLike, window: Optional[int]) -> PatternSpec:
+        if isinstance(pat, PatternSpec):
+            return pat
+        if isinstance(pat, PatternBuilder):
+            return pat.build()
+        if isinstance(pat, str):
+            from repro.core.patterns import build_pattern
+
+            w = window if window is not None else self.window
+            if w is None:
+                raise ValueError(
+                    f"registering library pattern {pat!r} by name needs a "
+                    f"window (pass window= to the session or to register())"
+                )
+            return build_pattern(pat, int(w))
+        raise TypeError(f"cannot register {pat!r} as a pattern")
+
+    def register(
+        self, *patterns: PatternLike, window: Optional[int] = None
+    ) -> "MiningSession":
+        """Add patterns (library names, PatternSpecs, or builders) to the
+        portfolio.  Chainable.  Re-registering an identical pattern is a
+        no-op; a different pattern under a taken name is an error."""
+        for pat in patterns:
+            spec = self._as_spec(pat, window)
+            key = canonical_key(spec)
+            if spec.name in self._specs:
+                if self._canon_of[spec.name] == key:
+                    continue
+                raise ValueError(
+                    f"pattern name {spec.name!r} already registered with a "
+                    f"different structure"
+                )
+            self._specs[spec.name] = spec
+            self._canon_of[spec.name] = key
+            if key not in self._members:
+                self._members[key] = spec
+                self._irs[key] = analyze_stage_graph(spec)
+                self._analyzed = False  # new plan: fusion must be redone
+        return self
+
+    @property
+    def pattern_names(self) -> Tuple[str, ...]:
+        return tuple(self._specs)
+
+    # -- shared analysis / compilation ---------------------------------
+    def compile(self) -> "MiningSession":
+        """Run the shared portfolio analysis: canonical dedup (done at
+        registration), seed-local fusion, and compiled-plan construction
+        against one shared device graph + requirement cache."""
+        if self._analyzed:
+            return self
+        if self.graph is None:
+            raise ValueError("session has no graph; pass one to MiningSession()")
+        if self._dg is None:
+            self._dg = self.graph.to_device()
+        fused_members = {
+            k: s for k, s in self._members.items() if _is_seed_local(self._irs[k])
+        }
+        # keep the existing fused plan (and its jitted kernels) when a new
+        # registration didn't change the seed-local member set
+        if self._fused is None or set(self._fused.emits) != set(fused_members):
+            self._fused = _FusedSeedPlan(
+                fused_members, self.graph, self._dg, self.batch_elem_cap
+            )
+        for key, spec in self._members.items():
+            if key in fused_members or key in self._compiled:
+                continue
+            self._compiled[key] = CompiledPattern(
+                spec,
+                self.graph,
+                ladder=self.ladder,
+                batch_elem_cap=self.batch_elem_cap,
+                device_graph=self._dg,
+                vals_cache=self._vals_cache,
+            )
+        self._analyzed = True
+        return self
+
+    def plan_text(self) -> str:
+        """Human-readable portfolio plan: fusion groups + compiled plans."""
+        self.compile()
+        lines = [f"portfolio of {len(self._specs)} patterns "
+                 f"({len(self._members)} unique plans)"]
+        fused = [n for n in self._specs if self._canon_of[n] in self._fused.emits]
+        if fused:
+            lines.append(
+                f"  fused seed-local kernel: {', '.join(fused)} "
+                f"({self._fused.n_units} deduped count units, 1 launch/batch)"
+            )
+        for name in self._specs:
+            key = self._canon_of[name]
+            if key in self._compiled:
+                aliases = [m for m in self._specs if self._canon_of[m] == key]
+                tag = f" [shared by {', '.join(aliases)}]" if len(aliases) > 1 else ""
+                lines.append(f"  compiled {name}{tag}:")
+                lines += [
+                    "    " + ln for ln in self._compiled[key].plan_text().splitlines()
+                ]
+        return "\n".join(lines)
+
+    # -- mining ---------------------------------------------------------
+    def _resolve_names(self, patterns) -> List[str]:
+        if patterns is None:
+            return list(self._specs)
+        if isinstance(patterns, (str, PatternSpec, PatternBuilder)):
+            patterns = [patterns]
+        names = []
+        for pat in patterns:
+            if isinstance(pat, str) and pat in self._specs:
+                names.append(pat)
+            else:
+                spec = self._as_spec(pat, None)
+                self.register(spec)
+                names.append(spec.name)
+        return names
+
+    def _mine_compiled(
+        self, names: List[str], seeds: np.ndarray
+    ) -> Tuple[np.ndarray, Dict[str, float], Tuple[str, ...], Dict[str, int]]:
+        """One compiled portfolio pass over `seeds`; shared-kernel columns
+        are computed in a single fused launch group."""
+        self.compile()
+        stats = {"kernel_calls": 0, "padded_elements": 0, "branch_items": 0}
+        out = np.zeros((len(seeds), len(names)), dtype=np.int64)
+        seconds: Dict[str, float] = {}
+        fused_cols = [
+            (j, n) for j, n in enumerate(names) if self._canon_of[n] in self._fused.emits
+        ]
+        if fused_cols:
+            unit_sel = self._fused.units_for({self._canon_of[n] for _, n in fused_cols})
+            t0 = time.perf_counter()
+            unit_vals = self._fused.mine_units(seeds, stats, unit_sel)
+            dt = time.perf_counter() - t0
+            for j, n in fused_cols:
+                out[:, j] = self._fused.assemble(self._canon_of[n], unit_vals, unit_sel)
+                seconds[n] = dt  # shared fused-pass wall time (not additive)
+        done: Dict[str, Tuple[np.ndarray, float]] = {}
+        for j, n in enumerate(names):
+            key = self._canon_of[n]
+            if key not in self._compiled:
+                continue
+            if key not in done:
+                cp = self._compiled[key]
+                before = dict(cp.stats)
+                t0 = time.perf_counter()
+                col = cp.mine(seeds)
+                done[key] = (col, time.perf_counter() - t0)
+                for k in stats:
+                    stats[k] += cp.stats[k] - before[k]
+            out[:, j], seconds[n] = done[key]
+        for k in stats:
+            self.stats[k] += stats[k]
+        return out, seconds, tuple(n for _, n in fused_cols), stats
+
+    def mine(
+        self,
+        patterns: Optional[Sequence[PatternLike]] = None,
+        seeds: Optional[np.ndarray] = None,
+        backend: str = "compiled",
+        n_parts: int = 4,
+    ) -> MiningResult:
+        """Mine the requested patterns (default: every registered one)
+        over `seeds` (default: every edge) and return a MiningResult."""
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; options: {BACKENDS}")
+        if self.graph is None:
+            raise ValueError("session has no graph; pass one to MiningSession()")
+        names = self._resolve_names(patterns)
+        g = self.graph
+        if seeds is None:
+            seeds = np.arange(g.n_edges, dtype=np.int32)
+        seeds = np.asarray(seeds, dtype=np.int32)
+
+        if backend == "compiled":
+            counts, seconds, fused, stats = self._mine_compiled(names, seeds)
+            return MiningResult(
+                columns=tuple(names),
+                counts=counts,
+                backend=backend,
+                n_seeds=len(seeds),
+                seconds=seconds,
+                stats=stats,
+                fused=fused,
+            )
+
+        if backend == "oracle":
+            from repro.core.oracle import GFPReference
+
+            counts = np.zeros((len(seeds), len(names)), dtype=np.int64)
+            seconds: Dict[str, float] = {}
+            done: Dict[str, Tuple[np.ndarray, float]] = {}
+            for j, n in enumerate(names):
+                key = self._canon_of[n]
+                if key not in done:
+                    if key not in self._oracles:
+                        self._oracles[key] = GFPReference(self._members[key], g)
+                    t0 = time.perf_counter()
+                    col = self._oracles[key].mine(seeds)
+                    done[key] = (col, time.perf_counter() - t0)
+                counts[:, j], seconds[n] = done[key]
+            return MiningResult(
+                columns=tuple(names),
+                counts=counts,
+                backend=backend,
+                n_seeds=len(seeds),
+                seconds=seconds,
+                stats={"kernel_calls": 0, "padded_elements": 0, "branch_items": 0},
+            )
+
+        if backend == "streaming":
+            sm = self.streaming(names)
+            t0 = time.perf_counter()
+            sm.ingest(g.src, g.dst, g.t, g.amount)
+            dt = time.perf_counter() - t0
+            counts = np.stack([sm.counts[n][seeds] for n in names], axis=1)
+            stats = dict(sm.last_stats)
+            for k in self.stats:
+                self.stats[k] += stats[k]
+            return MiningResult(
+                columns=tuple(names),
+                counts=counts,
+                backend=backend,
+                n_seeds=len(seeds),
+                seconds={n: dt for n in names},
+                stats=stats,
+            )
+
+        # partitioned: degree-balanced parts mined through the SAME
+        # compiled plans (kernel/JIT caches and _vals_cache are shared, so
+        # later parts pay no recompilation)
+        from repro.graph.partition import partition_edges
+
+        plan = partition_edges(g, n_parts, edge_ids=seeds)
+        pos = np.full(g.n_edges, -1, dtype=np.int64)
+        pos[seeds] = np.arange(len(seeds))
+        counts = np.zeros((len(seeds), len(names)), dtype=np.int64)
+        seconds = {n: 0.0 for n in names}
+        stats = {"kernel_calls": 0, "padded_elements": 0, "branch_items": 0}
+        fused: Tuple[str, ...] = ()
+        per_part: List[float] = []
+        for p in range(plan.n_parts):
+            ids = plan.edge_ids[p][plan.valid[p]]
+            t0 = time.perf_counter()
+            part_counts, part_seconds, fused, part_stats = self._mine_compiled(
+                names, ids
+            )
+            per_part.append(time.perf_counter() - t0)
+            counts[pos[ids]] = part_counts
+            for n in names:
+                seconds[n] += part_seconds.get(n, 0.0)
+            for k in stats:
+                stats[k] += part_stats[k]
+        return MiningResult(
+            columns=tuple(names),
+            counts=counts,
+            backend=backend,
+            n_seeds=len(seeds),
+            seconds=seconds,
+            stats=stats,
+            fused=fused,
+            per_part_seconds=per_part,
+            partition_plan=plan,
+        )
+
+    # -- streaming ------------------------------------------------------
+    def streaming(self, patterns: Optional[Sequence[PatternLike]] = None):
+        """A StreamingMiner over the session's portfolio: incremental
+        dirty-frontier updates with the hop/time radius derived from the
+        same registered specs."""
+        from repro.core.streaming import StreamingMiner
+
+        names = self._resolve_names(patterns)
+        return StreamingMiner(
+            [self._specs[n] for n in names], window=self.window or 0
+        )
+
+
+# ----------------------------------------------------------------------
+# feature-extraction entry points (successors of repro.core.features)
+# ----------------------------------------------------------------------
+def mine_features(
+    g: TemporalGraph,
+    window: int,
+    patterns: Sequence[PatternLike],
+    backend: str = "compiled",
+    seed_eids: Optional[np.ndarray] = None,
+    session: Optional[MiningSession] = None,
+) -> np.ndarray:
+    """Pattern-count feature block via a (possibly caller-shared) session."""
+    if session is None:
+        session = MiningSession(g, window=window)
+    session.register(*patterns)
+    res = session.mine(list(patterns), seeds=seed_eids, backend=backend)
+    return res.as_features()
+
+
+def featurize(
+    g: TemporalGraph,
+    window: int,
+    patterns: Union[None, str, Sequence[PatternLike]] = None,
+    backend: str = "compiled",
+    session: Optional[MiningSession] = None,
+) -> Tuple[np.ndarray, Tuple[str, ...]]:
+    """Full feature matrix: base transaction columns + mined counts.
+
+    `patterns` may be an explicit sequence (names / specs / builders) or a
+    feature-group name (``"full"``, ``"deep"``, ``"full_deep"``, ...)."""
+    from repro.core.features import BASE_COLUMNS, base_features
+    from repro.core.patterns import feature_pattern_set
+
+    if patterns is None:
+        patterns = feature_pattern_set("full")
+    elif isinstance(patterns, str):
+        patterns = feature_pattern_set(patterns)
+    base = base_features(g)
+    if len(patterns) == 0:
+        return base, BASE_COLUMNS
+    if session is None:
+        session = MiningSession(g, window=window)
+    session.register(*patterns)
+    res = session.mine(list(patterns), backend=backend)
+    return np.concatenate([base, res.as_features()], axis=1), BASE_COLUMNS + res.columns

@@ -1,4 +1,14 @@
-"""BlazingAML core: multi-stage fuzzy pattern specs + DSL compiler."""
+"""BlazingAML core: multi-stage fuzzy pattern specs + DSL compiler.
+
+The spec/compiler/oracle layers load eagerly; the pattern library,
+feature extraction, and streaming miner resolve lazily via module
+``__getattr__`` — the library is authored in the :mod:`repro.api` fluent
+DSL, which itself builds on :mod:`repro.core.spec`, and the lazy hop
+keeps that dependency cycle open (`import repro.api` and
+`import repro.core` both work from a cold interpreter).
+"""
+import importlib
+
 from repro.core.spec import (
     Neigh,
     NodeRef,
@@ -19,9 +29,17 @@ from repro.core.compiler import (
     compile_pattern,
 )
 from repro.core.oracle import GFPReference
-from repro.core.patterns import build_pattern, feature_pattern_set, PATTERN_NAMES
-from repro.core.features import featurize, mine_features, base_features
-from repro.core.streaming import StreamingMiner
+
+# name -> defining module, resolved on first attribute access
+_LAZY = {
+    "build_pattern": "repro.core.patterns",
+    "feature_pattern_set": "repro.core.patterns",
+    "PATTERN_NAMES": "repro.core.patterns",
+    "featurize": "repro.core.features",
+    "mine_features": "repro.core.features",
+    "base_features": "repro.core.features",
+    "StreamingMiner": "repro.core.streaming",
+}
 
 __all__ = [
     "Neigh",
@@ -40,11 +58,17 @@ __all__ = [
     "analyze_stage_graph",
     "compile_pattern",
     "GFPReference",
-    "build_pattern",
-    "feature_pattern_set",
-    "PATTERN_NAMES",
-    "featurize",
-    "mine_features",
-    "base_features",
-    "StreamingMiner",
+    *_LAZY,
 ]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        val = getattr(importlib.import_module(_LAZY[name]), name)
+        globals()[name] = val
+        return val
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

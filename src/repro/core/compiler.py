@@ -390,17 +390,25 @@ class CompiledPattern:
         ladder: Tuple[int, ...] = BUCKET_LADDER,
         force_strategy: Optional[str] = None,  # bs1 | bs2 | pw (tests)
         batch_elem_cap: int = BATCH_ELEM_CAP,
+        device_graph: Optional[DeviceGraph] = None,
+        vals_cache: Optional[Dict[str, np.ndarray]] = None,
     ):
         self.spec = spec
         self.g = graph
-        self.dg = graph.to_device()
+        # a portfolio MiningSession passes one shared device mirror and one
+        # shared host-side requirement cache (the entries are keyed
+        # symbolically — deg_out, max_in(deg_out), ... — so they are
+        # graph-level facts, valid across every pattern on the same graph)
+        self.dg = device_graph if device_graph is not None else graph.to_device()
         self.ladder = tuple(ladder)
         self.batch_elem_cap = int(batch_elem_cap)
         self.n_iters = ops.n_iters_for(self.dg.max_deg)
         self.force_strategy = force_strategy
         self.ir = analyze_stage_graph(spec)
         self._frontier_by_name = {f.name: f for f in self.ir.frontiers}
-        self._vals_cache: Dict[str, np.ndarray] = {}
+        self._vals_cache: Dict[str, np.ndarray] = (
+            vals_cache if vals_cache is not None else {}
+        )
         self._kernels: Dict[Tuple, Callable] = {}
         # observability: padded elements materialized / kernel invocations /
         # host-decomposed branch items (bench_mining reports these so

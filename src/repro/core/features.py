@@ -4,16 +4,21 @@ Reproduces the GFP/BlazingAML feature pipeline (paper §8.1): each
 transaction edge gets one column per mined pattern (its participation
 count) on top of the raw transaction columns (source account, destination
 account, amount, timestamp) used by the XGB-only baseline.
+
+.. deprecated::
+    ``mine_features`` / ``featurize`` moved to :mod:`repro.api` and now
+    run through a portfolio :class:`~repro.api.MiningSession` (one shared
+    compile, cross-pattern kernel fusion).  The functions here are thin
+    shims that emit a ``DeprecationWarning`` and return identical
+    results; ``base_features`` remains canonical here.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.compiler import CompiledPattern
-from repro.core.oracle import GFPReference
-from repro.core.patterns import build_pattern, feature_pattern_set
 from repro.graph.csr import TemporalGraph
 
 __all__ = ["base_features", "mine_features", "featurize"]
@@ -44,17 +49,17 @@ def mine_features(
     backend: str = "compiled",
     seed_eids: Optional[np.ndarray] = None,
 ) -> np.ndarray:
-    cols = []
-    for name in patterns:
-        spec = build_pattern(name, window)
-        if backend == "compiled":
-            miner = CompiledPattern(spec, g)
-        elif backend == "oracle":
-            miner = GFPReference(spec, g)
-        else:
-            raise ValueError(backend)
-        cols.append(miner.mine(seed_eids).astype(np.float32))
-    return np.stack(cols, axis=1)
+    """Deprecated shim — use :class:`repro.api.MiningSession` (or
+    :func:`repro.api.mine_features`)."""
+    warnings.warn(
+        "repro.core.features.mine_features is deprecated; use "
+        "repro.api.MiningSession / repro.api.mine_features",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.api import mine_features as _mine_features
+
+    return _mine_features(g, window, patterns, backend=backend, seed_eids=seed_eids)
 
 
 def featurize(
@@ -63,19 +68,12 @@ def featurize(
     patterns: Optional[Sequence[str]] = None,
     backend: str = "compiled",
 ) -> Tuple[np.ndarray, Tuple[str, ...]]:
-    """Full feature matrix: base transaction columns + mined pattern counts.
+    """Deprecated shim — use :func:`repro.api.featurize`."""
+    warnings.warn(
+        "repro.core.features.featurize is deprecated; use repro.api.featurize",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.api import featurize as _featurize
 
-    `patterns` may be an explicit sequence of pattern names or a feature
-    group name (e.g. ``"full"``, ``"deep"``, ``"full_deep"`` — the last
-    adds the depth-3+ typologies the stage-graph compiler unlocked).
-    """
-    if patterns is None:
-        patterns = feature_pattern_set("full")
-    elif isinstance(patterns, str):
-        patterns = feature_pattern_set(patterns)
-    base = base_features(g)
-    if len(patterns) == 0:
-        return base, BASE_COLUMNS
-    mined = mine_features(g, window, patterns, backend=backend)
-    names = BASE_COLUMNS + tuple(patterns)
-    return np.concatenate([base, mined], axis=1), names
+    return _featurize(g, window, patterns, backend=backend)

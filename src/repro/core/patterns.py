@@ -1,182 +1,109 @@
-"""Pattern library (paper Fig. 2/4/5): AML typologies as multi-stage specs.
+"""Pattern library (paper Fig. 2/4/5): AML typologies in the fluent DSL.
 
 Every pattern is anchored at a seed edge ``e = (u -> v, t)`` and counts the
 pattern instances that edge participates in, within time window ``W``.
 Temporal-fuzzy variants coexist with strict-order ones — same stages,
-different :class:`Window` anchors — which is precisely the paper's point:
-no re-implementation, only re-specification.
+different window anchors — which is precisely the paper's point: no
+re-implementation, only re-specification.
+
+The builders below are written in the :mod:`repro.api.dsl` fluent
+authoring layer and lower to exactly the same validated
+:class:`~repro.core.spec.PatternSpec` dataclasses the compiler, oracle,
+and streaming layers consume (`tests/test_api_dsl.py` asserts dataclass
+equality against hand-assembled specs) — the library doubles as the DSL's
+documentation.
 """
 from __future__ import annotations
 
-from repro.core.spec import (
-    Neigh,
-    NodeRef,
-    PatternSpec,
-    SEED_DST,
-    SEED_SRC,
-    SEED_T,
-    SetExpr,
-    Stage,
-    StageT,
-    TimeBound,
-    Window,
-)
+from repro.api.dsl import pattern, seed, var
+from repro.core.spec import PatternSpec
 
 __all__ = ["build_pattern", "PATTERN_NAMES", "feature_pattern_set"]
 
 
 def fan_in(w: int) -> PatternSpec:
     """In-edges of the receiver inside the window (smurfing placement)."""
-    return PatternSpec(
-        "fan_in",
-        stages=(
-            Stage(
-                "cnt",
-                "count_window",
-                operand=Neigh(SEED_DST, "in"),
-                window=Window.around_seed(w),
-                emit=True,
-            ),
-        ),
+    return (
+        pattern("fan_in")
+        .count_window("cnt", seed.dst.in_, around_seed=w, emit=True)
+        .build()
     )
 
 
 def fan_out(w: int) -> PatternSpec:
-    return PatternSpec(
-        "fan_out",
-        stages=(
-            Stage(
-                "cnt",
-                "count_window",
-                operand=Neigh(SEED_SRC, "out"),
-                window=Window.around_seed(w),
-                emit=True,
-            ),
-        ),
+    return (
+        pattern("fan_out")
+        .count_window("cnt", seed.src.out, around_seed=w, emit=True)
+        .build()
     )
 
 
 def deg_in(w: int) -> PatternSpec:
     """Windowed in-degree of the *sender* (funds previously received)."""
-    return PatternSpec(
-        "deg_in",
-        stages=(
-            Stage(
-                "cnt",
-                "count_window",
-                operand=Neigh(SEED_SRC, "in"),
-                window=Window.around_seed(w),
-                emit=True,
-            ),
-        ),
+    return (
+        pattern("deg_in")
+        .count_window("cnt", seed.src.in_, around_seed=w, emit=True)
+        .build()
     )
 
 
 def deg_out(w: int) -> PatternSpec:
     """Windowed out-degree of the *receiver* (funds moving on)."""
-    return PatternSpec(
-        "deg_out",
-        stages=(
-            Stage(
-                "cnt",
-                "count_window",
-                operand=Neigh(SEED_DST, "out"),
-                window=Window.around_seed(w),
-                emit=True,
-            ),
-        ),
+    return (
+        pattern("deg_out")
+        .count_window("cnt", seed.dst.out, around_seed=w, emit=True)
+        .build()
     )
 
 
 def cycle2(w: int) -> PatternSpec:
     """Round-trip: v sends back to u after the seed, within W."""
-    return PatternSpec(
-        "cycle2",
-        stages=(
-            Stage(
-                "close",
-                "count_edges",
-                edge_src=SEED_DST,
-                edge_dst=SEED_SRC,
-                window=Window.after_seed(w),
-                emit=True,
-            ),
-        ),
+    return (
+        pattern("cycle2")
+        .count_edges("close", seed.dst, seed.src, after_seed=w, emit=True)
+        .build()
     )
 
 
 def cycle3(w: int) -> PatternSpec:
     """u->v->w->u with strictly increasing times inside (t, t+W]."""
-    return PatternSpec(
-        "cycle3",
-        stages=(
-            Stage(
-                "w",
-                "for_all",
-                operand=Neigh(SEED_DST, "out"),
-                skip_eq=(SEED_SRC, SEED_DST),
-                window=Window.after_seed(w),
-            ),
-            Stage(
-                "close",
-                "count_edges",
-                edge_src=NodeRef("w"),
-                edge_dst=SEED_SRC,
-                window=Window(TimeBound(StageT("w"), 0), TimeBound(SEED_T, w)),
-                emit=True,
-            ),
-        ),
+    return (
+        pattern("cycle3")
+        .for_all("w", seed.dst.out, skip=[seed.src, seed.dst], after_seed=w)
+        .count_edges("close", "w", seed.src, after_stage="w", until_seed=w)
+        .emit("close")
+        .build()
     )
 
 
 def cycle3_fuzzy(w: int) -> PatternSpec:
     """Temporal fuzziness: edges may appear in ANY order inside [t-W, t+W]
     (camouflage/anticipatory edges) — same stages, looser anchors."""
-    return PatternSpec(
-        "cycle3_fuzzy",
-        stages=(
-            Stage(
-                "w",
-                "for_all",
-                operand=Neigh(SEED_DST, "out"),
-                skip_eq=(SEED_SRC, SEED_DST),
-                window=Window.around_seed(w),
-            ),
-            Stage(
-                "close",
-                "count_edges",
-                edge_src=NodeRef("w"),
-                edge_dst=SEED_SRC,
-                window=Window.around_seed(w),
-                emit=True,
-            ),
-        ),
+    return (
+        pattern("cycle3_fuzzy")
+        .for_all("w", seed.dst.out, skip=[seed.src, seed.dst], around_seed=w)
+        .count_edges("close", "w", seed.src, around_seed=w, emit=True)
+        .build()
     )
 
 
 def cycle4(w: int) -> PatternSpec:
     """u->v->w->x->u, ordered, all inside (t, t+W]."""
-    return PatternSpec(
-        "cycle4",
-        stages=(
-            Stage(
-                "w",
-                "for_all",
-                operand=Neigh(SEED_DST, "out"),
-                skip_eq=(SEED_SRC, SEED_DST),
-                window=Window.after_seed(w),
-            ),
-            Stage(
-                "close",
-                "intersect",
-                operands=(Neigh(NodeRef("w"), "out"), Neigh(SEED_SRC, "in")),
-                skip_eq=(SEED_SRC, SEED_DST, NodeRef("w")),
-                window=Window(TimeBound(StageT("w"), 0), TimeBound(SEED_T, w)),
-                window2=Window(TimeBound(SEED_T, 0), TimeBound(SEED_T, w)),
-                ordered=True,
-                emit=True,
-            ),
-        ),
+    return (
+        pattern("cycle4")
+        .for_all("w", seed.dst.out, skip=[seed.src, seed.dst], after_seed=w)
+        .intersect(
+            "close",
+            var("w").out,
+            seed.src.in_,
+            skip=[seed.src, seed.dst, "w"],
+            after_stage="w",
+            until_seed=w,
+            w2_after_seed=w,
+            ordered=True,
+            emit=True,
+        )
+        .build()
     )
 
 
@@ -184,34 +111,28 @@ def cycle5(w: int) -> PatternSpec:
     """u->v->w->x->y->u, ordered, all inside (t, t+W] — a chained
     two-frontier program (w, x) closed by an intersect; the depth the
     fixed-shape compiler could not express."""
-    return PatternSpec(
-        "cycle5",
-        stages=(
-            Stage(
-                "w",
-                "for_all",
-                operand=Neigh(SEED_DST, "out"),
-                skip_eq=(SEED_SRC, SEED_DST),
-                window=Window.after_seed(w),
-            ),
-            Stage(
-                "x",
-                "for_all",
-                operand=Neigh(NodeRef("w"), "out"),
-                skip_eq=(SEED_SRC, SEED_DST, NodeRef("w")),
-                window=Window(TimeBound(StageT("w"), 0), TimeBound(SEED_T, w)),
-            ),
-            Stage(
-                "close",
-                "intersect",
-                operands=(Neigh(NodeRef("x"), "out"), Neigh(SEED_SRC, "in")),
-                skip_eq=(SEED_SRC, SEED_DST, NodeRef("w"), NodeRef("x")),
-                window=Window(TimeBound(StageT("x"), 0), TimeBound(SEED_T, w)),
-                window2=Window(TimeBound(SEED_T, 0), TimeBound(SEED_T, w)),
-                ordered=True,
-                emit=True,
-            ),
-        ),
+    return (
+        pattern("cycle5")
+        .for_all("w", seed.dst.out, skip=[seed.src, seed.dst], after_seed=w)
+        .for_all(
+            "x",
+            var("w").out,
+            skip=[seed.src, seed.dst, "w"],
+            after_stage="w",
+            until_seed=w,
+        )
+        .intersect(
+            "close",
+            var("x").out,
+            seed.src.in_,
+            skip=[seed.src, seed.dst, "w", "x"],
+            after_stage="x",
+            until_seed=w,
+            w2_after_seed=w,
+            ordered=True,
+            emit=True,
+        )
+        .build()
     )
 
 
@@ -220,31 +141,20 @@ def peel_chain(w: int) -> PatternSpec:
     on), each leg after its own predecessor and all inside (t, t+W].  Two
     chained frontiers plus a leaf-level windowed-degree count — a depth-3
     pattern (the onward edge is three hops past the seed receiver)."""
-    return PatternSpec(
-        "peel_chain",
-        stages=(
-            Stage(
-                "m1",
-                "for_all",
-                operand=Neigh(SEED_DST, "out"),
-                skip_eq=(SEED_SRC, SEED_DST),
-                window=Window.after_seed(w),
-            ),
-            Stage(
-                "m2",
-                "for_all",
-                operand=Neigh(NodeRef("m1"), "out"),
-                skip_eq=(SEED_SRC, SEED_DST, NodeRef("m1")),
-                window=Window(TimeBound(StageT("m1"), 0), TimeBound(SEED_T, w)),
-            ),
-            Stage(
-                "fwd",
-                "count_window",
-                operand=Neigh(NodeRef("m2"), "out"),
-                window=Window(TimeBound(StageT("m2"), 0), TimeBound(SEED_T, w)),
-                emit=True,
-            ),
-        ),
+    return (
+        pattern("peel_chain")
+        .for_all("m1", seed.dst.out, skip=[seed.src, seed.dst], after_seed=w)
+        .for_all(
+            "m2",
+            var("m1").out,
+            skip=[seed.src, seed.dst, "m1"],
+            after_stage="m1",
+            until_seed=w,
+        )
+        .count_window(
+            "fwd", var("m2").out, after_stage="m2", until_seed=w, emit=True
+        )
+        .build()
     )
 
 
@@ -253,25 +163,11 @@ def fan_in_chain(w: int) -> PatternSpec:
     (s), u forwards to v (the seed edge), and v scatters onward after it
     (d).  Two *independent* frontiers — the emitted count is their cross
     product, the multiplicative for_all semantics."""
-    return PatternSpec(
-        "fan_in_chain",
-        stages=(
-            Stage(
-                "s",
-                "for_all",
-                operand=Neigh(SEED_SRC, "in"),
-                skip_eq=(SEED_DST,),
-                window=Window.before_seed(w),
-            ),
-            Stage(
-                "d",
-                "for_all",
-                operand=Neigh(SEED_DST, "out"),
-                skip_eq=(SEED_SRC,),
-                window=Window.after_seed(w),
-                emit=True,
-            ),
-        ),
+    return (
+        pattern("fan_in_chain")
+        .for_all("s", seed.src.in_, skip=[seed.dst], before_seed=w)
+        .for_all("d", seed.dst.out, skip=[seed.src], after_seed=w, emit=True)
+        .build()
     )
 
 
@@ -279,108 +175,79 @@ def scatter_gather(w: int) -> PatternSpec:
     """Seed edge = one gather leg (mid u -> sink v).  Stage s finds scatter
     sources; the intersect counts sibling mid chains s->x->v whose gather
     follows its own scatter (per-branch partial order, decoupled phases)."""
-    return PatternSpec(
-        "scatter_gather",
-        stages=(
-            Stage(
-                "s",
-                "for_all",
-                operand=Neigh(SEED_SRC, "in"),
-                skip_eq=(SEED_DST,),
-                window=Window.before_seed(w),
-            ),
-            Stage(
-                "sg",
-                "intersect",
-                operands=(Neigh(NodeRef("s"), "out"), Neigh(SEED_DST, "in")),
-                skip_eq=(SEED_SRC, SEED_DST, NodeRef("s")),
-                window=Window(
-                    TimeBound(StageT("s"), -w - 1), TimeBound(StageT("s"), w)
-                ),
-                window2=Window.around_seed(w),
-                ordered=True,
-                emit=True,
-            ),
-        ),
+    return (
+        pattern("scatter_gather")
+        .for_all("s", seed.src.in_, skip=[seed.dst], before_seed=w)
+        .intersect(
+            "sg",
+            var("s").out,
+            seed.dst.in_,
+            skip=[seed.src, seed.dst, "s"],
+            around_stage=("s", w),
+            w2_around_seed=w,
+            ordered=True,
+            emit=True,
+        )
+        .build()
     )
 
 
 def stack(w: int) -> PatternSpec:
     """Stacked bipartite layering: #(a->u before t) x #(v->d after t)."""
-    return PatternSpec(
-        "stack",
-        stages=(
-            Stage(
-                "up",
-                "count_window",
-                operand=Neigh(SEED_SRC, "in"),
-                window=Window.before_seed(w),
-            ),
-            Stage(
-                "down",
-                "count_window",
-                operand=Neigh(SEED_DST, "out"),
-                window=Window(TimeBound(SEED_T, 0), TimeBound(SEED_T, w)),
-            ),
-            Stage("stk", "product", factors=("up", "down"), emit=True),
-        ),
+    return (
+        pattern("stack")
+        .count_window("up", seed.src.in_, before_seed=w)
+        .count_window("down", seed.dst.out, after_seed=w)
+        .product("stk", "up", "down", emit=True)
+        .build()
     )
 
 
 def reciprocal(w: int) -> PatternSpec:
     """Accounts trading in both directions with u (union/difference demo of
     set algebra is in `counterparty`); uses a pseudo-frontier intersect."""
-    return PatternSpec(
-        "reciprocal",
-        stages=(
-            Stage(
-                "rc",
-                "intersect",
-                operands=(Neigh(SEED_SRC, "out"), Neigh(SEED_SRC, "in")),
-                skip_eq=(SEED_SRC, SEED_DST),
-                window=Window.around_seed(w),
-                window2=Window.around_seed(w),
-                emit=True,
-            ),
-        ),
+    return (
+        pattern("reciprocal")
+        .intersect(
+            "rc",
+            seed.src.out,
+            seed.src.in_,
+            skip=[seed.src, seed.dst],
+            around_seed=w,
+            w2_around_seed=w,
+            emit=True,
+        )
+        .build()
     )
 
 
 def counterparty(w: int) -> PatternSpec:
     """#distinct counterparties of u in the window (union set algebra)."""
-    return PatternSpec(
-        "counterparty",
-        stages=(
-            Stage(
-                "cp",
-                "for_all",
-                operand=SetExpr(
-                    "union", Neigh(SEED_SRC, "out"), Neigh(SEED_SRC, "in")
-                ),
-                skip_eq=(SEED_SRC,),
-                window=Window.around_seed(w),
-                emit=True,
-            ),
-        ),
+    return (
+        pattern("counterparty")
+        .for_all(
+            "cp",
+            seed.src.out | seed.src.in_,
+            skip=[seed.src],
+            around_seed=w,
+            emit=True,
+        )
+        .build()
     )
 
 
 def new_counterparty(w: int) -> PatternSpec:
     """Receivers u pays that never paid u back (difference set algebra)."""
-    return PatternSpec(
-        "new_counterparty",
-        stages=(
-            Stage(
-                "nc",
-                "for_all",
-                operand=SetExpr(
-                    "difference", Neigh(SEED_SRC, "out"), Neigh(SEED_SRC, "in")
-                ),
-                skip_eq=(SEED_SRC,),
-                window=Window.around_seed(w),
-                emit=True,
-            ),
-        ),
+    return (
+        pattern("new_counterparty")
+        .for_all(
+            "nc",
+            seed.src.out - seed.src.in_,
+            skip=[seed.src],
+            around_seed=w,
+            emit=True,
+        )
+        .build()
     )
 
 

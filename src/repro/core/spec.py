@@ -139,6 +139,14 @@ class Neigh:
     def __repr__(self):  # pragma: no cover
         return f"{self.node!r}.{self.direction}_neigh"
 
+    # set-algebra sugar (the fluent DSL in repro.api.dsl leans on these):
+    # `a | b` is the union and `a - b` the difference of two neighborhoods
+    def __or__(self, other: "Neigh") -> "SetExpr":
+        return SetExpr("union", self, other)
+
+    def __sub__(self, other: "Neigh") -> "SetExpr":
+        return SetExpr("difference", self, other)
+
 
 @dataclasses.dataclass(frozen=True)
 class SetExpr:

@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.core.compiler import CompiledPattern, analyze_stage_graph
 from repro.core.patterns import build_pattern
+from repro.core.spec import PatternSpec
 from repro.graph.csr import (
     TemporalGraph,
     build_temporal_graph,
@@ -43,15 +44,22 @@ __all__ = ["StreamingMiner"]
 
 
 class StreamingMiner:
-    def __init__(self, patterns: Sequence[str], window: int):
-        self.pattern_names = tuple(patterns)
+    def __init__(self, patterns: Sequence, window: int):
+        """`patterns` mixes library names (instantiated at `window`) and
+        ready-built :class:`PatternSpec` objects (e.g. authored in the
+        `repro.api` DSL or handed over by a `MiningSession`)."""
         self.window = int(window)
+        specs = [
+            p if isinstance(p, PatternSpec) else build_pattern(p, self.window)
+            for p in patterns
+        ]
+        if len({s.name for s in specs}) != len(specs):
+            raise ValueError("duplicate pattern names in streaming portfolio")
+        self.pattern_names = tuple(s.name for s in specs)
+        self._specs = {s.name: s for s in specs}
         # graph-independent front-end analysis: one IR per pattern gives
         # the locality facts that size the dirty frontier
-        irs = {
-            n: analyze_stage_graph(build_pattern(n, self.window))
-            for n in self.pattern_names
-        }
+        irs = {s.name: analyze_stage_graph(s) for s in specs}
         self.hop_radius: int = max(
             (ir.dirty_radius for ir in irs.values()), default=0
         )
@@ -68,6 +76,10 @@ class StreamingMiner:
             n: np.zeros(0, dtype=np.int64) for n in self.pattern_names
         }
         self.last_dirty: int = 0  # observability: size of last dirty frontier
+        # observability: compiled-kernel counters of the last ingest
+        self.last_stats: Dict[str, int] = {
+            "kernel_calls": 0, "padded_elements": 0, "branch_items": 0
+        }
 
     @property
     def n_edges(self) -> int:
@@ -146,8 +158,16 @@ class StreamingMiner:
             dirty = np.nonzero(cand)[0].astype(np.int32)
 
         self.last_dirty = int(len(dirty))
+        # one device mirror + requirement cache shared by every pattern's
+        # re-mine of this snapshot (the session-style portfolio sharing)
+        dg = g.to_device()
+        vals_cache: Dict[str, np.ndarray] = {}
+        self.last_stats = {k: 0 for k in self.last_stats}
         for name in self.pattern_names:
-            spec = build_pattern(name, self.window)
-            cp = CompiledPattern(spec, g)
+            cp = CompiledPattern(
+                self._specs[name], g, device_graph=dg, vals_cache=vals_cache
+            )
             self.counts[name][dirty] = cp.mine(dirty)
+            for k in self.last_stats:
+                self.last_stats[k] += cp.stats[k]
         return dirty

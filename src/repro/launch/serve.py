@@ -26,10 +26,9 @@ def make_serve_step(cfg):
     @jax.jit
     def serve_step(params, cache, batch):
         logits, new_cache = decode_step(params, cache, batch, cfg)
-        if cfg.n_codebooks > 0:
-            nxt = jnp.argmax(logits[:, -1], axis=-1)  # (B, K)
-        else:
-            nxt = jnp.argmax(logits[:, -1], axis=-1)  # (B,)
+        # last-axis argmax covers both layouts: flat-vocab logits yield
+        # (B,), multi-codebook (n_codebooks > 0) logits yield (B, K)
+        nxt = jnp.argmax(logits[:, -1], axis=-1)
         return nxt, new_cache
 
     return serve_step

@@ -12,7 +12,8 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.features import base_features, mine_features
+from repro.api import MiningSession
+from repro.core.features import base_features
 from repro.core.patterns import feature_pattern_set
 from repro.data.loader import temporal_split
 from repro.data.synth_aml import AMLDataset
@@ -64,7 +65,10 @@ def run_aml_pipeline(
     t0 = time.perf_counter()
     x = base_features(g)
     if patterns:
-        mined = mine_features(g, w, patterns, backend=backend)
+        # portfolio session: one shared compile + seed-local kernel fusion
+        # across the whole feature group
+        session = MiningSession(g, window=w).register(*patterns)
+        mined = session.mine(list(patterns), backend=backend).as_features()
         x = np.concatenate([x, mined], axis=1)
     mine_s = time.perf_counter() - t0
 

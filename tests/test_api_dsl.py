@@ -1,0 +1,397 @@
+"""Round-trip contract of the fluent DSL: every library pattern authored
+in `repro.api.dsl` must lower to EXACTLY the hand-assembled
+`PatternSpec` dataclasses (the pre-DSL front-end), by dataclass
+equality — same stages, same windows, same anchors, same skip sets."""
+import pytest
+
+from repro.api import pattern, seed, var
+from repro.api.dsl import NodeExpr
+from repro.core.patterns import PATTERN_NAMES, build_pattern
+from repro.core.spec import (
+    Neigh,
+    NodeRef,
+    PatternSpec,
+    SEED_DST,
+    SEED_SRC,
+    SEED_T,
+    SetExpr,
+    Stage,
+    StageT,
+    TimeBound,
+    Window,
+)
+
+W = 128
+
+
+def _hand_assembled(name: str, w: int) -> PatternSpec:
+    """The library patterns as explicit dataclass literals (verbatim from
+    the pre-DSL pattern library)."""
+    if name == "fan_in":
+        return PatternSpec(
+            "fan_in",
+            stages=(
+                Stage(
+                    "cnt",
+                    "count_window",
+                    operand=Neigh(SEED_DST, "in"),
+                    window=Window.around_seed(w),
+                    emit=True,
+                ),
+            ),
+        )
+    if name == "fan_out":
+        return PatternSpec(
+            "fan_out",
+            stages=(
+                Stage(
+                    "cnt",
+                    "count_window",
+                    operand=Neigh(SEED_SRC, "out"),
+                    window=Window.around_seed(w),
+                    emit=True,
+                ),
+            ),
+        )
+    if name == "deg_in":
+        return PatternSpec(
+            "deg_in",
+            stages=(
+                Stage(
+                    "cnt",
+                    "count_window",
+                    operand=Neigh(SEED_SRC, "in"),
+                    window=Window.around_seed(w),
+                    emit=True,
+                ),
+            ),
+        )
+    if name == "deg_out":
+        return PatternSpec(
+            "deg_out",
+            stages=(
+                Stage(
+                    "cnt",
+                    "count_window",
+                    operand=Neigh(SEED_DST, "out"),
+                    window=Window.around_seed(w),
+                    emit=True,
+                ),
+            ),
+        )
+    if name == "cycle2":
+        return PatternSpec(
+            "cycle2",
+            stages=(
+                Stage(
+                    "close",
+                    "count_edges",
+                    edge_src=SEED_DST,
+                    edge_dst=SEED_SRC,
+                    window=Window.after_seed(w),
+                    emit=True,
+                ),
+            ),
+        )
+    if name == "cycle3":
+        return PatternSpec(
+            "cycle3",
+            stages=(
+                Stage(
+                    "w",
+                    "for_all",
+                    operand=Neigh(SEED_DST, "out"),
+                    skip_eq=(SEED_SRC, SEED_DST),
+                    window=Window.after_seed(w),
+                ),
+                Stage(
+                    "close",
+                    "count_edges",
+                    edge_src=NodeRef("w"),
+                    edge_dst=SEED_SRC,
+                    window=Window(TimeBound(StageT("w"), 0), TimeBound(SEED_T, w)),
+                    emit=True,
+                ),
+            ),
+        )
+    if name == "cycle3_fuzzy":
+        return PatternSpec(
+            "cycle3_fuzzy",
+            stages=(
+                Stage(
+                    "w",
+                    "for_all",
+                    operand=Neigh(SEED_DST, "out"),
+                    skip_eq=(SEED_SRC, SEED_DST),
+                    window=Window.around_seed(w),
+                ),
+                Stage(
+                    "close",
+                    "count_edges",
+                    edge_src=NodeRef("w"),
+                    edge_dst=SEED_SRC,
+                    window=Window.around_seed(w),
+                    emit=True,
+                ),
+            ),
+        )
+    if name == "cycle4":
+        return PatternSpec(
+            "cycle4",
+            stages=(
+                Stage(
+                    "w",
+                    "for_all",
+                    operand=Neigh(SEED_DST, "out"),
+                    skip_eq=(SEED_SRC, SEED_DST),
+                    window=Window.after_seed(w),
+                ),
+                Stage(
+                    "close",
+                    "intersect",
+                    operands=(Neigh(NodeRef("w"), "out"), Neigh(SEED_SRC, "in")),
+                    skip_eq=(SEED_SRC, SEED_DST, NodeRef("w")),
+                    window=Window(TimeBound(StageT("w"), 0), TimeBound(SEED_T, w)),
+                    window2=Window(TimeBound(SEED_T, 0), TimeBound(SEED_T, w)),
+                    ordered=True,
+                    emit=True,
+                ),
+            ),
+        )
+    if name == "cycle5":
+        return PatternSpec(
+            "cycle5",
+            stages=(
+                Stage(
+                    "w",
+                    "for_all",
+                    operand=Neigh(SEED_DST, "out"),
+                    skip_eq=(SEED_SRC, SEED_DST),
+                    window=Window.after_seed(w),
+                ),
+                Stage(
+                    "x",
+                    "for_all",
+                    operand=Neigh(NodeRef("w"), "out"),
+                    skip_eq=(SEED_SRC, SEED_DST, NodeRef("w")),
+                    window=Window(TimeBound(StageT("w"), 0), TimeBound(SEED_T, w)),
+                ),
+                Stage(
+                    "close",
+                    "intersect",
+                    operands=(Neigh(NodeRef("x"), "out"), Neigh(SEED_SRC, "in")),
+                    skip_eq=(SEED_SRC, SEED_DST, NodeRef("w"), NodeRef("x")),
+                    window=Window(TimeBound(StageT("x"), 0), TimeBound(SEED_T, w)),
+                    window2=Window(TimeBound(SEED_T, 0), TimeBound(SEED_T, w)),
+                    ordered=True,
+                    emit=True,
+                ),
+            ),
+        )
+    if name == "peel_chain":
+        return PatternSpec(
+            "peel_chain",
+            stages=(
+                Stage(
+                    "m1",
+                    "for_all",
+                    operand=Neigh(SEED_DST, "out"),
+                    skip_eq=(SEED_SRC, SEED_DST),
+                    window=Window.after_seed(w),
+                ),
+                Stage(
+                    "m2",
+                    "for_all",
+                    operand=Neigh(NodeRef("m1"), "out"),
+                    skip_eq=(SEED_SRC, SEED_DST, NodeRef("m1")),
+                    window=Window(TimeBound(StageT("m1"), 0), TimeBound(SEED_T, w)),
+                ),
+                Stage(
+                    "fwd",
+                    "count_window",
+                    operand=Neigh(NodeRef("m2"), "out"),
+                    window=Window(TimeBound(StageT("m2"), 0), TimeBound(SEED_T, w)),
+                    emit=True,
+                ),
+            ),
+        )
+    if name == "fan_in_chain":
+        return PatternSpec(
+            "fan_in_chain",
+            stages=(
+                Stage(
+                    "s",
+                    "for_all",
+                    operand=Neigh(SEED_SRC, "in"),
+                    skip_eq=(SEED_DST,),
+                    window=Window.before_seed(w),
+                ),
+                Stage(
+                    "d",
+                    "for_all",
+                    operand=Neigh(SEED_DST, "out"),
+                    skip_eq=(SEED_SRC,),
+                    window=Window.after_seed(w),
+                    emit=True,
+                ),
+            ),
+        )
+    if name == "scatter_gather":
+        return PatternSpec(
+            "scatter_gather",
+            stages=(
+                Stage(
+                    "s",
+                    "for_all",
+                    operand=Neigh(SEED_SRC, "in"),
+                    skip_eq=(SEED_DST,),
+                    window=Window.before_seed(w),
+                ),
+                Stage(
+                    "sg",
+                    "intersect",
+                    operands=(Neigh(NodeRef("s"), "out"), Neigh(SEED_DST, "in")),
+                    skip_eq=(SEED_SRC, SEED_DST, NodeRef("s")),
+                    window=Window(
+                        TimeBound(StageT("s"), -w - 1), TimeBound(StageT("s"), w)
+                    ),
+                    window2=Window.around_seed(w),
+                    ordered=True,
+                    emit=True,
+                ),
+            ),
+        )
+    if name == "stack":
+        return PatternSpec(
+            "stack",
+            stages=(
+                Stage(
+                    "up",
+                    "count_window",
+                    operand=Neigh(SEED_SRC, "in"),
+                    window=Window.before_seed(w),
+                ),
+                Stage(
+                    "down",
+                    "count_window",
+                    operand=Neigh(SEED_DST, "out"),
+                    window=Window(TimeBound(SEED_T, 0), TimeBound(SEED_T, w)),
+                ),
+                Stage("stk", "product", factors=("up", "down"), emit=True),
+            ),
+        )
+    if name == "reciprocal":
+        return PatternSpec(
+            "reciprocal",
+            stages=(
+                Stage(
+                    "rc",
+                    "intersect",
+                    operands=(Neigh(SEED_SRC, "out"), Neigh(SEED_SRC, "in")),
+                    skip_eq=(SEED_SRC, SEED_DST),
+                    window=Window.around_seed(w),
+                    window2=Window.around_seed(w),
+                    emit=True,
+                ),
+            ),
+        )
+    if name == "counterparty":
+        return PatternSpec(
+            "counterparty",
+            stages=(
+                Stage(
+                    "cp",
+                    "for_all",
+                    operand=SetExpr(
+                        "union", Neigh(SEED_SRC, "out"), Neigh(SEED_SRC, "in")
+                    ),
+                    skip_eq=(SEED_SRC,),
+                    window=Window.around_seed(w),
+                    emit=True,
+                ),
+            ),
+        )
+    if name == "new_counterparty":
+        return PatternSpec(
+            "new_counterparty",
+            stages=(
+                Stage(
+                    "nc",
+                    "for_all",
+                    operand=SetExpr(
+                        "difference", Neigh(SEED_SRC, "out"), Neigh(SEED_SRC, "in")
+                    ),
+                    skip_eq=(SEED_SRC,),
+                    window=Window.around_seed(w),
+                    emit=True,
+                ),
+            ),
+        )
+    raise KeyError(name)
+
+
+@pytest.mark.parametrize("name", PATTERN_NAMES)
+def test_dsl_round_trips_library(name):
+    """build_pattern (DSL-authored) == hand-assembled dataclasses."""
+    assert build_pattern(name, W) == _hand_assembled(name, W)
+
+
+def test_node_helpers():
+    assert seed.src.out == Neigh(SEED_SRC, "out")
+    assert seed.dst.in_ == Neigh(SEED_DST, "in")
+    assert var("w").out == Neigh(NodeRef("w"), "out")
+    assert isinstance(var("w"), NodeExpr)
+
+
+def test_set_algebra_operators():
+    u = seed.src.out | seed.src.in_
+    assert u == SetExpr("union", Neigh(SEED_SRC, "out"), Neigh(SEED_SRC, "in"))
+    d = seed.src.out - seed.src.in_
+    assert d == SetExpr("difference", Neigh(SEED_SRC, "out"), Neigh(SEED_SRC, "in"))
+
+
+def test_emit_chain_equivalent_to_flag():
+    a = (
+        pattern("p")
+        .count_window("cnt", seed.dst.in_, around_seed=W, emit=True)
+        .build()
+    )
+    b = pattern("p").count_window("cnt", seed.dst.in_, around_seed=W).emit("cnt").build()
+    assert a == b
+
+
+def test_emit_unknown_stage_raises():
+    with pytest.raises(KeyError, match="no such stage"):
+        pattern("p").count_window("cnt", seed.dst.in_, around_seed=W).emit("nope")
+
+
+def test_window_sugar_conflicts_rejected():
+    with pytest.raises(TypeError, match="conflicts"):
+        pattern("p").count_window(
+            "cnt", seed.dst.in_, around_seed=W, after_seed=W, emit=True
+        )
+    with pytest.raises(TypeError, match="unknown keyword"):
+        pattern("p").count_window("cnt", seed.dst.in_, wndow=W, emit=True)
+    with pytest.raises(TypeError, match="intersect-only"):
+        pattern("p").count_window("cnt", seed.dst.in_, w2_around_seed=W, emit=True)
+
+
+def test_explicit_window_escape_hatch():
+    win = Window(TimeBound(SEED_T, -3), TimeBound(SEED_T, 17))
+    spec = (
+        pattern("p").count_window("cnt", seed.dst.in_, window=win, emit=True).build()
+    )
+    assert spec.stages[0].window == win
+
+
+def test_builder_validation_propagates():
+    # validation errors surface at build() via PatternSpec.validate()
+    with pytest.raises(ValueError, match="unbound node"):
+        pattern("p").count_window("cnt", var("ghost").out, emit=True).build()
+    with pytest.raises(ValueError, match="exactly one stage must emit"):
+        pattern("p").count_window("cnt", seed.dst.in_, around_seed=W).build()
+
+
+def test_builder_requires_direction():
+    with pytest.raises(TypeError, match="direction"):
+        pattern("p").count_window("cnt", seed.dst, emit=True)
