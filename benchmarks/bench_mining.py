@@ -7,15 +7,42 @@ comparison is apples-to-apples.  The compiled numbers are steady-state
 
 All patterns run through one portfolio :class:`repro.api.MiningSession`
 (shared device graph + requirement cache), mined one at a time so the
-per-pattern timing and padding observability counters (padded elements
-materialized, kernel calls, host-decomposed branch items) stay
-attributable — bucketing regressions show up in benchmark diffs, not
-just runtime noise.  The depth-3+ stage-graph patterns (cycle5 /
-peel_chain / fan_in_chain) verify against the enumerator on a smaller
-subsample — the pure-Python reference is exponential in frontier depth.
+per-pattern timing and observability counters stay attributable —
+bucketing and host-sync regressions show up in benchmark diffs, not just
+runtime noise.  The depth-3+ stage-graph patterns (cycle5 / peel_chain /
+fan_in_chain) verify against the enumerator on a smaller subsample — the
+pure-Python reference is exponential in frontier depth.
+
+Counter glossary (``repro.core.executor.STAT_KEYS``):
+
+* ``kernel_calls`` — device launches.  A hub-tail sweep grid is ONE
+  launch (the offset loop is fused into the kernel as a ``fori_loop``),
+  so this is the metric the async executor drives down.
+* ``padded_elements`` — padded query-shape elements materialized, sweep
+  iterations included (comparable across executor generations).
+* ``branch_items`` — host-decomposed hub branch items.
+* ``host_syncs`` — blocking device→host transfers.  Exactly 1 per mine
+  call in the device-resident regime (the single fetch of finished
+  counts); the pre-executor engine paid one per kernel call.
+* ``bytes_h2d`` / ``bytes_d2h`` — staging / result transfer volume.
+* ``jit_cache_entries`` — distinct kernel traces compiled (gauge); the
+  pow2 chunk ladder keeps it logarithmic in batch count.
+* ``schedule_hits`` — bucket schedules replayed from the schedule cache
+  (repeated mines skip the host-side numpy grouping).
+
+Emits one CSV row per figure plus ``BENCH_mining.json`` at the repo root
+(written by ``benchmarks/run.py`` in the full sweep), including the
+``hub_tails`` section: the same portfolio mined with a tiny bucket
+ladder, which forces tail sweeps at every level — the sweep-fusion /
+async-dispatch stress test, compared against the pre-executor baseline
+counters recorded below.
+
+  PYTHONPATH=src python -m benchmarks.bench_mining [--scale S] [--out P]
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
@@ -25,6 +52,8 @@ from repro.api import MiningSession
 from repro.core.oracle import GFPReference
 from repro.core.patterns import build_pattern
 from repro.data.synth_aml import load_dataset
+
+ROOT_OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_mining.json")
 
 FIGS = {
     "fig6/scatter_gather": "scatter_gather",
@@ -40,13 +69,51 @@ FIGS = {
 }
 DEEP = {"cycle5", "peel_chain", "fan_in_chain"}
 
+# hub-tail stress: a tiny ladder forces offset sweeps at every level, so
+# these patterns measure the sweep-fusion launch-count win directly
+HUB_PATTERNS = ("cycle3", "scatter_gather", "peel_chain")
+HUB_LADDER = (4, 8)
+
+# Pre-executor counters (host-synced per-kernel engine, commit 4c452be)
+# at the SAME configuration: HI-Small scale=0.5, window=4096, 3000 seeds,
+# steady state.  kernel_calls here include one launch per sweep step and
+# host_syncs was one np.asarray per launch (never counted, hence absent).
+BASELINE_SCALE = 0.5
+BASELINE = {
+    "figs": {
+        "scatter_gather": {"wall_s": 0.0377, "kernel_calls": 22, "padded_elements": 121168},
+        "cycle3": {"wall_s": 0.0292, "kernel_calls": 14, "padded_elements": 1141420},
+        "cycle4": {"wall_s": 0.0382, "kernel_calls": 17, "padded_elements": 741752},
+        "fan_in": {"wall_s": 0.0020, "kernel_calls": 1, "padded_elements": 4096},
+        "fan_out": {"wall_s": 0.0016, "kernel_calls": 1, "padded_elements": 4096},
+        "stack": {"wall_s": 0.0032, "kernel_calls": 1, "padded_elements": 8192},
+        "cycle5": {"wall_s": 0.0556, "kernel_calls": 22, "padded_elements": 2770752},
+        "peel_chain": {"wall_s": 0.3735, "kernel_calls": 12, "padded_elements": 2465440},
+        "fan_in_chain": {"wall_s": 0.0378, "kernel_calls": 15, "padded_elements": 1147460},
+    },
+    "hub_tails": {
+        "cycle3": {"wall_s": 0.3549, "kernel_calls": 264, "padded_elements": 14276365},
+        "scatter_gather": {"wall_s": 0.6310, "kernel_calls": 555, "padded_elements": 2176496},
+        "peel_chain": {"wall_s": 2.0711, "kernel_calls": 185, "padded_elements": 15058312},
+    },
+}
+
+
+def _steady_mine(session, name, seeds):
+    """(stats, wall) of a steady-state single-pattern mine."""
+    session.mine([name], seeds=seeds)  # compile / warm schedule
+    t0 = time.perf_counter()
+    res = session.mine([name], seeds=seeds)
+    return res, time.perf_counter() - t0
+
 
 def run(
     dataset="HI-Small",
-    scale=1.0,
+    scale=0.5,
     n_oracle_seeds=3000,
     n_deep_oracle_seeds=300,
     window=4096,
+    out_path=ROOT_OUT,
 ):
     ds = load_dataset(dataset, scale=scale)
     g = ds.graph
@@ -54,18 +121,28 @@ def run(
     sample = rng.choice(
         g.n_edges, size=min(n_oracle_seeds, g.n_edges), replace=False
     ).astype(np.int32)
+    report = {
+        "dataset": ds.name,
+        "scale": scale,
+        "window": window,
+        "n_seeds": int(len(sample)),
+        "figs": {},
+        "hub_tails": {},
+        "baseline": {"scale": BASELINE_SCALE, **BASELINE},
+    }
     session = MiningSession(g, window=window).register(*FIGS.values())
+    pallas = MiningSession(g, window=window, kernel_backend="pallas").register(
+        *FIGS.values()
+    )
     out = {}
     for label, name in FIGS.items():
         t0 = time.perf_counter()
         session.mine([name], seeds=sample)  # compile + first run
         compile_s = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        res = session.mine([name], seeds=sample)  # steady state
-        blazing_s = time.perf_counter() - t0
+        res, blazing_s = _steady_mine(session, name, sample)
         got = res.column(name)
-        # exactness check: full sample for the classic patterns, a
-        # subsample for deep ones (the reference enumerator is O(d^depth))
+        # exactness #1: GFP enumerator (full sample for classic patterns,
+        # a subsample for deep ones — the reference is O(d^depth))
         verify = sample if name not in DEEP else sample[:n_deep_oracle_seeds]
         orc = GFPReference(build_pattern(name, window), g)
         t0 = time.perf_counter()
@@ -73,6 +150,11 @@ def run(
         gfp_s = time.perf_counter() - t0
         got_v = got if name not in DEEP else got[: len(verify)]
         assert np.array_equal(got_v, ref), f"{name}: count mismatch vs GFP-ref"
+        # exactness #2: the Pallas kernel backend must agree everywhere
+        pres = pallas.mine([name], seeds=sample)
+        assert np.array_equal(
+            pres.column(name), got
+        ), f"{name}: xla vs pallas backend mismatch"
         gfp_rate = len(verify) / gfp_s if gfp_s > 0 else float("inf")
         speedup = (
             (len(sample) / blazing_s) / gfp_rate
@@ -80,6 +162,15 @@ def run(
             else float("inf")
         )
         out[name] = (blazing_s, gfp_s, speedup, dict(res.stats))
+        report["figs"][name] = {
+            "wall_s": blazing_s,
+            "gfp_wall_s": gfp_s,
+            "speedup": speedup,
+            "first_compile_s": compile_s,
+            "counts_match_oracle": True,
+            "counts_match_pallas": True,
+            **{k: int(v) for k, v in res.stats.items()},
+        }
         emit(
             label,
             blazing_s / len(sample) * 1e6,
@@ -88,11 +179,68 @@ def run(
             f"first_compile_s={compile_s:.1f};"
             f"padded_elements={res.stats['padded_elements']};"
             f"kernel_calls={res.stats['kernel_calls']};"
+            f"host_syncs={res.stats['host_syncs']};"
             f"branch_items={res.stats['branch_items']};"
             f"counts_match=True",
         )
+
+    # hub-tail sweep stress: tiny ladder, same seeds; exactness against
+    # the default-ladder counts from the main section
+    hub = MiningSession(g, window=window, ladder=HUB_LADDER).register(
+        *HUB_PATTERNS
+    )
+    for name in HUB_PATTERNS:
+        res, wall = _steady_mine(hub, name, sample)
+        assert np.array_equal(
+            res.column(name), session.mine([name], seeds=sample).column(name)
+        ), f"{name}: hub-ladder counts diverge"
+        assert res.stats["host_syncs"] == 1, (name, res.stats)
+        entry = {
+            "wall_s": wall,
+            "ladder": list(HUB_LADDER),
+            **{k: int(v) for k, v in res.stats.items()},
+        }
+        base = BASELINE["hub_tails"].get(name)
+        if base is not None and scale == BASELINE_SCALE:
+            entry["launch_reduction_vs_baseline"] = base["kernel_calls"] / max(
+                1, res.stats["kernel_calls"]
+            )
+            entry["wall_speedup_vs_baseline"] = base["wall_s"] / max(
+                wall, 1e-9
+            )
+        report["hub_tails"][name] = entry
+        emit(
+            f"hub_tails/{name}",
+            wall / len(sample) * 1e6,
+            f"kernel_calls={res.stats['kernel_calls']};"
+            f"host_syncs={res.stats['host_syncs']};"
+            + (
+                f"launch_reduction={entry['launch_reduction_vs_baseline']:.1f}x;"
+                if "launch_reduction_vs_baseline" in entry
+                else ""
+            )
+            + f"padded_elements={res.stats['padded_elements']}",
+        )
+
+    out_path = os.path.abspath(out_path)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {out_path}")
     return out
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.5)
+    ap.add_argument("--oracle-seeds", type=int, default=3000)
+    ap.add_argument("--deep-oracle-seeds", type=int, default=300)
+    ap.add_argument("--out", default=ROOT_OUT)
+    args = ap.parse_args()
+    run(
+        scale=args.scale,
+        n_oracle_seeds=args.oracle_seeds,
+        n_deep_oracle_seeds=args.deep_oracle_seeds,
+        out_path=args.out,
+    )

@@ -32,7 +32,11 @@ def main() -> None:
     if "mining" in only:
         from benchmarks import bench_mining
 
-        jobs.append(("mining", bench_mining.run))
+        # the mining bench is the perf trajectory: always emit its
+        # BENCH_mining.json (counters + baseline deltas) at the repo root
+        jobs.append(
+            ("mining", lambda: bench_mining.run(out_path=bench_mining.ROOT_OUT))
+        )
     if "portfolio" in only:
         from benchmarks import bench_portfolio
 

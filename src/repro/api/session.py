@@ -37,7 +37,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core import ops
+from repro.core import executor, ops
 from repro.core.compiler import (
     BATCH_ELEM_CAP,
     BUCKET_LADDER,
@@ -267,10 +267,16 @@ class _FusedSeedPlan:
         unit_sel: Optional[Tuple[int, ...]] = None,
     ) -> np.ndarray:
         """(n_seeds, len(unit_sel)) int64 unit values; one kernel launch
-        per (pow2-padded) seed chunk regardless of how many patterns
+        per (ladder-padded) seed chunk regardless of how many patterns
         fused.  `unit_sel` (default: all units) restricts the launch to
         the units the requested patterns actually need, so subset mines
-        neither compute nor get charged for the rest of the portfolio."""
+        neither compute nor get charged for the rest of the portfolio.
+
+        Device-resident: staging buffers are built once and moved with a
+        single ``device_put``, per-chunk launches stay asynchronous on
+        device slices, and the finished unit matrix comes back in ONE
+        blocking device→host transfer."""
+        import jax
         import jax.numpy as jnp
 
         if unit_sel is None:
@@ -281,38 +287,33 @@ class _FusedSeedPlan:
         fn = self._jitted[unit_sel]
         g = self.g
         n = len(seed_eids)
-        out = np.zeros((n, n_units), dtype=np.int64)
         if n == 0 or n_units == 0:
-            return out
-        src = g.src[seed_eids].astype(np.int32)
-        dst = g.dst[seed_eids].astype(np.int32)
-        st = g.t[seed_eids].astype(np.int32)
-
-        def pow2ceil(x: int) -> int:
-            return 1 << max(0, int(x - 1).bit_length())
-
-        bchunk = max(32, self.batch_elem_cap // max(1, n_units))
-        bchunk = 1 << (bchunk.bit_length() - 1)  # round DOWN to a power of
-        # two: full chunks are pow2-shaped and a pow2ceil-padded tail can
-        # never exceed bchunk (keeping every launch under batch_elem_cap)
-        bchunk = min(bchunk, pow2ceil(n))
-        for s0 in range(0, n, bchunk):
-            idx = slice(s0, min(n, s0 + bchunk))
-            ln = idx.stop - idx.start
-            want = bchunk if n - s0 >= bchunk else pow2ceil(ln)
-            pad = want - ln
-            neg = np.full(pad, -1, np.int32)
-            zero = np.zeros(pad, np.int32)
-            res = fn(
-                self.dg,
-                jnp.asarray(np.concatenate([src[idx], neg])),
-                jnp.asarray(np.concatenate([dst[idx], neg])),
-                jnp.asarray(np.concatenate([st[idx], zero])),
-            )
+            return np.zeros((n, n_units), dtype=np.int64)
+        widths = executor.chunk_widths(n, self.batch_elem_cap, n_units)
+        total = sum(widths)
+        # one padded staging buffer per field (padding only ever lands in
+        # the tail chunk), one host→device transfer for the whole batch
+        ss = np.full(total, -1, np.int32)
+        dd = np.full(total, -1, np.int32)
+        tt = np.zeros(total, np.int32)
+        ss[:n] = g.src[seed_eids]
+        dd[:n] = g.dst[seed_eids]
+        tt[:n] = g.t[seed_eids]
+        dev_s, dev_d, dev_t = jax.device_put((ss, dd, tt))
+        stats["bytes_h2d"] += int(ss.nbytes + dd.nbytes + tt.nbytes)
+        chunks = []
+        s0 = 0
+        for w in widths:
+            sl = slice(s0, s0 + w)
+            chunks.append(fn(self.dg, dev_s[sl], dev_d[sl], dev_t[sl]))
             stats["kernel_calls"] += 1
-            stats["padded_elements"] += want * n_units
-            out[idx] = np.asarray(res, dtype=np.int64)[:ln]
-        return out
+            stats["padded_elements"] += w * n_units
+            s0 += w
+        dev_out = chunks[0] if len(chunks) == 1 else jnp.concatenate(chunks)
+        host = np.asarray(dev_out)  # THE one host sync of the fused pass
+        stats["host_syncs"] += 1
+        stats["bytes_d2h"] += int(host.nbytes)
+        return host[:n].astype(np.int64)
 
     def assemble(
         self, key: str, unit_vals: np.ndarray, unit_sel: Tuple[int, ...]
@@ -336,8 +337,12 @@ class MiningResult:
     edge in pattern ``columns[j]``.  ``seconds`` is per-pattern wall time;
     patterns listed in ``fused`` were mined by ONE shared kernel pass, and
     each reports that shared pass's wall time (not additive).  ``stats``
-    are the kernel-call / padded-element / branch-item counters of this
-    call only.
+    are this call's deltas of the executor counters (see
+    :data:`repro.core.executor.STAT_KEYS` for the glossary): kernel
+    launches, padded elements, branch items, host syncs (exactly one per
+    backend invocation — each compiled plan and the fused pass transfer
+    their finished counts once), staging bytes h2d/d2h, new JIT traces,
+    and bucket-schedule cache hits.
     """
 
     columns: Tuple[str, ...]
@@ -378,6 +383,12 @@ class MiningSession:
     ``graph`` may be None for a streaming-only session (see
     :meth:`streaming`).  ``window`` is the default window used to
     instantiate library patterns referenced by name.
+
+    ``kernel_backend`` selects the lowering of the pairwise compare cube
+    in every compiled plan: ``"xla"`` (pure jnp broadcasting, default) or
+    ``"pallas"`` (the ``kernels/intersect_count`` Pallas op — Mosaic on
+    TPU, interpret mode elsewhere).  Counts are identical either way;
+    `tests/test_compiler_oracle.py` asserts it.
     """
 
     def __init__(
@@ -387,11 +398,13 @@ class MiningSession:
         window: Optional[int] = None,
         ladder: Tuple[int, ...] = BUCKET_LADDER,
         batch_elem_cap: int = BATCH_ELEM_CAP,
+        kernel_backend: str = "xla",
     ):
         self.graph = graph
         self.window = window
         self.ladder = tuple(ladder)
         self.batch_elem_cap = int(batch_elem_cap)
+        self.kernel_backend = kernel_backend
         self._specs: Dict[str, PatternSpec] = {}  # name -> spec (reg. order)
         self._canon_of: Dict[str, str] = {}  # name -> canonical key
         self._members: Dict[str, PatternSpec] = {}  # key -> representative
@@ -404,7 +417,7 @@ class MiningSession:
         self._oracles: Dict[str, object] = {}
         self._analyzed = False
         # lifetime counters (mirrors CompiledPattern.stats, portfolio-wide)
-        self.stats = {"kernel_calls": 0, "padded_elements": 0, "branch_items": 0}
+        self.stats = executor.new_stats()
 
     # -- registration ---------------------------------------------------
     def _as_spec(self, pat: PatternLike, window: Optional[int]) -> PatternSpec:
@@ -482,6 +495,7 @@ class MiningSession:
                 batch_elem_cap=self.batch_elem_cap,
                 device_graph=self._dg,
                 vals_cache=self._vals_cache,
+                backend=self.kernel_backend,
             )
         self._analyzed = True
         return self
@@ -530,7 +544,7 @@ class MiningSession:
         """One compiled portfolio pass over `seeds`; shared-kernel columns
         are computed in a single fused launch group."""
         self.compile()
-        stats = {"kernel_calls": 0, "padded_elements": 0, "branch_items": 0}
+        stats = executor.new_stats()
         out = np.zeros((len(seeds), len(names)), dtype=np.int64)
         seconds: Dict[str, float] = {}
         fused_cols = [
@@ -614,7 +628,7 @@ class MiningSession:
                 backend=backend,
                 n_seeds=len(seeds),
                 seconds=seconds,
-                stats={"kernel_calls": 0, "padded_elements": 0, "branch_items": 0},
+                stats=executor.new_stats(),
             )
 
         if backend == "streaming":
@@ -645,7 +659,7 @@ class MiningSession:
         pos[seeds] = np.arange(len(seeds))
         counts = np.zeros((len(seeds), len(names)), dtype=np.int64)
         seconds = {n: 0.0 for n in names}
-        stats = {"kernel_calls": 0, "padded_elements": 0, "branch_items": 0}
+        stats = executor.new_stats()
         fused: Tuple[str, ...] = ()
         per_part: List[float] = []
         for p in range(plan.n_parts):
@@ -681,7 +695,9 @@ class MiningSession:
 
         names = self._resolve_names(patterns)
         return StreamingMiner(
-            [self._specs[n] for n in names], window=self.window or 0
+            [self._specs[n] for n in names],
+            window=self.window or 0,
+            backend=self.kernel_backend,
         )
 
 

@@ -47,27 +47,43 @@ the target graph feed the decisions):
    decomposed into per-branch work items (the paper's two-phase "deep
    tail" post-processing): the level-1 frontier is expanded host-side and
    every branch is **re-bucketed per level** by its OWN degrees.
-5. **Lowering** — emit one jitted kernel per (strategy, bucket tuple):
-   pure jnp broadcasting over nested ``(B, D1, ..., Dk[, DA][, DB])``
-   query shapes built from ``repro.core.ops``.  No data-dependent control
-   flow; temporal constraints become closed-form rank differences.
+5. **Lowering** — emit one jitted kernel per (strategy, bucket tuple,
+   sweep grid): pure jnp broadcasting over nested
+   ``(B, D1, ..., Dk[, DA][, DB])`` query shapes built from
+   ``repro.core.ops``.  No data-dependent control flow; temporal
+   constraints become closed-form rank differences.  The hub-tail sweep
+   grid is folded INTO the kernel as a ``lax.fori_loop`` over offset
+   combinations, so a swept bucket is one launch, not ``n_sweep``.  With
+   ``backend="pallas"`` the pairwise (``pw``) compare cube routes through
+   the ``kernels/intersect_count`` Pallas op (interpret mode off-TPU),
+   whose VMEM-budgeted ``block_rows`` tiling is derived from the same
+   bucket-ladder dims.
+
+6. **Execution** (:mod:`repro.core.executor`) — the bucket schedule
+   (unique (strategy, bucket) groups, chunk widths, padded staging
+   buffers, scatter targets) is built host-side ONCE per (plan, seed
+   set) and cached; execution is fully device-resident: one
+   ``device_put`` per group, async kernel launches scatter-added into a
+   device output vector, and a single device→host sync per ``mine()``.
 
 Counts are exact: `tests/test_compiler_oracle.py` checks them against the
-pure-Python GFP-reference enumerator on every pattern and every strategy,
-including the chained-frontier depth-3+ patterns (cycle5, peel_chain).
+pure-Python GFP-reference enumerator on every pattern, every strategy,
+and both kernel backends, including the chained-frontier depth-3+
+patterns (cycle5, peel_chain).
 """
 from __future__ import annotations
 
 import dataclasses
-import itertools
+import hashlib
 import math
+from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import ops
+from repro.core import executor, ops
 from repro.core.spec import (
     NEG_INF,
     POS_INF,
@@ -113,6 +129,56 @@ BRANCH_DECOMP_COST = float(1 << 11)
 
 def _pow2ceil(x: int) -> int:
     return 1 << max(0, int(x - 1).bit_length())
+
+
+_I32_MIN = -(2**31)
+_I32_MAX = 2**31 - 1
+
+
+def _pallas_pair_count(
+    lead: Tuple[int, ...],
+    d_a: int,
+    d_b: int,
+    x_ids,
+    x_t,
+    y_ids,
+    y_t,
+    a_lo,
+    a_hi,
+    b_lo,
+    b_hi,
+    ordered: bool,
+):
+    """Route a pairwise compare cube through the Pallas intersect kernel.
+
+    The query shape ``lead = (B, W1..Wk)`` is flattened to kernel rows and
+    both padded neighbor tiles are broadcast to ``(rows, D)``; window
+    bounds must be constant along the D axes (they anchor at seed or
+    frontier stage times, never at the expansion element).  The Pallas op
+    picks its VMEM-budgeted ``block_rows`` from the static (d_a, d_b)
+    bucket dims and runs in interpret mode off-TPU.
+    """
+    from repro.kernels.intersect_count import intersect_count
+
+    def tile(a, w):
+        return jnp.broadcast_to(a, lead + (w,)).reshape(-1, w)
+
+    def row(a):
+        a = jnp.asarray(a, jnp.int32)
+        return jnp.broadcast_to(a, lead + (1,)).reshape(-1)
+
+    cnt = intersect_count(
+        tile(x_ids, d_a),
+        tile(x_t, d_a),
+        tile(y_ids, d_b),
+        tile(y_t, d_b),
+        row(a_lo),
+        row(a_hi),
+        row(b_lo),
+        row(b_hi),
+        ordered=ordered,
+    )
+    return cnt.reshape(lead)
 
 
 def _ladder_class(req: np.ndarray, ladder=BUCKET_LADDER) -> np.ndarray:
@@ -392,9 +458,13 @@ class CompiledPattern:
         batch_elem_cap: int = BATCH_ELEM_CAP,
         device_graph: Optional[DeviceGraph] = None,
         vals_cache: Optional[Dict[str, np.ndarray]] = None,
+        backend: str = "xla",
     ):
+        if backend not in ("xla", "pallas"):
+            raise ValueError(f"unknown kernel backend {backend!r}; xla|pallas")
         self.spec = spec
         self.g = graph
+        self.backend = backend
         # a portfolio MiningSession passes one shared device mirror and one
         # shared host-side requirement cache (the entries are keyed
         # symbolically — deg_out, max_in(deg_out), ... — so they are
@@ -410,10 +480,23 @@ class CompiledPattern:
             vals_cache if vals_cache is not None else {}
         )
         self._kernels: Dict[Tuple, Callable] = {}
-        # observability: padded elements materialized / kernel invocations /
-        # host-decomposed branch items (bench_mining reports these so
-        # bucketing regressions are visible)
-        self.stats = {"padded_elements": 0, "kernel_calls": 0, "branch_items": 0}
+        # bucket schedules are pure in (plan, graph degree requirements,
+        # seed ids): repeated mine() calls over the same seeds skip the
+        # host-side numpy grouping entirely (the session keeps compiled
+        # plans alive, so this cache lives next to its _vals_cache).
+        # LRU-capped: schedules pin their staging buffers, so a long-lived
+        # session mining ever-fresh seed sets must not accumulate them
+        self._schedules: "OrderedDict[Tuple[int, str], executor.Schedule]" = (
+            OrderedDict()
+        )
+        self.schedule_cache_cap = 8
+        # distinct (strategy, dims, sweeps, branch, batch) kernel traces —
+        # proves the chunk ladder keeps JIT cache growth bounded
+        self._trace_keys: set = set()
+        # observability: see repro.core.executor.STAT_KEYS for the glossary
+        # (bench_mining reports these so bucketing / sync regressions are
+        # visible in benchmark diffs, not just runtime noise)
+        self.stats = executor.new_stats()
 
     # -- convenience re-exports from the IR ----------------------------
     @property
@@ -655,15 +738,28 @@ class CompiledPattern:
         return dg.in_indptr, dg.in_nbr, dg.in_t, dg.in_t_sorted
 
     def _build_kernel(
-        self, strat: int, dims: Tuple[int, ...], branch_mode: bool = False
+        self,
+        strat: int,
+        dims: Tuple[int, ...],
+        sweeps: Tuple[int, ...] = (),
+        branch_mode: bool = False,
     ) -> Callable:
         """Lower the stage graph to one jitted kernel for a fixed
-        (strategy, per-level bucket widths) combination.
+        (strategy, per-level bucket widths, sweep grid) combination.
 
         ``dims`` is (W1..Wk, DA, DB): the padded width of every frontier
-        level plus the two intersect expansions (1 when unused)."""
+        level plus the two intersect expansions (1 when unused).
+        ``sweeps`` gives the per-dim offset-sweep counts for hub tails;
+        the full sweep grid is folded into the kernel as a
+        ``lax.fori_loop`` over offset combinations (counts are additive
+        across the grid), so a swept bucket is ONE launch instead of
+        ``prod(sweeps)``.  The grid is a static fori bound and therefore
+        part of the trace key — the scheduler pow2-clamps per-dim sweep
+        counts so the set of grids stays logarithmic in hub degree."""
         ir, n_iters = self.ir, self.n_iters
         k = len(ir.frontiers)
+        if not sweeps:
+            sweeps = (1,) * len(dims)
 
         def lift(arr, lvl):
             arr = jnp.asarray(arr)
@@ -676,7 +772,7 @@ class CompiledPattern:
             a = jnp.asarray(arr)
             return a.reshape(a.shape[0], *([1] * (axis_lvl - 1)), a.shape[1])
 
-        def kernel(dg: DeviceGraph, s, d, st_, fr, frt, offs):
+        def body(dg: DeviceGraph, s, d, st_, fr, frt, offs):
             node_env = {"seed.src": (s, 0), "seed.dst": (d, 0)}
             time_env: Dict[str, Tuple] = {}
             mask_env: Dict[str, Tuple] = {}
@@ -836,20 +932,40 @@ class CompiledPattern:
                     m3, y_ids, y_t = ops.expand(
                         indptr_b, (nbr_b, t_b), fixed, d_b, offset=off_b
                     )  # (B, DB) -> axis k+2
-                    yb = mid_lift(y_ids, lx + 1)
-                    yt = mid_lift(y_t, lx + 1)
-                    a2 = bound_at(it.window2.after, lx + 1)
-                    u2 = bound_at(it.window2.until, lx + 1)
-                    pair = (
-                        m_x[..., None]
-                        & mid_lift(m3, lx + 1)
-                        & (x_ids[..., None] == yb)
-                        & (yt > a2)
-                        & (yt <= u2)
-                    )
-                    if it.ordered:
-                        pair = pair & (yt > x_t[..., None])
-                    branch = jnp.sum(pair, axis=(-1, -2)).astype(jnp.int32)
+                    if self.backend == "pallas":
+                        # window 1 + skip_eq are folded into the x tile's
+                        # -1 sentinels; window 2 rides in as the Pallas
+                        # kernel's fixed-side window (constant along DB)
+                        lead = (s.shape[0],) + tuple(dims[:k])
+                        branch = _pallas_pair_count(
+                            lead,
+                            d_a,
+                            d_b,
+                            jnp.where(m_x, x_ids, -1),
+                            x_t,
+                            mid_lift(jnp.where(m3, y_ids, -1), lx),
+                            mid_lift(y_t, lx),
+                            _I32_MIN,
+                            _I32_MAX,
+                            bound_at(it.window2.after, lx),
+                            bound_at(it.window2.until, lx),
+                            it.ordered,
+                        )
+                    else:
+                        yb = mid_lift(y_ids, lx + 1)
+                        yt = mid_lift(y_t, lx + 1)
+                        a2 = bound_at(it.window2.after, lx + 1)
+                        u2 = bound_at(it.window2.until, lx + 1)
+                        pair = (
+                            m_x[..., None]
+                            & mid_lift(m3, lx + 1)
+                            & (x_ids[..., None] == yb)
+                            & (yt > a2)
+                            & (yt <= u2)
+                        )
+                        if it.ordered:
+                            pair = pair & (yt > x_t[..., None])
+                        branch = jnp.sum(pair, axis=(-1, -2)).astype(jnp.int32)
                 count_env[it.name] = (branch, k)
 
             # ---- count stages -----------------------------------------
@@ -893,14 +1009,34 @@ class CompiledPattern:
                         )  # (B, DB) — in-neighbors of dst (= edge sources)
                         aw = bound_at(st.window.after, lx)
                         uw = bound_at(st.window.until, lx)
-                        y2, yt2 = mid_lift(y_ids, lx), mid_lift(y_t, lx)
-                        pair = (
-                            mid_lift(m3, lx)
-                            & (lift(base, lx) == y2)
-                            & (yt2 > aw)
-                            & (yt2 <= uw)
-                        )
-                        cnt = jnp.sum(pair, axis=-1).astype(jnp.int32)
+                        if self.backend == "pallas":
+                            # degenerate Da=1 tile: the frontier id itself
+                            # (its -1 sentinel already marks invalid slots)
+                            lead = (s.shape[0],) + tuple(dims[:k])
+                            xb = lift(base, lx)
+                            cnt = _pallas_pair_count(
+                                lead,
+                                1,
+                                d_b,
+                                xb,
+                                jnp.zeros_like(xb),
+                                mid_lift(jnp.where(m3, y_ids, -1), lx),
+                                mid_lift(y_t, lx),
+                                _I32_MIN,
+                                _I32_MAX,
+                                aw,
+                                uw,
+                                False,
+                            )
+                        else:
+                            y2, yt2 = mid_lift(y_ids, lx), mid_lift(y_t, lx)
+                            pair = (
+                                mid_lift(m3, lx)
+                                & (lift(base, lx) == y2)
+                                & (yt2 > aw)
+                                & (yt2 <= uw)
+                            )
+                            cnt = jnp.sum(pair, axis=-1).astype(jnp.int32)
                     else:
                         indptr, nbr, t, _ = self._rows(dg, "out")
                         cnt = ops.count_id_in_window(
@@ -938,15 +1074,45 @@ class CompiledPattern:
                 total = total.sum(axis=-1)
             return total.astype(jnp.int32)
 
+        # ---- sweep fusion: the offset grid lives INSIDE the kernel ----
+        # counts are additive across the sweep grid, so a fori_loop over
+        # the flattened combo index turns n_sweep launches into one
+        n_sweep = int(np.prod(sweeps))
+        strides: List[int] = []
+        acc = 1
+        for sc in reversed(sweeps):
+            strides.append(acc)
+            acc *= sc
+        strides = tuple(reversed(strides))
+
+        def kernel(dg: DeviceGraph, s, d, st_, fr, frt):
+            if n_sweep == 1:
+                offs = tuple(jnp.int32(0) for _ in dims)
+                return body(dg, s, d, st_, fr, frt, offs)
+
+            def step(i, total):
+                offs = tuple(
+                    ((i // strides[j]) % sweeps[j]) * jnp.int32(dims[j])
+                    for j in range(len(dims))
+                )
+                return total + body(dg, s, d, st_, fr, frt, offs)
+
+            init = jnp.zeros(s.shape, jnp.int32)
+            return jax.lax.fori_loop(0, n_sweep, step, init)
+
         return kernel
 
     def _kernel(
-        self, strat: int, dims: Tuple[int, ...], branch=False
+        self,
+        strat: int,
+        dims: Tuple[int, ...],
+        sweeps: Tuple[int, ...],
+        branch=False,
     ) -> Callable:
-        key = (strat, dims, branch)
+        key = (strat, dims, sweeps, branch)
         if key not in self._kernels:
             self._kernels[key] = jax.jit(
-                self._build_kernel(strat, dims, branch)
+                self._build_kernel(strat, dims, sweeps, branch)
             )
         return self._kernels[key]
 
@@ -960,16 +1126,16 @@ class CompiledPattern:
             if isinstance(f.operand, SetExpr) and f.operand.op == "union"
         }
 
-    def _run_buckets(
-        self, out, sel_all, src, dst, st, fr, frt, strat, reqs, classes, branch, seed_of
-    ):
-        """Group rows by (strategy, per-level bucket classes), run kernels,
-        accumulate.
+    def _plan_buckets(
+        self, n_out, sel_all, src, dst, st, fr, frt, strat, reqs, classes, branch, seed_of
+    ) -> List[executor.BucketGroup]:
+        """Group rows by (strategy, per-level bucket classes) and stage
+        every group for the device executor.
 
         ``reqs``/``classes`` are per-dim requirement / class arrays over
         (W1..Wk, DA, DB); class -1 means the dim is unused by that row's
-        strategy.  In branch mode, row results are segment-summed into
-        ``out[seed_of[row]]``.
+        strategy.  In branch mode, row results are scatter-added into
+        ``out[seed_of[row]]`` by the executor.
         """
         n_levels = len(self.ir.frontiers)
         n_dims = n_levels + 2
@@ -994,6 +1160,7 @@ class CompiledPattern:
                 classes[j] = c
         keys = np.stack([strat] + list(classes), axis=1)
         uniq = np.unique(keys, axis=0)
+        groups: List[executor.BucketGroup] = []
         for key in uniq:
             sk, kcs = int(key[0]), key[1:]
             sel = sel_all[np.all(keys == key, axis=1)]
@@ -1010,54 +1177,44 @@ class CompiledPattern:
                     else:
                         mx = int(req[sel].max())
                         dims.append(bmax)
-                        sweeps.append(math.ceil(mx / bmax))
+                        # pow2-clamp the sweep count: it is part of the
+                        # kernel trace key (the grid is a static fori
+                        # bound), so distinct hub maxima must map onto a
+                        # log ladder of grids, not mint one compile each;
+                        # extra offset steps past the row end are fully
+                        # masked by expand() and contribute zero
+                        sweeps.append(_pow2ceil(math.ceil(mx / bmax)))
                 else:
                     dims.append(int(self.ladder[kc]))
                     sweeps.append(1)
-            fn = self._kernel(sk, tuple(dims), branch)
             per_row = max(1, int(np.prod(dims, dtype=np.int64)))
-            bchunk = max(32, self.batch_elem_cap // per_row)
-            bchunk = min(bchunk, _pow2ceil(len(sel)))
-            n_sweep = int(np.prod(sweeps, dtype=np.int64))
-            for s0 in range(0, len(sel), bchunk):
-                idx = sel[s0 : s0 + bchunk]
-                want = bchunk if len(sel) - s0 >= bchunk else _pow2ceil(
-                    len(sel) - s0
+            widths = executor.chunk_widths(
+                len(sel), self.batch_elem_cap, per_row
+            )
+            staging = executor.build_staging(
+                widths,
+                n_out,
+                sel,
+                src,
+                dst,
+                st,
+                seg_vals=(seed_of[sel] if branch else sel).astype(np.int32),
+                fr=fr if branch else None,
+                frt=frt if branch else None,
+            )
+            groups.append(
+                executor.BucketGroup(
+                    strat=sk,
+                    dims=tuple(dims),
+                    sweeps=tuple(sweeps),
+                    branch=branch,
+                    widths=widths,
+                    staging=staging,
+                    per_row=per_row,
+                    n_sweep=int(np.prod(sweeps, dtype=np.int64)),
                 )
-                pad = want - len(idx)
-                neg = np.full(pad, -1, np.int32)
-                zero = np.zeros(pad, np.int32)
-                ss = np.concatenate([src[idx], neg])
-                dd_ = np.concatenate([dst[idx], neg])
-                tt = np.concatenate([st[idx], zero])
-                if branch:
-                    ff = np.concatenate([fr[idx], neg])
-                    fft = np.concatenate([frt[idx], zero])
-                else:
-                    ff = np.full(want, -1, np.int32)
-                    fft = np.zeros(want, np.int32)
-                acc = np.zeros(want, dtype=np.int64)
-                for combo in itertools.product(*(range(s) for s in sweeps)):
-                    offs = tuple(
-                        jnp.int32(o * dim) for o, dim in zip(combo, dims)
-                    )
-                    res = fn(
-                        self.dg,
-                        jnp.asarray(ss),
-                        jnp.asarray(dd_),
-                        jnp.asarray(tt),
-                        jnp.asarray(ff),
-                        jnp.asarray(fft),
-                        offs,
-                    )
-                    acc += np.asarray(res, dtype=np.int64)
-                self.stats["kernel_calls"] += n_sweep
-                self.stats["padded_elements"] += want * per_row * n_sweep
-                acc = acc[: len(idx)]
-                if branch:
-                    np.add.at(out, seed_of[idx], acc)
-                else:
-                    out[idx] = acc
+            )
+        return groups
 
     def _host_bound(self, tb: TimeBound, st: np.ndarray) -> np.ndarray:
         if tb.anchor is None:
@@ -1087,16 +1244,15 @@ class CompiledPattern:
             ok &= fr != vals[item_seed]
         return item_seed[ok], fr[ok], frt[ok].astype(np.int32)
 
-    def mine(self, seed_eids: Optional[np.ndarray] = None) -> np.ndarray:
+    def _build_schedule(self, seed_eids: np.ndarray) -> executor.Schedule:
+        """Host-side half of a mine: bucketing, strategy selection, hub
+        decomposition, chunking, and staging — pure in (plan, graph
+        degree requirements, seed ids), so the result is cached."""
         g = self.g
         ir = self.ir
-        if seed_eids is None:
-            seed_eids = np.arange(g.n_edges, dtype=np.int32)
-        seed_eids = np.asarray(seed_eids, dtype=np.int32)
         n = len(seed_eids)
-        out = np.zeros(n, dtype=np.int64)
-        if n == 0:
-            return out
+        groups: List[executor.BucketGroup] = []
+        branch_items = 0
 
         k = len(ir.frontiers)
         w_reqs = self._frontier_reqs(seed_eids)
@@ -1129,8 +1285,8 @@ class CompiledPattern:
             cls = [_ladder_class(r, self.ladder)[norm] for r in w_reqs]
             c_a = np.where(use_a, _ladder_class(d_a_req, self.ladder), -1)
             c_b = np.where(use_b, _ladder_class(d_b_req, self.ladder), -1)
-            self._run_buckets(
-                out,
+            groups += self._plan_buckets(
+                n,
                 norm,
                 src,
                 dst,
@@ -1154,7 +1310,7 @@ class CompiledPattern:
                 seed_of = hub[item_seed_l]
                 src_b = src[seed_of]
                 dst_b = dst[seed_of]
-                self.stats["branch_items"] += len(fr)
+                branch_items = len(fr)
                 ones = np.ones(len(fr), dtype=np.int64)
                 # per-item requirements use ACTUAL branch degrees at every
                 # level below the decomposed frontier
@@ -1194,8 +1350,8 @@ class CompiledPattern:
                 bc_a = np.where(use_a, _ladder_class(bd_a, self.ladder), -1)
                 bc_b = np.where(use_b, _ladder_class(bd_b, self.ladder), -1)
                 items = np.arange(len(fr))
-                self._run_buckets(
-                    out,
+                groups += self._plan_buckets(
+                    n,
                     items,
                     src_b,
                     dst_b,
@@ -1208,7 +1364,40 @@ class CompiledPattern:
                     branch=True,
                     seed_of=seed_of,
                 )
-        return out
+        return executor.Schedule(
+            groups=groups, branch_items=branch_items, n_out=n
+        )
+
+    def mine(self, seed_eids: Optional[np.ndarray] = None) -> np.ndarray:
+        """Mine per-seed pattern counts, device-resident end to end.
+
+        The cached bucket schedule is replayed through
+        :func:`repro.core.executor.execute`: one ``device_put`` per bucket
+        group, async launches scatter-added into a device output vector,
+        and exactly ONE blocking device→host sync for the finished counts.
+        """
+        if seed_eids is None:
+            seed_eids = np.arange(self.g.n_edges, dtype=np.int32)
+        seed_eids = np.asarray(seed_eids, dtype=np.int32)
+        n = len(seed_eids)
+        if n == 0:
+            return np.zeros(0, dtype=np.int64)
+        key = (n, hashlib.sha1(seed_eids.tobytes()).hexdigest())
+        sched = self._schedules.get(key)
+        if sched is None:
+            sched = self._build_schedule(seed_eids)
+            self._schedules[key] = sched
+            while len(self._schedules) > self.schedule_cache_cap:
+                self._schedules.popitem(last=False)  # evict LRU
+        else:
+            self._schedules.move_to_end(key)
+            self.stats["schedule_hits"] += 1
+        self.stats["branch_items"] += sched.branch_items
+        out_dev = executor.execute(
+            sched.groups, n, self._kernel, self.dg, self.stats, self._trace_keys
+        )
+        self.stats["jit_cache_entries"] = len(self._trace_keys)
+        return executor.fetch(out_dev, self.stats).astype(np.int64)
 
 
 def compile_pattern(spec: PatternSpec, graph: TemporalGraph, **kw) -> CompiledPattern:

@@ -31,6 +31,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core import executor
 from repro.core.compiler import CompiledPattern, analyze_stage_graph
 from repro.core.patterns import build_pattern
 from repro.core.spec import PatternSpec
@@ -44,11 +45,15 @@ __all__ = ["StreamingMiner"]
 
 
 class StreamingMiner:
-    def __init__(self, patterns: Sequence, window: int):
+    def __init__(self, patterns: Sequence, window: int, backend: str = "xla"):
         """`patterns` mixes library names (instantiated at `window`) and
         ready-built :class:`PatternSpec` objects (e.g. authored in the
-        `repro.api` DSL or handed over by a `MiningSession`)."""
+        `repro.api` DSL or handed over by a `MiningSession`).  `backend`
+        selects the compiled kernels' pairwise lowering (``"xla"`` |
+        ``"pallas"``); incremental re-mines share the same device-resident
+        executor as batch mining (one host sync per pattern per ingest)."""
         self.window = int(window)
+        self.backend = backend
         specs = [
             p if isinstance(p, PatternSpec) else build_pattern(p, self.window)
             for p in patterns
@@ -76,10 +81,9 @@ class StreamingMiner:
             n: np.zeros(0, dtype=np.int64) for n in self.pattern_names
         }
         self.last_dirty: int = 0  # observability: size of last dirty frontier
-        # observability: compiled-kernel counters of the last ingest
-        self.last_stats: Dict[str, int] = {
-            "kernel_calls": 0, "padded_elements": 0, "branch_items": 0
-        }
+        # observability: executor counters of the last ingest (see
+        # repro.core.executor.STAT_KEYS for the glossary)
+        self.last_stats: Dict[str, int] = executor.new_stats()
 
     @property
     def n_edges(self) -> int:
@@ -162,10 +166,14 @@ class StreamingMiner:
         # re-mine of this snapshot (the session-style portfolio sharing)
         dg = g.to_device()
         vals_cache: Dict[str, np.ndarray] = {}
-        self.last_stats = {k: 0 for k in self.last_stats}
+        self.last_stats = executor.new_stats()
         for name in self.pattern_names:
             cp = CompiledPattern(
-                self._specs[name], g, device_graph=dg, vals_cache=vals_cache
+                self._specs[name],
+                g,
+                device_graph=dg,
+                vals_cache=vals_cache,
+                backend=self.backend,
             )
             self.counts[name][dirty] = cp.mine(dirty)
             for k in self.last_stats:

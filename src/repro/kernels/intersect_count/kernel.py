@@ -22,6 +22,13 @@ Output:
 Block tiling: grid over B; each step loads (bm, Da) + (bm, Db) tiles into
 VMEM and materializes a (bm, Da, Db) compare cube.  ``ops.py`` picks bm so
 the cube stays within the VMEM budget (bm * Da * Db <= ~2^21 int32 lanes ~= 8MB).
+
+The compiled mining executor (``repro.core.compiler`` with
+``backend="pallas"``) lowers every ``pw``-strategy bucket onto this op:
+the (B, W1..Wk) query shape is flattened to kernel rows, Da/Db are the
+bucket-ladder expansion widths, and hub-tail sweeps run the op inside a
+``fori_loop`` over row offsets — so the same kernel serves every bucket
+of the power-law degree ladder with a statically VMEM-safe tile.
 """
 from __future__ import annotations
 

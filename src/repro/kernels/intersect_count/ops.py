@@ -4,6 +4,12 @@ Pads the batch to a block multiple and picks ``block_rows`` so the
 (bm, Da, Db) compare cube stays inside the VMEM budget.  On non-TPU
 backends the kernel runs in interpret mode (correctness path); on TPU it
 compiles to a Mosaic kernel.
+
+This wrapper is shape-polymorphic only in Python: called under ``jit``
+(the compiled mining path routes every ``pw``-strategy bucket through it
+when ``backend="pallas"``), the batch and tile dims are static bucket
+ladder widths, so :func:`block_rows_for` resolves the VMEM tiling at
+trace time and the pad/unpad slices fuse into the surrounding program.
 """
 from __future__ import annotations
 
@@ -15,15 +21,21 @@ import numpy as np
 
 from repro.kernels.intersect_count.kernel import intersect_count_pallas
 
-__all__ = ["intersect_count"]
+__all__ = ["intersect_count", "block_rows_for"]
 
 _VMEM_INT32_BUDGET = 1 << 21  # ~8 MB of int32 lanes for the compare cube
 
 
-def _block_rows(da: int, db: int) -> int:
+def block_rows_for(da: int, db: int) -> int:
+    """Rows per grid step so the (bm, da, db) compare cube fits the VMEM
+    budget; power-of-two, capped at 256 rows.  ``da``/``db`` are bucket
+    ladder widths on the compiled path, so the tile shape is a pure
+    function of the bucket."""
     bm = max(1, _VMEM_INT32_BUDGET // max(1, da * db))
-    # power-of-two, capped at 256 rows
     return 1 << min(8, max(0, int(bm).bit_length() - 1))
+
+
+_block_rows = block_rows_for  # backwards-compatible private alias
 
 
 def intersect_count(

@@ -205,6 +205,41 @@ def test_subset_mine_charges_only_requested_units(dense_graph):
     np.testing.assert_array_equal(one.column("fan_in"), all_.column("fan_in"))
 
 
+def test_single_host_sync_per_backend_invocation(dense_graph):
+    """The async executor regime, locked in: a full-portfolio mine blocks
+    on the device exactly once per backend invocation — once for the
+    fused seed-local pass and once per unique compiled plan — never once
+    per kernel call, chunk, or sweep step."""
+    patterns = feature_pattern_set("full_deep")
+    session = MiningSession(dense_graph, window=W).register(*patterns)
+    res = session.mine()
+    n_invocations = len(session._compiled) + (1 if res.fused else 0)
+    assert res.stats["host_syncs"] == n_invocations
+    assert res.stats["kernel_calls"] > n_invocations  # syncs ≪ launches
+    # repeated mines replay cached bucket schedules (no numpy regrouping)
+    res2 = session.mine()
+    assert res2.stats["host_syncs"] == n_invocations
+    assert res2.stats["schedule_hits"] == len(session._compiled)
+    np.testing.assert_array_equal(res.counts, res2.counts)
+
+
+def test_session_kernel_backend_pallas(dense_graph):
+    """kernel_backend="pallas" routes pw compare cubes through the Pallas
+    intersect op (interpret mode on CPU) with identical counts."""
+    names = ["cycle3", "cycle4", "scatter_gather", "peel_chain"]
+    base = MiningSession(dense_graph, window=W).register(*names).mine()
+    got = (
+        MiningSession(dense_graph, window=W, kernel_backend="pallas")
+        .register(*names)
+        .mine()
+    )
+    np.testing.assert_array_equal(got.counts, base.counts)
+    with pytest.raises(ValueError, match="kernel backend"):
+        MiningSession(dense_graph, window=W, kernel_backend="cuda").register(
+            "cycle3"
+        ).compile()
+
+
 def test_plan_text_shows_fusion_and_sharing(small_graph):
     session = MiningSession(small_graph, window=4096).register(
         *feature_pattern_set("full")

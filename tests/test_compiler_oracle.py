@@ -1,7 +1,8 @@
 """The core correctness contract: compiled counts == GFP-reference counts,
-for every pattern, every lowering strategy, and the hub decomposition —
-including the depth-3+ chained-frontier patterns the stage-graph IR
-lowers (cycle5, peel_chain, fan_in_chain)."""
+for every pattern, every lowering strategy, both kernel backends (pure-XLA
+and Pallas, interpret mode on CPU), and the hub decomposition — including
+the depth-3+ chained-frontier patterns the stage-graph IR lowers (cycle5,
+peel_chain, fan_in_chain)."""
 import numpy as np
 import pytest
 
@@ -17,26 +18,30 @@ W = 96
 DEEP = ("cycle5", "peel_chain", "fan_in_chain")
 
 
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
 @pytest.mark.parametrize("name", PATTERN_NAMES)
-def test_pattern_matches_oracle(small_graph, name):
+def test_pattern_matches_oracle(small_graph, name, backend):
     spec = build_pattern(name, 4096)
     rng = np.random.default_rng(0)
     seeds = rng.choice(
         small_graph.n_edges, size=min(150, small_graph.n_edges), replace=False
     ).astype(np.int32)
-    got = CompiledPattern(spec, small_graph).mine(seeds)
+    got = CompiledPattern(spec, small_graph, backend=backend).mine(seeds)
     ref = GFPReference(spec, small_graph).mine(seeds)
     np.testing.assert_array_equal(got, ref)
 
 
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
 @pytest.mark.parametrize("name", ["cycle4", "cycle5", "scatter_gather", "reciprocal"])
 @pytest.mark.parametrize("strategy", ["bs1", "bs2", "pw"])
-def test_intersect_strategies_agree(small_graph, name, strategy):
+def test_intersect_strategies_agree(small_graph, name, strategy, backend):
     spec = build_pattern(name, 4096)
     rng = np.random.default_rng(1)
     seeds = rng.choice(small_graph.n_edges, size=100, replace=False).astype(np.int32)
     base = CompiledPattern(spec, small_graph).mine(seeds)
-    forced = CompiledPattern(spec, small_graph, force_strategy=strategy).mine(seeds)
+    forced = CompiledPattern(
+        spec, small_graph, force_strategy=strategy, backend=backend
+    ).mine(seeds)
     np.testing.assert_array_equal(base, forced)
 
 
@@ -193,6 +198,62 @@ def test_mining_stats_observable(small_graph):
     cp.mine(np.arange(64, dtype=np.int32))
     assert cp.stats["kernel_calls"] > 0
     assert cp.stats["padded_elements"] > 0
+    assert cp.stats["jit_cache_entries"] > 0
+    assert cp.stats["bytes_h2d"] > 0 and cp.stats["bytes_d2h"] > 0
+
+
+def test_single_host_sync_per_mine(small_graph):
+    """The device-resident executor performs exactly ONE blocking
+    device→host transfer per mine call, regardless of bucket groups,
+    chunking, sweeps, or the hub branch path."""
+    for name, kw in [
+        ("cycle3", {}),
+        ("peel_chain", {"ladder": (4, 8)}),  # tail sweeps
+        ("cycle5", {"batch_elem_cap": 1 << 8}),  # many chunks
+    ]:
+        cp = CompiledPattern(build_pattern(name, 4096), small_graph, **kw)
+        cp.mine(np.arange(80, dtype=np.int32))
+        assert cp.stats["host_syncs"] == 1, (name, cp.stats)
+        cp.mine(np.arange(80, dtype=np.int32))
+        assert cp.stats["host_syncs"] == 2
+
+
+def test_schedule_cache_replays_grouping(small_graph):
+    """The bucket schedule is pure in (plan, seeds): a repeated mine over
+    the same seed set is served from the schedule cache (no host-side
+    regrouping) and returns identical counts; a different seed set
+    misses."""
+    cp = CompiledPattern(build_pattern("cycle3", 4096), small_graph)
+    seeds = np.arange(100, dtype=np.int32)
+    first = cp.mine(seeds)
+    assert cp.stats["schedule_hits"] == 0
+    again = cp.mine(seeds)
+    np.testing.assert_array_equal(first, again)
+    assert cp.stats["schedule_hits"] == 1
+    cp.mine(seeds[:50])
+    assert cp.stats["schedule_hits"] == 1  # different seeds: no false hit
+    assert len(cp._schedules) == 2
+
+
+def test_tail_chunks_clamped_to_pow2_ladder(small_graph):
+    """Regression (JIT cache pressure): every traced batch width must sit
+    on the power-of-two chunk ladder — tail chunks may not mint one JIT
+    entry per distinct tail length — and jit_cache_entries must not grow
+    when only the number of seeds changes within a ladder step."""
+    cp = CompiledPattern(
+        build_pattern("cycle3", 4096), small_graph, batch_elem_cap=1 << 10
+    )
+    for n in (33, 34, 47, 63, 180, 193):
+        cp.mine(np.arange(n, dtype=np.int32))
+    assert cp.stats["jit_cache_entries"] == len(cp._trace_keys)
+    assert all((w & (w - 1)) == 0 for (*_, w) in cp._trace_keys)
+    # each (strategy, dims, sweeps, branch) kernel may be traced at only
+    # logarithmically many batch widths (the pow2 ladder), never one per
+    # distinct tail length
+    per_kernel = {}
+    for (*kern, w) in cp._trace_keys:
+        per_kernel.setdefault(tuple(kern), set()).add(w)
+    assert all(len(ws) <= 6 for ws in per_kernel.values())
 
 
 def test_known_cycle_counts():
