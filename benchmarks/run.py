@@ -16,8 +16,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "--only",
-        default="kernels,mining,portfolio,scaling,f1,fraudgt,roofline",
-        help="comma list: kernels,mining,portfolio,scaling,f1,fraudgt,roofline",
+        default="kernels,mining,portfolio,streaming,scaling,f1,fraudgt,roofline",
+        help="comma list: kernels,mining,portfolio,streaming,scaling,f1,"
+        "fraudgt,roofline",
     )
     args = ap.parse_args()
     only = set(args.only.split(","))
@@ -41,6 +42,18 @@ def main() -> None:
         from benchmarks import bench_portfolio
 
         jobs.append(("portfolio", bench_portfolio.run))
+    if "streaming" in only:
+        from benchmarks import bench_streaming
+
+        # the streaming bench is the locality trajectory: always emit its
+        # BENCH_streaming.json (dirty fractions + maintenance + exactness)
+        # at the repo root
+        jobs.append(
+            (
+                "streaming",
+                lambda: bench_streaming.run(out_path=bench_streaming.ROOT_OUT),
+            )
+        )
     if "scaling" in only:
         from benchmarks import bench_scaling
 

@@ -24,7 +24,7 @@ runs ONE shared analysis, and mines everything:
 matrix, column names, kernel-call / padded-element counters, per-pattern
 wall time) and supports four backends: ``"compiled"`` (default),
 ``"oracle"`` (GFP enumerator), ``"streaming"`` (single-shot ingest
-through :class:`~repro.core.streaming.StreamingMiner`), and
+through :class:`repro.stream.DetectionService`), and
 ``"partitioned"`` (degree-balanced edge partitions mined sequentially
 through the same compiled plans — the shard_map layout).
 """
@@ -632,12 +632,14 @@ class MiningSession:
             )
 
         if backend == "streaming":
-            sm = self.streaming(names)
+            svc = self.service(names)
             t0 = time.perf_counter()
-            sm.ingest(g.src, g.dst, g.t, g.amount)
+            svc.submit(g.src, g.dst, g.t, g.amount)
             dt = time.perf_counter() - t0
-            counts = np.stack([sm.counts[n][seeds] for n in names], axis=1)
-            stats = dict(sm.last_stats)
+            counts = np.stack(
+                [svc.pattern_counts(n)[seeds] for n in names], axis=1
+            )
+            stats = dict(svc.last_report.stats)
             for k in self.stats:
                 self.stats[k] += stats[k]
             return MiningResult(
@@ -687,18 +689,46 @@ class MiningSession:
         )
 
     # -- streaming ------------------------------------------------------
-    def streaming(self, patterns: Optional[Sequence[PatternLike]] = None):
-        """A StreamingMiner over the session's portfolio: incremental
-        dirty-frontier updates with the hop/time radius derived from the
-        same registered specs."""
-        from repro.core.streaming import StreamingMiner
+    def service(
+        self, patterns: Optional[Sequence[PatternLike]] = None, **kwargs
+    ):
+        """A :class:`repro.stream.DetectionService` over the session's
+        portfolio: incremental ingest with per-pattern dirty radii
+        derived from the same registered specs.  ``kwargs`` pass through
+        (``thresholds=``, ``scorer=``, ``retain=``, ...)."""
+        from repro.stream import DetectionService
 
         names = self._resolve_names(patterns)
-        return StreamingMiner(
+        kwargs.setdefault("backend", self.kernel_backend)
+        return DetectionService(
             [self._specs[n] for n in names],
             window=self.window or 0,
-            backend=self.kernel_backend,
+            **kwargs,
         )
+
+    def streaming(self, patterns: Optional[Sequence[PatternLike]] = None):
+        """Deprecated: a :class:`~repro.core.streaming.StreamingMiner`
+        shim over the session's portfolio.  Use :meth:`service` for the
+        streaming subsystem's full surface (alerts, per-pattern dirty
+        sets, eviction)."""
+        import warnings
+
+        from repro.core.streaming import StreamingMiner
+
+        warnings.warn(
+            "MiningSession.streaming() is deprecated; use "
+            "MiningSession.service()",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        names = self._resolve_names(patterns)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            return StreamingMiner(
+                [self._specs[n] for n in names],
+                window=self.window or 0,
+                backend=self.kernel_backend,
+            )
 
 
 # ----------------------------------------------------------------------

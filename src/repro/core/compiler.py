@@ -436,6 +436,12 @@ def analyze_stage_graph(spec: PatternSpec) -> StageGraphIR:
 # ----------------------------------------------------------------------
 # backend: per-graph strategy selection + lowering
 # ----------------------------------------------------------------------
+def _graph_rows(dg: DeviceGraph, direction: str):
+    if direction == "out":
+        return dg.out_indptr, dg.out_nbr, dg.out_t, dg.out_t_sorted
+    return dg.in_indptr, dg.in_nbr, dg.in_t, dg.in_t_sorted
+
+
 class CompiledPattern:
     """A pattern compiled against one graph (degree statistics feed the
     strategy/bucketing passes).
@@ -459,6 +465,9 @@ class CompiledPattern:
         device_graph: Optional[DeviceGraph] = None,
         vals_cache: Optional[Dict[str, np.ndarray]] = None,
         backend: str = "xla",
+        ir: Optional[StageGraphIR] = None,
+        kernels_cache: Optional[Dict] = None,
+        trace_keys: Optional[set] = None,
     ):
         if backend not in ("xla", "pallas"):
             raise ValueError(f"unknown kernel backend {backend!r}; xla|pallas")
@@ -474,12 +483,25 @@ class CompiledPattern:
         self.batch_elem_cap = int(batch_elem_cap)
         self.n_iters = ops.n_iters_for(self.dg.max_deg)
         self.force_strategy = force_strategy
-        self.ir = analyze_stage_graph(spec)
+        # a streaming service re-compiles the same pattern against a fresh
+        # per-tick view; it passes the (graph-independent) IR so the
+        # front-end passes run once per pattern, not once per tick
+        self.ir = ir if ir is not None else analyze_stage_graph(spec)
         self._frontier_by_name = {f.name: f for f in self.ir.frontiers}
         self._vals_cache: Dict[str, np.ndarray] = (
             vals_cache if vals_cache is not None else {}
         )
-        self._kernels: Dict[Tuple, Callable] = {}
+        # `kernels_cache` may outlive this instance (the streaming service
+        # shares one dict per pattern across ticks): entries are keyed by
+        # everything the kernel closure bakes in beyond the DeviceGraph
+        # argument — n_iters (derived from the padded max degree) plus the
+        # (strategy, dims, sweeps, branch) trace shape — so a tick whose
+        # padded view shapes repeat replays earlier ticks' jitted kernels
+        # instead of re-tracing.  The plain per-instance cache is the
+        # `kernels_cache=None` special case of the same dict.
+        self._kernels: Dict[Tuple, Callable] = (
+            kernels_cache if kernels_cache is not None else {}
+        )
         # bucket schedules are pure in (plan, graph degree requirements,
         # seed ids): repeated mine() calls over the same seeds skip the
         # host-side numpy grouping entirely (the session keeps compiled
@@ -491,8 +513,9 @@ class CompiledPattern:
         )
         self.schedule_cache_cap = 8
         # distinct (strategy, dims, sweeps, branch, batch) kernel traces —
-        # proves the chunk ladder keeps JIT cache growth bounded
-        self._trace_keys: set = set()
+        # proves the chunk ladder keeps JIT cache growth bounded (shared
+        # across ticks when the caller passes a persistent set)
+        self._trace_keys: set = trace_keys if trace_keys is not None else set()
         # observability: see repro.core.executor.STAT_KEYS for the glossary
         # (bench_mining reports these so bucketing / sync regressions are
         # visible in benchmark diffs, not just runtime noise)
@@ -733,9 +756,7 @@ class CompiledPattern:
     # lowering pass
     # ------------------------------------------------------------------
     def _rows(self, dg: DeviceGraph, direction: str):
-        if direction == "out":
-            return dg.out_indptr, dg.out_nbr, dg.out_t, dg.out_t_sorted
-        return dg.in_indptr, dg.in_nbr, dg.in_t, dg.in_t_sorted
+        return _graph_rows(dg, direction)
 
     def _build_kernel(
         self,
@@ -756,7 +777,10 @@ class CompiledPattern:
         ``prod(sweeps)``.  The grid is a static fori bound and therefore
         part of the trace key — the scheduler pow2-clamps per-dim sweep
         counts so the set of grids stays logarithmic in hub degree."""
-        ir, n_iters = self.ir, self.n_iters
+        # bind locals only: a kernels_cache outlives this instance, and a
+        # closure over `self` would pin the creating tick's device graph
+        # and schedule staging buffers for the cache's lifetime
+        ir, n_iters, backend = self.ir, self.n_iters, self.backend
         k = len(ir.frontiers)
         if not sweeps:
             sweeps = (1,) * len(dims)
@@ -813,7 +837,7 @@ class CompiledPattern:
                 u1 = bound_at(fa.window.until, lvl)
 
                 def expand_side(nb: Neigh, _w=width, _off=off, _lvl=lvl):
-                    indptr, nbr, t, _ = self._rows(dg, nb.direction)
+                    indptr, nbr, t, _ = _graph_rows(dg, nb.direction)
                     base, _ = node_env[nb.node.name]
                     return ops.expand(
                         indptr, (nbr, t), lift(base, _lvl - 1), _w, offset=_off
@@ -839,7 +863,7 @@ class CompiledPattern:
                     mask, ids, ts = expand_side(opn.left)
                     mask = filt(mask, ids, ts)
                     rb = opn.right
-                    indptr_r, nbr_r, t_r, _ = self._rows(dg, rb.direction)
+                    indptr_r, nbr_r, t_r, _ = _graph_rows(dg, rb.direction)
                     member = ops.count_id_in_window(
                         nbr_r,
                         t_r,
@@ -867,8 +891,8 @@ class CompiledPattern:
                 d_a, d_b = dims[k], dims[k + 1]
                 off_a, off_b = offs[k], offs[k + 1]
                 fr_ids = lift(node_env[a.node.name][0], k)
-                indptr_a, nbr_a, t_a, _ = self._rows(dg, a.direction)
-                indptr_b, nbr_b, t_b, _ = self._rows(dg, b.direction)
+                indptr_a, nbr_a, t_a, _ = _graph_rows(dg, a.direction)
+                indptr_b, nbr_b, t_b, _ = _graph_rows(dg, b.direction)
                 fixed = node_env[b.node.name][0]  # (B,)
                 lx = k + 1  # frontier-side expansion axis
 
@@ -932,7 +956,7 @@ class CompiledPattern:
                     m3, y_ids, y_t = ops.expand(
                         indptr_b, (nbr_b, t_b), fixed, d_b, offset=off_b
                     )  # (B, DB) -> axis k+2
-                    if self.backend == "pallas":
+                    if backend == "pallas":
                         # window 1 + skip_eq are folded into the x tile's
                         # -1 sentinels; window 2 rides in as the Pallas
                         # kernel's fixed-side window (constant along DB)
@@ -984,7 +1008,7 @@ class CompiledPattern:
                     nb = st.operand
                     base, lvl = node_env[nb.node.name]
                     lvl = max(lvl, win_level(st))
-                    indptr, _, _, t_sorted = self._rows(dg, nb.direction)
+                    indptr, _, _, t_sorted = _graph_rows(dg, nb.direction)
                     cnt = ops.count_window(
                         t_sorted,
                         indptr,
@@ -1003,13 +1027,13 @@ class CompiledPattern:
                         # expanded in-row of the fixed destination
                         d_b, off_b = dims[k + 1], offs[k + 1]
                         lx = k + 1
-                        indptr_i, nbr_i, t_i, _ = self._rows(dg, "in")
+                        indptr_i, nbr_i, t_i, _ = _graph_rows(dg, "in")
                         m3, y_ids, y_t = ops.expand(
                             indptr_i, (nbr_i, t_i), dst_arr, d_b, offset=off_b
                         )  # (B, DB) — in-neighbors of dst (= edge sources)
                         aw = bound_at(st.window.after, lx)
                         uw = bound_at(st.window.until, lx)
-                        if self.backend == "pallas":
+                        if backend == "pallas":
                             # degenerate Da=1 tile: the frontier id itself
                             # (its -1 sentinel already marks invalid slots)
                             lead = (s.shape[0],) + tuple(dims[:k])
@@ -1038,7 +1062,7 @@ class CompiledPattern:
                             )
                             cnt = jnp.sum(pair, axis=-1).astype(jnp.int32)
                     else:
-                        indptr, nbr, t, _ = self._rows(dg, "out")
+                        indptr, nbr, t, _ = _graph_rows(dg, "out")
                         cnt = ops.count_id_in_window(
                             nbr,
                             t,
@@ -1109,7 +1133,7 @@ class CompiledPattern:
         sweeps: Tuple[int, ...],
         branch=False,
     ) -> Callable:
-        key = (strat, dims, sweeps, branch)
+        key = (self.n_iters, strat, dims, sweeps, branch)
         if key not in self._kernels:
             self._kernels[key] = jax.jit(
                 self._build_kernel(strat, dims, sweeps, branch)
@@ -1394,7 +1418,13 @@ class CompiledPattern:
             self.stats["schedule_hits"] += 1
         self.stats["branch_items"] += sched.branch_items
         out_dev = executor.execute(
-            sched.groups, n, self._kernel, self.dg, self.stats, self._trace_keys
+            sched.groups,
+            n,
+            self._kernel,
+            self.dg,
+            self.stats,
+            self._trace_keys,
+            trace_tag=(self.n_iters,),
         )
         self.stats["jit_cache_entries"] = len(self._trace_keys)
         return executor.fetch(out_dev, self.stats).astype(np.int64)

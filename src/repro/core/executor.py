@@ -211,6 +211,7 @@ def execute(
     dg,
     stats: Dict[str, int],
     trace_keys: set,
+    trace_tag: Tuple = (),
 ):
     """Launch every group chunk asynchronously, accumulating on device.
 
@@ -228,7 +229,9 @@ def execute(
             ss, dd, tt, ff, fft, seg = (a[sl] for a in dev)
             res = fn(dg, ss, dd, tt, ff, fft)
             out = _scatter_add(out, seg, res)
-            trace_keys.add((grp.strat, grp.dims, grp.sweeps, grp.branch, w))
+            # trace_tag carries caller-side trace-key components (the
+            # compiled plan's n_iters) so cross-tick gauges don't collide
+            trace_keys.add(trace_tag + (grp.strat, grp.dims, grp.sweeps, grp.branch, w))
             stats["kernel_calls"] += 1
             stats["padded_elements"] += w * grp.per_row * grp.n_sweep
             s0 += w

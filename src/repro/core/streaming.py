@@ -1,126 +1,74 @@
-"""Streaming/incremental mining (paper §5 "Integration with streaming
-analytics"): new transactions trigger *localized* pattern updates instead
-of full-graph recomputation.
+"""Deprecated streaming entry point — superseded by :mod:`repro.stream`.
 
-Locality is **derived, not assumed**: the compiler front-end
-(:func:`repro.core.compiler.analyze_stage_graph`) computes, per pattern,
+The original ``StreamingMiner`` rebuilt the full CSR snapshot (an
+O(E log E) sort) on every ingest batch and re-mined one max-radius dirty
+ball for the whole portfolio.  Both halves now live in the streaming
+subsystem:
 
-* ``dirty_radius`` — the max over pattern edges of the *min* endpoint
-  hop distance from the seed.  A new edge (a -> b) can only change the
-  count of a seed edge if it coincides with some pattern edge, and that
-  pattern edge always has an endpoint within ``dirty_radius`` undirected
-  hops of the seed endpoints — so the ball of that radius around {a, b}
-  covers every affected seed.  Depth-3+ typologies (cycle5, peel_chain)
-  simply report a larger radius; nothing here is hardcoded to the old
-  2-hop locality ball.
-* ``time_radius`` — the max ``|t_edge - t_seed|`` over every window,
-  propagated through per-branch StageT anchor chains (``None`` when some
-  pattern edge is checked over unbounded time, e.g. a difference
-  membership — then no temporal pruning is sound).
+* the mutable sliding-window store + amortized adjacency maintenance is
+  :class:`repro.stream.TemporalGraphStore`;
+* per-pattern dirty-seed computation is
+  :class:`repro.stream.DeltaScheduler`;
+* the ingest/mine/score loop is :class:`repro.stream.DetectionService`.
 
-``ingest`` re-mines exactly that dirty frontier, taking the max radius
-over the configured pattern set.  The graph snapshot is rebuilt per batch
-(O(E log E) numpy sort) — a production deployment would swap in a mutable
-two-level index; the update *set* computation is the contribution being
-modeled here, and `tests/test_streaming.py` asserts incremental == batch
-recompute, including for depth-3 patterns.
+:class:`StreamingMiner` remains as a thin deprecation shim over
+``DetectionService`` preserving the old surface (``ingest`` returning
+the union dirty seed ids, ``counts``/``graph``/``last_dirty``/
+``last_stats``, IR-derived ``hop_radius``/``time_radius``).  Counts are
+still incremental == batch-recompute exact (``tests/test_streaming.py``
+asserts it, depth-3 patterns included) — ingest just no longer sorts
+the world.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+import warnings
+from typing import Dict, Optional, Sequence
 
 import numpy as np
-
-from repro.core import executor
-from repro.core.compiler import CompiledPattern, analyze_stage_graph
-from repro.core.patterns import build_pattern
-from repro.core.spec import PatternSpec
-from repro.graph.csr import (
-    TemporalGraph,
-    build_temporal_graph,
-    csr_row_offsets,
-)
 
 __all__ = ["StreamingMiner"]
 
 
 class StreamingMiner:
+    """Deprecated: use :class:`repro.stream.DetectionService` (or
+    ``MiningSession.service()``)."""
+
     def __init__(self, patterns: Sequence, window: int, backend: str = "xla"):
         """`patterns` mixes library names (instantiated at `window`) and
-        ready-built :class:`PatternSpec` objects (e.g. authored in the
-        `repro.api` DSL or handed over by a `MiningSession`).  `backend`
-        selects the compiled kernels' pairwise lowering (``"xla"`` |
-        ``"pallas"``); incremental re-mines share the same device-resident
-        executor as batch mining (one host sync per pattern per ingest)."""
+        ready-built :class:`~repro.core.spec.PatternSpec` objects.
+        `backend` selects the compiled kernels' pairwise lowering
+        (``"xla"`` | ``"pallas"``)."""
+        warnings.warn(
+            "repro.core.streaming.StreamingMiner is deprecated; use "
+            "repro.stream.DetectionService / MiningSession.service()",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        from repro.stream import DetectionService
+
+        self._svc = DetectionService(patterns, window=window, backend=backend)
         self.window = int(window)
         self.backend = backend
-        specs = [
-            p if isinstance(p, PatternSpec) else build_pattern(p, self.window)
-            for p in patterns
-        ]
-        if len({s.name for s in specs}) != len(specs):
-            raise ValueError("duplicate pattern names in streaming portfolio")
-        self.pattern_names = tuple(s.name for s in specs)
-        self._specs = {s.name: s for s in specs}
-        # graph-independent front-end analysis: one IR per pattern gives
-        # the locality facts that size the dirty frontier
-        irs = {s.name: analyze_stage_graph(s) for s in specs}
-        self.hop_radius: int = max(
-            (ir.dirty_radius for ir in irs.values()), default=0
-        )
-        spans = [ir.time_radius for ir in irs.values()]
-        self.time_radius: Optional[int] = (
-            None if (not spans or any(s is None for s in spans)) else max(spans)
-        )
-        self._src: List[np.ndarray] = []
-        self._dst: List[np.ndarray] = []
-        self._t: List[np.ndarray] = []
-        self._amt: List[np.ndarray] = []
-        self.graph: Optional[TemporalGraph] = None
-        self.counts: Dict[str, np.ndarray] = {
-            n: np.zeros(0, dtype=np.int64) for n in self.pattern_names
-        }
-        self.last_dirty: int = 0  # observability: size of last dirty frontier
-        # observability: executor counters of the last ingest (see
-        # repro.core.executor.STAT_KEYS for the glossary)
-        self.last_stats: Dict[str, int] = executor.new_stats()
+        self.pattern_names = self._svc.pattern_names
+        sched = self._svc.scheduler
+        # old portfolio-max locality facts (the scheduler is per-pattern
+        # now; these remain for callers that sized things off the max)
+        self.hop_radius: int = sched.max_radius
+        self.time_radius: Optional[int] = sched.max_time_radius
+        self.last_dirty: int = 0
+        self.last_stats: Dict[str, int] = dict(self._svc.stats)
 
     @property
     def n_edges(self) -> int:
-        return 0 if self.graph is None else self.graph.n_edges
+        return self._svc.n_edges
 
-    def _rebuild(self) -> TemporalGraph:
-        src = np.concatenate(self._src)
-        dst = np.concatenate(self._dst)
-        t = np.concatenate(self._t)
-        amt = np.concatenate(self._amt)
-        n = int(max(src.max(initial=-1), dst.max(initial=-1))) + 1
-        return build_temporal_graph(src, dst, t, amt, n_nodes=n)
+    @property
+    def graph(self):
+        return None if self.n_edges == 0 else self._svc.graph
 
-    def _hop_ball(
-        self, g: TemporalGraph, seeds: np.ndarray, radius: int
-    ) -> np.ndarray:
-        """Undirected `radius`-hop ball membership mask over nodes.
-
-        BFS over the newly-discovered frontier only — each hop is a
-        vectorized CSR gather, not a per-node Python loop, so deep
-        pattern radii stay cheap on large dirty frontiers."""
-        mask = np.zeros(g.n_nodes, dtype=bool)
-        frontier = np.unique(np.asarray(seeds, dtype=np.int64))
-        mask[frontier] = True
-        for _ in range(radius):
-            if frontier.size == 0:
-                break
-            nxt = np.concatenate(
-                [
-                    g.out_nbr[csr_row_offsets(g.out_indptr, frontier)[0]],
-                    g.in_nbr[csr_row_offsets(g.in_indptr, frontier)[0]],
-                ]
-            ).astype(np.int64)
-            nxt = np.unique(nxt)
-            frontier = nxt[~mask[nxt]]
-            mask[frontier] = True
-        return mask
+    @property
+    def counts(self) -> Dict[str, np.ndarray]:
+        return {n: self._svc.pattern_counts(n) for n in self.pattern_names}
 
     def ingest(
         self,
@@ -130,52 +78,12 @@ class StreamingMiner:
         amount: Optional[np.ndarray] = None,
     ) -> np.ndarray:
         """Add a batch of transactions; returns the dirty seed-edge ids
-        (positions in the post-ingest edge ordering) that were re-mined."""
-        src = np.asarray(src, dtype=np.int32)
-        dst = np.asarray(dst, dtype=np.int32)
-        t = np.asarray(t, dtype=np.int64)
-        if amount is None:
-            amount = np.ones_like(src, dtype=np.float32)
-        n_old = self.n_edges
-        self._src.append(src)
-        self._dst.append(dst)
-        self._t.append(t)
-        self._amt.append(np.asarray(amount, dtype=np.float32))
-        g = self._rebuild()
-        self.graph = g
-
-        for name in self.pattern_names:
-            old = self.counts[name]
-            grown = np.zeros(g.n_edges, dtype=np.int64)
-            grown[: len(old)] = old
-            self.counts[name] = grown
-
-        if n_old == 0:
-            dirty = np.arange(g.n_edges, dtype=np.int32)
-        else:
-            touched = np.unique(np.concatenate([src, dst]))
-            ball = self._hop_ball(g, touched, self.hop_radius)
-            cand = ball[g.src] | ball[g.dst]
-            if self.time_radius is not None:
-                cand &= g.t >= int(t.min()) - self.time_radius
-            cand[n_old:] = True  # all new edges are dirty
-            dirty = np.nonzero(cand)[0].astype(np.int32)
-
-        self.last_dirty = int(len(dirty))
-        # one device mirror + requirement cache shared by every pattern's
-        # re-mine of this snapshot (the session-style portfolio sharing)
-        dg = g.to_device()
-        vals_cache: Dict[str, np.ndarray] = {}
-        self.last_stats = executor.new_stats()
-        for name in self.pattern_names:
-            cp = CompiledPattern(
-                self._specs[name],
-                g,
-                device_graph=dg,
-                vals_cache=vals_cache,
-                backend=self.backend,
-            )
-            self.counts[name][dirty] = cp.mine(dirty)
-            for k in self.last_stats:
-                self.last_stats[k] += cp.stats[k]
-        return dirty
+        (union over the per-pattern dirty sets) that were re-mined."""
+        batch = self._svc.submit(src, dst, t, amount)
+        report = batch.report
+        self.last_dirty = report.n_dirty
+        self.last_stats = report.stats
+        plan = self._svc.last_plan
+        if plan is None:
+            return np.zeros(0, dtype=np.int64)
+        return plan.union_dirty

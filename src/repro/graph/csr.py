@@ -31,6 +31,10 @@ __all__ = [
 ]
 
 
+def _pow2ceil(x: int) -> int:
+    return 1 << max(0, int(x - 1).bit_length())
+
+
 def csr_row_offsets(indptr: np.ndarray, nodes: np.ndarray):
     """Flat CSR positions of the adjacency rows of `nodes`, concatenated
     in node order, plus per-node row lengths (so callers can map entries
@@ -104,31 +108,61 @@ class TemporalGraph:
             "in_deg_p99": float(np.percentile(idg, 99)) if idg.size else 0.0,
         }
 
-    def to_device(self) -> "DeviceGraph":
+    def to_device(self, pad: bool = False) -> "DeviceGraph":
         """jnp mirror.  Device arrays are int32 (JAX x64 stays off): instead
         of the int64 composite key, compiled plans do a two-level int32
-        binary search (id range, then time range within it)."""
+        binary search (id range, then time range within it).
+
+        ``pad=True`` rounds every dimension that lands in a kernel trace
+        key up to a power of two: edge-length arrays are padded (the tail
+        is unreachable — binary searches and expansions only address CSR
+        ranges below the real ``indptr`` values), ``indptr`` gains empty
+        rows up to a pow2 node count, and the static ``max_deg`` is
+        pow2-ceiled so the derived binary-search iteration count lands on
+        a ladder.  A stream of per-tick graph views then presents
+        logarithmically many distinct device shapes, and jitted mining
+        kernels cached across ticks replay instead of re-tracing."""
         import jax.numpy as jnp
+
+        def pad_edges(a: np.ndarray, fill: int, e_pad: int) -> np.ndarray:
+            if len(a) == e_pad:
+                return a
+            out = np.full(e_pad, fill, dtype=a.dtype)
+            out[: len(a)] = a
+            return out
+
+        if pad:
+            e_pad = _pow2ceil(max(1, self.n_edges))
+            n_pad = _pow2ceil(max(1, self.n_nodes))
+            ep = lambda a, fill=-1: pad_edges(np.asarray(a), fill, e_pad)
+            ip = lambda a: pad_edges(np.asarray(a), int(a[-1]), n_pad + 1)
+            n_nodes, n_edges = n_pad, e_pad
+            max_deg = _pow2ceil(max(1, self.max_out_deg(), self.max_in_deg()))
+        else:
+            ep = lambda a, fill=-1: a
+            ip = lambda a: a
+            n_nodes, n_edges = self.n_nodes, self.n_edges
+            max_deg = max(1, self.max_out_deg(), self.max_in_deg())
 
         i32 = lambda a: jnp.asarray(a, dtype=jnp.int32)
         return DeviceGraph(
-            n_nodes=self.n_nodes,
-            n_edges=self.n_edges,
-            max_deg=max(1, self.max_out_deg(), self.max_in_deg()),
-            src=i32(self.src),
-            dst=i32(self.dst),
-            t=i32(self.t),
-            amount=jnp.asarray(self.amount),
-            out_indptr=i32(self.out_indptr),
-            out_nbr=i32(self.out_nbr),
-            out_t=i32(self.out_t),
-            out_eid=i32(self.out_eid),
-            out_t_sorted=i32(self.out_t_sorted),
-            in_indptr=i32(self.in_indptr),
-            in_nbr=i32(self.in_nbr),
-            in_t=i32(self.in_t),
-            in_eid=i32(self.in_eid),
-            in_t_sorted=i32(self.in_t_sorted),
+            n_nodes=n_nodes,
+            n_edges=n_edges,
+            max_deg=max_deg,
+            src=i32(ep(self.src)),
+            dst=i32(ep(self.dst)),
+            t=i32(ep(self.t, 0)),
+            amount=jnp.asarray(ep(self.amount, 0)),
+            out_indptr=i32(ip(self.out_indptr)),
+            out_nbr=i32(ep(self.out_nbr)),
+            out_t=i32(ep(self.out_t, 0)),
+            out_eid=i32(ep(self.out_eid, 0)),
+            out_t_sorted=i32(ep(self.out_t_sorted, 0)),
+            in_indptr=i32(ip(self.in_indptr)),
+            in_nbr=i32(ep(self.in_nbr)),
+            in_t=i32(ep(self.in_t, 0)),
+            in_eid=i32(ep(self.in_eid, 0)),
+            in_t_sorted=i32(ep(self.in_t_sorted, 0)),
         )
 
 

@@ -1,0 +1,45 @@
+"""`repro.stream` — the incremental temporal graph engine + real-time
+detection service (paper §5 "integration with streaming analytics",
+grown into a subsystem).
+
+Three pillars, one per module:
+
+* :class:`~repro.stream.store.TemporalGraphStore` — mutable sliding-
+  window edge store: geometric sorted adjacency runs with amortized run
+  merging, window eviction, out-of-order/duplicate timestamp tolerance,
+  and exports (:meth:`snapshot` / :meth:`local_view`) that are ordinary
+  :class:`~repro.graph.csr.TemporalGraph` objects, so compiled kernels
+  and the device executor are reused unchanged.
+* :class:`~repro.stream.delta.DeltaScheduler` — per-ingest dirty-seed
+  computation with **per-pattern** hop/time radii from the stage-graph
+  IR (shallow patterns stop paying deep patterns' ball), plus the view
+  plan that scopes per-tick mining to the delta neighborhood.
+* :class:`~repro.stream.service.DetectionService` — the microbatching
+  ingest loop: ``submit(txns) -> AlertBatch`` mines the dirty frontier
+  over the registered portfolio, scores hits through the `repro.ml`
+  feature layout, applies per-pattern thresholds, and reports the
+  executor + store counter glossary per tick.
+
+`repro.core.streaming.StreamingMiner` survives as a thin deprecation
+shim over this subsystem.
+"""
+from repro.stream.delta import DeltaPlan, DeltaScheduler
+from repro.stream.service import (
+    AlertBatch,
+    DetectionService,
+    TickReport,
+    default_retain,
+)
+from repro.stream.store import GraphView, TemporalGraphStore, STORE_STAT_KEYS
+
+__all__ = [
+    "TemporalGraphStore",
+    "GraphView",
+    "STORE_STAT_KEYS",
+    "DeltaScheduler",
+    "DeltaPlan",
+    "DetectionService",
+    "AlertBatch",
+    "TickReport",
+    "default_retain",
+]

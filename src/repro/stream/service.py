@@ -1,0 +1,451 @@
+"""`DetectionService` — the real-time detection loop (pillar 3).
+
+``submit(txns) -> AlertBatch`` is the whole lifecycle of one microbatch:
+
+1. **ingest** into the :class:`~repro.stream.store.TemporalGraphStore`
+   (amortized maintenance, window eviction);
+2. **plan** the delta with the :class:`~repro.stream.delta.DeltaScheduler`
+   (per-pattern dirty seeds + the view ball);
+3. **mine** the dirty frontier: a local :meth:`~TemporalGraphStore.local_view`
+   (or the full snapshot when the delta covers most of the graph) is
+   compiled through the unchanged device-resident executor — one shared
+   device mirror + host requirement cache per tick, and a per-pattern
+   **kernel cache shared across ticks** (view shapes are padded to
+   powers of two, so JIT traces from earlier ticks are replayed instead
+   of recompiled);
+4. **score** the re-mined seeds through the `repro.ml` feature layout
+   (base transaction columns + one column per registered pattern —
+   exactly :func:`repro.api.featurize` order, so an offline-trained
+   classifier's ``predict_proba`` plugs in as ``scorer=``), apply the
+   per-pattern count ``thresholds``, and emit an :class:`AlertBatch`
+   carrying the executor/store counter glossary for the tick.
+
+Incremental counts are guaranteed equal to a batch recompute over the
+full edge history (``tests/test_stream_service.py`` asserts it pattern
+by pattern, eviction and out-of-order feeds included).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core import executor
+from repro.core.compiler import CompiledPattern, analyze_stage_graph
+from repro.core.patterns import build_pattern
+from repro.core.spec import PatternSpec
+
+from repro.stream.delta import DeltaPlan, DeltaScheduler
+from repro.stream.store import GraphView, TemporalGraphStore
+
+__all__ = [
+    "DetectionService",
+    "AlertBatch",
+    "TickReport",
+    "default_retain",
+]
+
+BASE_FEATURES = ("src", "dst", "amount")
+
+
+def default_retain(
+    scheduler: DeltaScheduler, lateness: int = 0
+) -> Optional[int]:
+    """Sound sliding-window retention for a portfolio: ``2*TR + L``.
+
+    A new edge at ``t_n >= t_high - L`` dirties only seeds with
+    ``t_s >= t_n - TR``, whose re-mine reads edges with
+    ``t >= t_s - TR >= t_high - L - 2*TR``.  ``None`` (keep everything)
+    when any pattern's windows are unbounded — no eviction is sound
+    then.
+
+    ``lateness`` is the EFFECTIVE lateness of the feed: arrival lateness
+    *plus the time span of one microbatch* (a batch ingests atomically,
+    so its earliest edge is "late" by the batch span relative to its
+    latest).  Feeds later than the contract degrade gracefully — stale
+    counts on out-of-contract seeds, never a crash."""
+    tr = scheduler.max_time_radius
+    return None if tr is None else 2 * tr + int(lateness)
+
+
+# ----------------------------------------------------------------------
+# tick outputs
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class TickReport:
+    """Observability record of one ``submit`` call."""
+
+    tick: int
+    n_new: int
+    n_live: int
+    n_dirty: int  # union over patterns
+    dirty: Dict[str, int]  # per-pattern dirty seed counts
+    dirty_fraction: float  # union / live (the < 1 locality gauge)
+    path: str  # "local" | "full" | "cold" | "empty"
+    view_nodes: int
+    view_edges: int
+    seconds: float
+    stats: Dict[str, int]  # executor counter deltas (STAT_KEYS glossary)
+    store: Dict[str, int]  # store counter deltas (STORE_STAT_KEYS)
+
+
+@dataclasses.dataclass
+class AlertBatch:
+    """Scored detections of one tick, array-of-columns style.
+
+    Rows cover every seed whose feature row *changed* this tick and
+    crossed a threshold; ``counts[:, j]`` is the current participation
+    count in pattern ``columns[j]`` and ``triggered[:, j]`` marks which
+    pattern(s) fired."""
+
+    eids: np.ndarray  # (n,) global edge ids
+    src: np.ndarray
+    dst: np.ndarray
+    t: np.ndarray
+    amount: np.ndarray
+    counts: np.ndarray  # (n, P) int64
+    score: np.ndarray  # (n,) float32
+    triggered: np.ndarray  # (n, P) bool
+    columns: Tuple[str, ...]
+    report: TickReport
+
+    def __len__(self) -> int:
+        return len(self.eids)
+
+    def top(self, k: int = 10) -> "AlertBatch":
+        order = np.argsort(-self.score, kind="stable")[:k]
+        return dataclasses.replace(
+            self,
+            eids=self.eids[order],
+            src=self.src[order],
+            dst=self.dst[order],
+            t=self.t[order],
+            amount=self.amount[order],
+            counts=self.counts[order],
+            score=self.score[order],
+            triggered=self.triggered[order],
+        )
+
+    def to_rows(self) -> List[dict]:
+        rows = []
+        for i in range(len(self.eids)):
+            fired = [c for j, c in enumerate(self.columns) if self.triggered[i, j]]
+            rows.append(
+                {
+                    "eid": int(self.eids[i]),
+                    "src": int(self.src[i]),
+                    "dst": int(self.dst[i]),
+                    "t": int(self.t[i]),
+                    "amount": float(self.amount[i]),
+                    "score": float(self.score[i]),
+                    "patterns": fired,
+                    "counts": {
+                        c: int(self.counts[i, j])
+                        for j, c in enumerate(self.columns)
+                    },
+                }
+            )
+        return rows
+
+
+PatternLike = Union[str, PatternSpec]
+
+
+# ----------------------------------------------------------------------
+# the service
+# ----------------------------------------------------------------------
+class DetectionService:
+    """Microbatching real-time AML detection over a pattern portfolio.
+
+    >>> svc = DetectionService(["fan_in", "cycle3"], window=4096,
+    ...                        thresholds={"cycle3": 1, "fan_in": 8})
+    >>> batch = svc.submit(src, dst, t, amount)
+    >>> batch.to_rows(), batch.report.dirty_fraction
+
+    ``patterns`` mixes library names (instantiated at ``window``),
+    ready-built :class:`PatternSpec` objects, and `repro.api` builders.
+    ``thresholds`` maps pattern name -> minimal participation count that
+    raises an alert (patterns without a threshold contribute features
+    only).  ``scorer`` is an optional ``(n, F) -> (n,)`` probability
+    function over :attr:`feature_columns` (e.g. a fitted
+    ``repro.ml.GBDTClassifier().predict_proba``); without one, the score
+    is the max threshold-normalized count.  ``retain`` is the store's
+    sliding window ("auto" derives the sound ``2*TR + lateness`` bound,
+    ``None`` keeps everything).
+    """
+
+    def __init__(
+        self,
+        patterns: Sequence[PatternLike],
+        window: int,
+        *,
+        backend: str = "xla",
+        thresholds: Optional[Dict[str, int]] = None,
+        scorer: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+        retain: Union[int, str, None] = None,
+        lateness: int = 0,
+        full_remine_fraction: float = 0.5,
+        node_capacity: int = 64,
+    ):
+        self.window = int(window)
+        self.backend = backend
+        specs = [
+            p
+            if isinstance(p, PatternSpec)
+            else (
+                p.build()
+                if hasattr(p, "build") and not isinstance(p, str)
+                else build_pattern(p, self.window)
+            )
+            for p in patterns
+        ]
+        self.scheduler = DeltaScheduler(specs)
+        self._specs = self.scheduler.specs
+        self._irs = self.scheduler.irs
+        self.pattern_names = self.scheduler.pattern_names
+        unknown = set(thresholds or ()) - set(self.pattern_names)
+        if unknown:
+            raise ValueError(f"thresholds for unregistered patterns: {unknown}")
+        self.thresholds = dict(thresholds or {})
+        self.scorer = scorer
+        if retain == "auto":
+            retain = default_retain(self.scheduler, lateness)
+        self.store = TemporalGraphStore(
+            retain=retain, node_capacity=node_capacity
+        )
+        self.full_remine_fraction = float(full_remine_fraction)
+        # per-pattern participation counts, indexed by global edge id
+        self.counts: Dict[str, np.ndarray] = {
+            n: np.zeros(0, dtype=np.int64) for n in self.pattern_names
+        }
+        # per-pattern jitted-kernel caches shared ACROSS ticks: view
+        # shapes are pow2-padded, so tick k+1 replays tick k's traces
+        self._kernels: Dict[str, dict] = {n: {} for n in self.pattern_names}
+        self._trace_keys: Dict[str, set] = {n: set() for n in self.pattern_names}
+        self.tick = 0
+        self.last_report: Optional[TickReport] = None
+        self.last_plan: Optional[DeltaPlan] = None
+        # lifetime executor counters (STAT_KEYS glossary)
+        self.stats = executor.new_stats()
+
+    # -- feature layout (repro.ml contract) -----------------------------
+    @property
+    def feature_columns(self) -> Tuple[str, ...]:
+        """Feature layout of ``scorer`` inputs: base transaction columns
+        then one pattern-count column per registered pattern — the same
+        order :func:`repro.api.featurize` produces, so offline-trained
+        models transfer."""
+        return BASE_FEATURES + self.pattern_names
+
+    @property
+    def graph(self):
+        """Full live graph (batch export; cached between mutations)."""
+        return self.store.snapshot().graph
+
+    @property
+    def n_edges(self) -> int:
+        return self.store.n_live
+
+    def _grow_counts(self) -> None:
+        n = self.store.n_edges_total
+        for name, arr in self.counts.items():
+            if len(arr) < n:
+                grown = np.zeros(max(n, 2 * len(arr)), dtype=np.int64)
+                grown[: len(arr)] = arr
+                self.counts[name] = grown
+
+    def pattern_counts(self, name: str) -> np.ndarray:
+        """Counts of `name` aligned to global edge ids [0, n_edges_total)."""
+        return self.counts[name][: self.store.n_edges_total]
+
+    # -- mining ---------------------------------------------------------
+    def _mine_plan(
+        self, plan: DeltaPlan, view: GraphView, stats: Dict[str, int]
+    ) -> None:
+        dg = view.graph.to_device(pad=not view.full)
+        vals_cache: Dict[str, np.ndarray] = {}
+        for name in self.pattern_names:
+            seeds = plan.dirty.get(name)
+            if seeds is None or len(seeds) == 0:
+                continue
+            cp = CompiledPattern(
+                self._specs[name],
+                view.graph,
+                device_graph=dg,
+                vals_cache=vals_cache,
+                backend=self.backend,
+                ir=self._irs[name],
+                kernels_cache=self._kernels[name],
+                trace_keys=self._trace_keys[name],
+            )
+            self.counts[name][seeds] = cp.mine(view.local_seeds(seeds))
+            for k in stats:
+                stats[k] += cp.stats[k]
+        stats["jit_cache_entries"] = sum(
+            len(s) for s in self._trace_keys.values()
+        )
+
+    def _score(self, eids: np.ndarray) -> Tuple[np.ndarray, ...]:
+        src, dst, t, amt = self.store.edge_fields(eids)
+        counts = np.stack(
+            [self.counts[n][eids] for n in self.pattern_names], axis=1
+        )
+        triggered = np.zeros(counts.shape, dtype=bool)
+        norm = np.zeros(counts.shape, dtype=np.float32)
+        for j, name in enumerate(self.pattern_names):
+            thr = self.thresholds.get(name)
+            if thr is None:
+                continue
+            triggered[:, j] = counts[:, j] >= thr
+            norm[:, j] = counts[:, j].astype(np.float32) / float(thr)
+        if self.scorer is not None:
+            feats = np.concatenate(
+                [
+                    np.stack(
+                        [
+                            src.astype(np.float32),
+                            dst.astype(np.float32),
+                            amt.astype(np.float32),
+                        ],
+                        axis=1,
+                    ),
+                    counts.astype(np.float32),
+                ],
+                axis=1,
+            )
+            score = np.asarray(self.scorer(feats), dtype=np.float32).reshape(-1)
+        else:
+            score = norm.max(axis=1) if counts.shape[1] else np.zeros(len(eids))
+        keep = triggered.any(axis=1)
+        return (
+            eids[keep],
+            src[keep],
+            dst[keep],
+            t[keep],
+            amt[keep],
+            counts[keep],
+            score[keep].astype(np.float32),
+            triggered[keep],
+        )
+
+    # -- the ingest loop ------------------------------------------------
+    def submit(
+        self,
+        src: np.ndarray,
+        dst: np.ndarray,
+        t: np.ndarray,
+        amount: Optional[np.ndarray] = None,
+    ) -> AlertBatch:
+        """Ingest one transaction microbatch, re-mine its dirty frontier,
+        and return the scored alerts + the tick report."""
+        t0 = time.perf_counter()
+        self.tick += 1
+        src = np.asarray(src, dtype=np.int32)
+        dst = np.asarray(dst, dtype=np.int32)
+        t = np.asarray(t, dtype=np.int64)
+        store_before = dict(self.store.stats)
+        stats = executor.new_stats()
+        if len(src) == 0:
+            return self._finish(
+                t0, 0, None, None, stats, store_before, path="empty"
+            )
+        cold = self.store.n_live == 0
+        eids = self.store.ingest(src, dst, t, amount)
+        plan = self.scheduler.plan(self.store, src, dst, t, eids, cold=cold)
+        self._grow_counts()
+        use_full = plan.cold or (
+            plan.dirty_fraction >= self.full_remine_fraction
+        )
+        view = (
+            self.store.snapshot()
+            if use_full
+            else self.store.local_view(plan.core_nodes, plan.t_lo)
+        )
+        self._mine_plan(plan, view, stats)
+        path = "cold" if plan.cold else ("full" if use_full else "local")
+        return self._finish(t0, len(eids), plan, view, stats, store_before, path)
+
+    def _finish(
+        self,
+        t0: float,
+        n_new: int,
+        plan: Optional[DeltaPlan],
+        view: Optional[GraphView],
+        stats: Dict[str, int],
+        store_before: Dict[str, int],
+        path: str,
+    ) -> AlertBatch:
+        for k in self.stats:
+            if k == "jit_cache_entries":  # a gauge, not a counter
+                self.stats[k] = max(self.stats[k], stats[k])
+            else:
+                self.stats[k] += stats[k]
+        store_delta = {
+            k: self.store.stats[k] - store_before.get(k, 0)
+            for k in self.store.stats
+        }
+        report = TickReport(
+            tick=self.tick,
+            n_new=n_new,
+            n_live=self.store.n_live,
+            n_dirty=0 if plan is None else len(plan.union_dirty),
+            dirty=(
+                {}
+                if plan is None
+                else {n: len(d) for n, d in plan.dirty.items()}
+            ),
+            dirty_fraction=0.0 if plan is None else plan.dirty_fraction,
+            path=path,
+            view_nodes=0 if view is None else len(view.node_ids),
+            view_edges=0 if view is None else len(view.edge_ids),
+            seconds=time.perf_counter() - t0,
+            stats=stats,
+            store=store_delta,
+        )
+        self.last_report = report
+        self.last_plan = plan
+        if plan is None or len(plan.union_dirty) == 0:
+            empty = np.zeros(0, dtype=np.int64)
+            return AlertBatch(
+                eids=empty,
+                src=np.zeros(0, np.int32),
+                dst=np.zeros(0, np.int32),
+                t=np.zeros(0, np.int64),
+                amount=np.zeros(0, np.float32),
+                counts=np.zeros((0, len(self.pattern_names)), np.int64),
+                score=np.zeros(0, np.float32),
+                triggered=np.zeros((0, len(self.pattern_names)), bool),
+                columns=self.pattern_names,
+                report=report,
+            )
+        (eids, s, d, tt, amt, counts, score, trig) = self._score(
+            plan.union_dirty
+        )
+        return AlertBatch(
+            eids=eids,
+            src=s,
+            dst=d,
+            t=tt,
+            amount=amt,
+            counts=counts,
+            score=score,
+            triggered=trig,
+            columns=self.pattern_names,
+            report=report,
+        )
+
+    # -- batch parity ---------------------------------------------------
+    def recompute_counts(self, name: str) -> np.ndarray:
+        """Counts of `name` recomputed from scratch on the live graph
+        (the equivalence oracle for incremental mining; O(E) batch
+        work — tests and benchmarks only)."""
+        view = self.store.snapshot()
+        cp = CompiledPattern(
+            self._specs[name],
+            view.graph,
+            backend=self.backend,
+            ir=self._irs[name],
+        )
+        return cp.mine()

@@ -1,0 +1,215 @@
+"""DetectionService / DeltaScheduler: incremental == batch-recompute
+equivalence (eviction, out-of-order and duplicate timestamps included),
+per-pattern dirty radii, alerting, scorer plumbing, cross-tick kernel
+reuse, and the StreamingMiner deprecation shim."""
+import numpy as np
+import pytest
+
+from repro.core.compiler import CompiledPattern
+from repro.core.patterns import build_pattern
+from repro.graph.csr import build_temporal_graph
+from repro.stream import DeltaScheduler, DetectionService, default_retain
+
+W = 64
+
+
+def _stream(rng, n_nodes=120, n_edges=600, t_span=6000):
+    src = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    dst = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    fix = src == dst
+    dst[fix] = (dst[fix] + 1) % n_nodes
+    t = np.sort(rng.integers(0, t_span // 4, n_edges)).astype(np.int64) * 4
+    t = np.maximum(0, t + rng.integers(-8, 9, n_edges))  # OOO + dups
+    return src, dst, t
+
+
+# the satellite-mandated pair: a depth-3 pattern and a seed-local one,
+# plus the unbounded-window membership pattern for the t_lo=None path
+@pytest.mark.parametrize(
+    "names,expect_local",
+    [
+        (["fan_in", "cycle5"], True),
+        # unbounded membership windows (time_radius=None) disable temporal
+        # pruning: on this dense feed the delta legitimately covers most
+        # of the graph, so the service correctly picks the full path
+        (["new_counterparty"], False),
+    ],
+)
+def test_incremental_equals_batch_recompute(names, expect_local):
+    rng = np.random.default_rng(4)
+    src, dst, t = _stream(rng)
+    svc = DetectionService(names, window=W)
+    saw_local = False
+    for ch in np.array_split(np.arange(len(src)), 15):
+        rep = svc.submit(src[ch], dst[ch], t[ch]).report
+        saw_local |= rep.path == "local"
+        assert rep.dirty_fraction <= 1.0
+    if expect_local:
+        assert saw_local  # the delta path actually ran
+    full = build_temporal_graph(src, dst, t)
+    for name in names:
+        want = CompiledPattern(build_pattern(name, W), full).mine()
+        np.testing.assert_array_equal(svc.pattern_counts(name), want, err_msg=name)
+
+
+def test_incremental_equals_full_history_under_eviction():
+    rng = np.random.default_rng(5)
+    src, dst, t = _stream(rng, n_edges=500, t_span=40_000)
+    n_batches = 20
+    span = 40_000 // n_batches
+    svc = DetectionService(
+        ["fan_in", "cycle5"], window=W, retain="auto", lateness=span + 32
+    )
+    assert svc.store.retain == 2 * svc.scheduler.max_time_radius + span + 32
+    for ch in np.array_split(np.arange(len(src)), n_batches):
+        svc.submit(src[ch], dst[ch], t[ch])
+    assert svc.store.stats["edges_evicted"] > 0  # the window really slid
+    assert svc.store.n_live < len(src)
+    full = build_temporal_graph(src, dst, t)
+    for name in svc.pattern_names:
+        want = CompiledPattern(build_pattern(name, W), full).mine()
+        np.testing.assert_array_equal(svc.pattern_counts(name), want, err_msg=name)
+
+
+def test_per_pattern_dirty_radii_not_portfolio_max():
+    """fan_in (radius 0, TR=W+1) must stop paying scatter_gather's
+    bigger ball (radius 1, TR=2W+2): its dirty sets are subsets,
+    strictly smaller on some tick."""
+    sched = DeltaScheduler(
+        [build_pattern("fan_in", W), build_pattern("scatter_gather", W)]
+    )
+    assert sched.radius["fan_in"] == 0 and sched.radius["scatter_gather"] == 1
+    assert sched.time_radius["fan_in"] < sched.time_radius["scatter_gather"]
+    rng = np.random.default_rng(6)
+    src, dst, t = _stream(rng)
+    svc = DetectionService(["fan_in", "scatter_gather"], window=W)
+    strictly_smaller = False
+    for ch in np.array_split(np.arange(len(src)), 12):
+        svc.submit(src[ch], dst[ch], t[ch])
+        d = svc.last_plan.dirty
+        assert np.isin(d["fan_in"], d["scatter_gather"]).all()
+        strictly_smaller |= len(d["fan_in"]) < len(d["scatter_gather"])
+    assert strictly_smaller
+
+
+def test_scheduler_ir_facts_and_auto_retain():
+    sched = DeltaScheduler([build_pattern("scatter_gather", W)])
+    assert sched.max_radius == 1
+    assert sched.max_time_radius == 2 * W + 2  # anchor-chain span
+    assert default_retain(sched, lateness=10) == 2 * (2 * W + 2) + 10
+    # unbounded membership windows make eviction unsound -> keep all
+    unb = DeltaScheduler([build_pattern("new_counterparty", W)])
+    assert unb.max_time_radius is None
+    assert default_retain(unb) is None
+    assert DetectionService(
+        ["new_counterparty"], window=W, retain="auto"
+    ).store.retain is None
+
+
+def test_alerts_thresholds_scores_and_counters():
+    svc = DetectionService(
+        ["cycle3", "fan_in"], window=W, thresholds={"cycle3": 1}
+    )
+    # background edges between far-apart node pairs: no cycles
+    b = svc.submit(
+        np.array([10, 20, 30], np.int32),
+        np.array([11, 21, 31], np.int32),
+        np.array([5, 6, 7], np.int64),
+    )
+    assert len(b) == 0
+    # now close a 3-cycle 0 -> 1 -> 2 -> 0 inside the window
+    b = svc.submit(
+        np.array([0, 1, 2], np.int32),
+        np.array([1, 2, 0], np.int32),
+        np.array([10, 11, 12], np.int64),
+    )
+    # cycle3 is temporally ordered: the cycle's FIRST edge is the seed
+    assert len(b) == 1 and b.eids[0] == 3 and b.src[0] == 0 and b.dst[0] == 1
+    assert b.columns == ("cycle3", "fan_in")
+    assert b.triggered[:, 0].all() and not b.triggered[:, 1].any()
+    assert (b.score >= 1.0).all()
+    rows = b.to_rows()
+    assert rows[0]["patterns"] == ["cycle3"] and rows[0]["counts"]["cycle3"] == 1
+    # tick report carries the executor + store counter glossary
+    rep = b.report
+    assert rep.stats["host_syncs"] >= 1 and rep.stats["kernel_calls"] >= 1
+    assert set(rep.store) == set(svc.store.stats)
+    assert rep.n_new == 3 and rep.tick == 2
+    # empty batches are fine mid-stream
+    b = svc.submit(np.zeros(0), np.zeros(0), np.zeros(0))
+    assert len(b) == 0 and b.report.path == "empty"
+    with pytest.raises(ValueError, match="unregistered"):
+        DetectionService(["cycle3"], window=W, thresholds={"nope": 1})
+
+
+def test_scorer_receives_ml_feature_layout():
+    seen = {}
+
+    def scorer(feats):
+        seen["shape"] = feats.shape
+        seen["feats"] = feats.copy()
+        return feats[:, -1] * 10.0  # score on the last pattern column
+
+    svc = DetectionService(
+        ["cycle3"], window=W, thresholds={"cycle3": 1}, scorer=scorer
+    )
+    assert svc.feature_columns == ("src", "dst", "amount", "cycle3")
+    b = svc.submit(
+        np.array([0, 1, 2], np.int32),
+        np.array([1, 2, 0], np.int32),
+        np.array([10, 11, 12], np.int64),
+        np.array([7.0, 7.0, 7.0], np.float32),
+    )
+    assert seen["shape"][1] == len(svc.feature_columns)
+    np.testing.assert_array_equal(seen["feats"][:, 2], 7.0)  # amount col
+    np.testing.assert_array_equal(b.score, 10.0)  # cycle3 count == 1
+
+
+def test_kernel_traces_are_shared_across_ticks():
+    """Identically-shaped ticks on fresh nodes replay cached jitted
+    kernels instead of re-tracing (pow2-padded view shapes)."""
+    svc = DetectionService(["cycle3"], window=W)
+    traces = []
+    for k in range(6):
+        base = 10 * k
+        s = np.array([base, base + 1, base + 2], np.int32)
+        d = np.array([base + 1, base + 2, base], np.int32)
+        t = np.array([100 * k, 100 * k + 1, 100 * k + 2], np.int64)
+        svc.submit(s, d, t)
+        traces.append(sum(len(v) for v in svc._trace_keys.values()))
+    assert traces[-1] == traces[-2] == traces[-3]  # steady state: no new JIT
+
+
+def test_streaming_miner_is_a_deprecation_shim():
+    from repro.core.streaming import StreamingMiner
+
+    rng = np.random.default_rng(7)
+    src, dst, t = _stream(rng, n_nodes=30, n_edges=120)
+    with pytest.warns(DeprecationWarning, match="StreamingMiner is deprecated"):
+        sm = StreamingMiner(["fan_in", "cycle3"], window=W)
+    assert sm.graph is None and sm.n_edges == 0
+    dirty = sm.ingest(src[:60], dst[:60], t[:60])
+    assert len(dirty) == 60 == sm.last_dirty
+    # empty batch + unseen node ids through the OLD entry point
+    assert len(sm.ingest(np.zeros(0), np.zeros(0), np.zeros(0))) == 0
+    sm.ingest(np.array([500], np.int32), np.array([501], np.int32), t[60:61])
+    sm.ingest(src[61:], dst[61:], t[61:])
+    want = CompiledPattern(build_pattern("cycle3", W), sm.graph).mine()
+    np.testing.assert_array_equal(sm.counts["cycle3"], want)
+    assert sm.hop_radius == 0 and sm.time_radius is not None  # fan_in/cycle3
+    assert sm.last_stats["host_syncs"] >= 1
+
+
+def test_session_service_end_to_end():
+    from repro.api import MiningSession
+
+    rng = np.random.default_rng(8)
+    src, dst, t = _stream(rng, n_nodes=40, n_edges=160)
+    session = MiningSession(window=W).register("fan_in", "cycle3")
+    svc = session.service(thresholds={"cycle3": 1})
+    for ch in np.array_split(np.arange(len(src)), 4):
+        svc.submit(src[ch], dst[ch], t[ch])
+    full = build_temporal_graph(src, dst, t)
+    for name in ("fan_in", "cycle3"):
+        want = CompiledPattern(build_pattern(name, W), full).mine()
+        np.testing.assert_array_equal(svc.pattern_counts(name), want)

@@ -1,0 +1,149 @@
+"""TemporalGraphStore invariants: sorted-run maintenance, out-of-order /
+duplicate timestamps, geometric node growth, window eviction, and the
+snapshot / local-view exports."""
+import numpy as np
+import pytest
+
+from repro.graph.csr import build_temporal_graph
+from repro.stream import TemporalGraphStore
+from tests.conftest import random_temporal_graph
+
+
+def _random_stream(rng, n_nodes=40, n_edges=300, t_max=1000):
+    src = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    dst = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    fix = src == dst
+    dst[fix] = (dst[fix] + 1) % n_nodes
+    # heavy duplicate timestamps + no arrival ordering at all
+    t = rng.integers(0, t_max // 8, n_edges).astype(np.int64) * 8
+    return src, dst, t
+
+
+def test_snapshot_equals_batch_build_under_out_of_order_ingest():
+    rng = np.random.default_rng(0)
+    src, dst, t = _random_stream(rng)
+    store = TemporalGraphStore()
+    for ch in np.array_split(np.arange(len(src)), 7):
+        store.ingest(src[ch], dst[ch], t[ch])
+    got = store.snapshot().graph
+    want = build_temporal_graph(src, dst, t)
+    assert got.n_nodes == want.n_nodes and got.n_edges == want.n_edges
+    for field in (
+        "src",
+        "dst",
+        "t",
+        "out_indptr",
+        "out_nbr",
+        "out_t",
+        "out_t_sorted",
+        "in_indptr",
+        "in_nbr",
+        "in_t",
+        "in_t_sorted",
+    ):
+        np.testing.assert_array_equal(
+            getattr(got, field), getattr(want, field), err_msg=field
+        )
+    # zero-copy: the cached snapshot is handed out again untouched
+    assert store.snapshot().graph is got
+    store.ingest(np.array([1], np.int32), np.array([2], np.int32), np.array([5]))
+    assert store.snapshot().graph is not got  # mutation invalidates
+
+
+def test_empty_batches_and_unseen_nodes_grow_geometrically():
+    store = TemporalGraphStore(node_capacity=4)
+    assert len(store.ingest(np.zeros(0), np.zeros(0), np.zeros(0))) == 0
+    store.ingest(np.array([0]), np.array([1]), np.array([10]))
+    assert store.node_cap == 4
+    store.ingest(np.array([900]), np.array([901]), np.array([11]))
+    assert store.node_cap == 1024  # pow2 growth, no rebuild
+    assert store.n_nodes == 902
+    g = store.snapshot().graph
+    assert g.n_edges == 2 and g.n_nodes == 902
+    assert store.stats["node_regrowths"] == 1
+
+
+def test_run_maintenance_is_amortized_not_per_batch_sort():
+    rng = np.random.default_rng(1)
+    store = TemporalGraphStore()
+    n_batches, b = 64, 32
+    for _ in range(n_batches):
+        s = rng.integers(0, 100, b).astype(np.int32)
+        d = (s + 1 + rng.integers(0, 50, b).astype(np.int32)) % 100
+        store.ingest(s, d, rng.integers(0, 10_000, b))
+    e = n_batches * b
+    # geometric run stack: O(log) runs, amortized O(log) moves per edge
+    assert len(store._out.runs) <= int(np.log2(e)) + 2
+    moves_per_edge = store.stats["maint_moved"] / (2 * e)  # out + in
+    assert moves_per_edge <= np.log2(n_batches) + 2
+    # runs keep the geometric size invariant (older >= 2x newer)
+    sizes = [r.n for r in store._out.runs]
+    assert all(a >= 2 * max(1, c) for a, c in zip(sizes, sizes[1:]))
+
+
+def test_window_eviction_bounds_live_set_and_arrival_columns():
+    store = TemporalGraphStore(retain=100)
+    t0 = 0
+    for k in range(30):
+        s = np.arange(5, dtype=np.int32) + 5 * (k % 3)
+        d = s + 1
+        t = np.full(5, t0 + 50 * k, dtype=np.int64)
+        store.ingest(s, d, t)
+    assert store.stats["evict_sweeps"] > 0
+    live = store.live_eids()
+    _, _, lt, _ = store.edge_fields(live)
+    assert lt.min() >= store.cutoff
+    assert store.n_live < store.n_edges_total
+    # fully-evicted arrival prefix is dropped; asking for it raises
+    assert store._base > 0
+    with pytest.raises(KeyError):
+        store.edge_fields(np.array([0]))
+    # eids keep their global meaning across eviction
+    assert live.max() == store.n_edges_total - 1
+
+
+def test_hop_ball_matches_csr_reference():
+    rng = np.random.default_rng(2)
+    src, dst, t = _random_stream(rng, n_nodes=30, n_edges=120)
+    store = TemporalGraphStore()
+    for ch in np.array_split(np.arange(len(src)), 4):
+        store.ingest(src[ch], dst[ch], t[ch])
+    g = store.snapshot().graph
+    seeds = np.array([3, 7])
+    for radius in (0, 1, 2):
+        nodes, dist = store.hop_ball(seeds, radius)
+        # reference: dense BFS over the snapshot adjacency
+        adj = np.zeros((g.n_nodes, g.n_nodes), dtype=bool)
+        adj[g.src, g.dst] = True
+        adj |= adj.T
+        mask = np.zeros(g.n_nodes, dtype=bool)
+        mask[seeds] = True
+        for _ in range(radius):
+            mask = mask | adj[mask].any(axis=0)
+        np.testing.assert_array_equal(nodes, np.nonzero(mask)[0])
+        assert dist.max(initial=0) <= radius
+
+
+def test_local_view_is_exact_on_core_rows():
+    """Mining a seed on the local view == mining it on the full graph,
+    as long as the seed's reads stay inside the core ball."""
+    from repro.core.compiler import CompiledPattern
+    from repro.core.patterns import build_pattern
+
+    rng = np.random.default_rng(3)
+    g = random_temporal_graph(rng, n_nodes=40, n_edges=200, t_max=400)
+    store = TemporalGraphStore()
+    store.ingest(g.src, g.dst, g.t, g.amount)
+    spec = build_pattern("cycle3", 64)
+    full_counts = CompiledPattern(spec, store.snapshot().graph).mine()
+    # core = 1+hop ball around one seed edge's endpoints (cycle3 reads
+    # rows at distance <= 1 from the seed)
+    for eid in (0, 57, 123):
+        s, d, _, _ = store.edge_fields(np.array([eid]))
+        core, _ = store.hop_ball(np.array([s[0], d[0]]), 1)
+        view = store.local_view(core)
+        cp = CompiledPattern(spec, view.graph)
+        got = cp.mine(view.local_seeds(np.array([eid])))
+        assert got[0] == full_counts[eid]
+    # view shapes are pow2-padded so device traces can be shared
+    assert view.graph.n_nodes == 1 << int(np.ceil(np.log2(len(view.node_ids))))
