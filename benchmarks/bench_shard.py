@@ -1,0 +1,169 @@
+"""Sharded mining: the multi-device executor's scaling curve + load
+balance (the paper's near-linear-scaling claim, exercised over virtual
+host devices).
+
+For each shard count in ``--parts-list`` (default 1/2/4/8) the bench
+runs ``session.mine(backend="sharded", n_parts=P)`` over the whole
+library pattern portfolio and records steady-state wall time, per-shard
+dispatch walls, per-shard executor counters, and the achieved
+kernel-call / padded-element skew next to the partitioner's predicted
+cost skew.  Hard asserts (CI smoke runs these at tiny scale):
+
+* sharded counts are **bit-exact** vs ``backend="compiled"`` for every
+  library pattern at every shard count;
+* ``stats["host_syncs"] == 1`` per sharded mine (the single final
+  cross-device gather — per-device accumulators never sync early);
+* achieved kernel-call balance stays within the partitioner's predicted
+  cost skew (plus slack for bucket-granularity rounding).
+
+Run standalone it requests 8 virtual devices in-process BEFORE jax
+backend init; under ``benchmarks/run.py`` it is spawned as a subprocess
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for the
+same reason.  With fewer devices than shards the executor round-robins
+(degradation path — the curve flattens but every assert still holds).
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m benchmarks.bench_shard
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+ROOT_OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_shard.json")
+# headroom over the predicted cost skew: bucket-granularity rounding means
+# kernel calls track cost only to within a ladder class
+SKEW_SLACK = 1.0
+
+
+def run(
+    dataset="HI-Small",
+    scale=0.5,
+    window=4096,
+    n_seeds=4000,
+    parts_list=(1, 2, 4, 8),
+    out_path=ROOT_OUT,
+):
+    import jax
+
+    from benchmarks.common import emit
+    from repro.api import MiningSession
+    from repro.core.patterns import PATTERN_NAMES
+
+    from repro.data.synth_aml import load_dataset
+
+    devices = jax.devices()
+    ds = load_dataset(dataset, scale=scale)
+    g = ds.graph
+    rng = np.random.default_rng(0)
+    seeds = rng.choice(
+        g.n_edges, size=min(n_seeds, g.n_edges), replace=False
+    ).astype(np.int32)
+    names = list(PATTERN_NAMES)
+
+    session = MiningSession(g, window=window).register(*names)
+    session.mine(names, seeds=seeds)  # compile + warm-up
+    t0 = time.perf_counter()
+    base = session.mine(names, seeds=seeds)
+    base_s = time.perf_counter() - t0
+
+    report = {
+        "dataset": ds.name,
+        "scale": scale,
+        "window": window,
+        "n_seeds": int(len(seeds)),
+        "n_devices": len(devices),
+        "patterns": names,
+        "compiled_wall_s": base_s,
+        "shards": {},
+    }
+    for n_parts in parts_list:
+        session.mine(names, seeds=seeds, backend="sharded", n_parts=n_parts)
+        t0 = time.perf_counter()
+        res = session.mine(
+            names, seeds=seeds, backend="sharded", n_parts=n_parts
+        )
+        wall = time.perf_counter() - t0
+        assert np.array_equal(res.counts, base.counts), (
+            f"sharded n_parts={n_parts} diverged from compiled counts"
+        )
+        assert res.stats["host_syncs"] == 1, (
+            f"sharded mine must sync exactly once, saw "
+            f"{res.stats['host_syncs']}"
+        )
+        bal = res.shard_balance()
+        n_used = len(set(res.shard_devices))
+        if n_parts > 1:
+            assert bal["kernel_call_skew"] <= (
+                bal["predicted_cost_skew"] + SKEW_SLACK
+            ), f"kernel-call balance blew past the predicted skew: {bal}"
+        report["shards"][str(n_parts)] = {
+            "wall_s": wall,
+            "speedup_vs_compiled": base_s / wall if wall > 0 else float("inf"),
+            "devices_used": n_used,
+            "shard_devices": list(res.shard_devices),
+            "per_shard_dispatch_s": res.per_shard_seconds,
+            "per_shard_kernel_calls": [
+                s["kernel_calls"] for s in res.shard_stats
+            ],
+            "per_shard_padded_elements": [
+                s["padded_elements"] for s in res.shard_stats
+            ],
+            "balance": bal,
+            "host_syncs": res.stats["host_syncs"],
+            "counts_match_compiled": True,
+            **{k: res.stats[k] for k in ("kernel_calls", "padded_elements",
+                                         "bytes_h2d", "bytes_d2h")},
+        }
+        emit(
+            f"shard/parts{n_parts}",
+            wall / max(1, len(seeds)) * 1e6,
+            f"wall_s={wall:.3f};devices={n_used};"
+            f"speedup_vs_compiled={base_s / max(wall, 1e-9):.2f}x;"
+            f"kernel_call_skew={bal['kernel_call_skew']:.3f};"
+            f"predicted_skew={bal['predicted_cost_skew']:.3f};"
+            f"host_syncs={res.stats['host_syncs']};exact=True",
+        )
+    out_path = os.path.abspath(out_path)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {out_path}")
+    return report
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="HI-Small")
+    ap.add_argument("--scale", type=float, default=0.5)
+    ap.add_argument("--window", type=int, default=4096)
+    ap.add_argument("--seeds", type=int, default=4000)
+    ap.add_argument("--parts-list", default="1,2,4,8")
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--out", default=ROOT_OUT)
+    args = ap.parse_args()
+
+    # request virtual devices BEFORE anything initializes a jax backend
+    from repro.launch.mesh import ensure_host_devices
+
+    got = ensure_host_devices(args.devices)
+    if got < args.devices:
+        print(f"# requested {args.devices} devices, got {got} (degrading)")
+
+    print("name,us_per_call,derived")
+    run(
+        dataset=args.dataset,
+        scale=args.scale,
+        window=args.window,
+        n_seeds=args.seeds,
+        parts_list=tuple(int(p) for p in args.parts_list.split(",")),
+        out_path=args.out,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -8,17 +8,40 @@ Prints `name,us_per_call,derived` CSV rows.  Full sweep:
 from __future__ import annotations
 
 import argparse
+import os
+import subprocess
+import sys
 import time
 import traceback
+
+
+def _run_shard_subprocess() -> None:
+    """bench_shard needs --xla_force_host_platform_device_count before
+    jax backend init; by the time the suite reaches it this process has
+    long been initialized with the real (single) device, so the shard
+    bench runs in a subprocess with the flag in its environment."""
+    from benchmarks import bench_shard
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+    ).strip()
+    subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_shard",
+         "--out", os.path.abspath(bench_shard.ROOT_OUT)],
+        check=True,
+        env=env,
+    )
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "--only",
-        default="kernels,mining,portfolio,streaming,scaling,f1,fraudgt,roofline",
-        help="comma list: kernels,mining,portfolio,streaming,scaling,f1,"
+        default="kernels,mining,portfolio,streaming,shard,scaling,f1,"
         "fraudgt,roofline",
+        help="comma list: kernels,mining,portfolio,streaming,shard,scaling,"
+        "f1,fraudgt,roofline",
     )
     args = ap.parse_args()
     only = set(args.only.split(","))
@@ -54,6 +77,11 @@ def main() -> None:
                 lambda: bench_streaming.run(out_path=bench_streaming.ROOT_OUT),
             )
         )
+    if "shard" in only:
+        # the shard bench is the multi-device scaling trajectory: always
+        # emit its BENCH_shard.json (scaling curve + balance + exactness)
+        # at the repo root
+        jobs.append(("shard", _run_shard_subprocess))
     if "scaling" in only:
         from benchmarks import bench_scaling
 

@@ -22,11 +22,14 @@ runs ONE shared analysis, and mines everything:
 
 `session.mine(...)` returns a structured :class:`MiningResult` (counts
 matrix, column names, kernel-call / padded-element counters, per-pattern
-wall time) and supports four backends: ``"compiled"`` (default),
+wall time) and supports five backends: ``"compiled"`` (default),
 ``"oracle"`` (GFP enumerator), ``"streaming"`` (single-shot ingest
-through :class:`repro.stream.DetectionService`), and
-``"partitioned"`` (degree-balanced edge partitions mined sequentially
-through the same compiled plans — the shard_map layout).
+through :class:`repro.stream.DetectionService`), ``"partitioned"``
+(degree-balanced edge partitions mined sequentially through the same
+compiled plans — the layout-validation path), and ``"sharded"`` (the
+real thing: every partition's launches dispatched to its own device via
+:mod:`repro.core.shard`, per-device resident accumulators, ONE blocking
+cross-device gather per mine).
 """
 from __future__ import annotations
 
@@ -68,7 +71,7 @@ __all__ = [
     "featurize",
 ]
 
-BACKENDS = ("compiled", "oracle", "streaming", "partitioned")
+BACKENDS = ("compiled", "oracle", "streaming", "partitioned", "sharded")
 
 
 # ----------------------------------------------------------------------
@@ -260,6 +263,59 @@ class _FusedSeedPlan:
         return jax.jit(kernel)
 
     # -- execution ------------------------------------------------------
+    def launch_units(
+        self,
+        seed_eids: np.ndarray,
+        stats: Dict[str, int],
+        unit_sel: Optional[Tuple[int, ...]] = None,
+        dg=None,
+        device=None,
+    ):
+        """Dispatch the fused pass WITHOUT the final host sync: returns
+        the device-resident ``(padded_n, len(unit_sel))`` unit matrix
+        (rows past ``len(seed_eids)`` are padding).
+
+        ``dg``/``device`` override the resident graph mirror and launch
+        placement — the sharded executor passes one replica + device per
+        partition; the jitted unit kernels are shared across devices
+        (jit specializes per committed input device under one trace)."""
+        import jax
+        import jax.numpy as jnp
+
+        if unit_sel is None:
+            unit_sel = tuple(range(self.n_units))
+        n_units = len(unit_sel)
+        if unit_sel not in self._jitted:
+            self._jitted[unit_sel] = self._build(unit_sel)
+        fn = self._jitted[unit_sel]
+        g = self.g
+        n = len(seed_eids)
+        if n == 0 or n_units == 0:
+            return jax.device_put(jnp.zeros((n, n_units), jnp.int32), device)
+        if dg is None:
+            dg = self.dg
+        widths = executor.chunk_widths(n, self.batch_elem_cap, n_units)
+        total = sum(widths)
+        # one padded staging buffer per field (padding only ever lands in
+        # the tail chunk), one host→device transfer for the whole batch
+        ss = np.full(total, -1, np.int32)
+        dd = np.full(total, -1, np.int32)
+        tt = np.zeros(total, np.int32)
+        ss[:n] = g.src[seed_eids]
+        dd[:n] = g.dst[seed_eids]
+        tt[:n] = g.t[seed_eids]
+        dev_s, dev_d, dev_t = jax.device_put((ss, dd, tt), device)
+        stats["bytes_h2d"] += int(ss.nbytes + dd.nbytes + tt.nbytes)
+        chunks = []
+        s0 = 0
+        for w in widths:
+            sl = slice(s0, s0 + w)
+            chunks.append(fn(dg, dev_s[sl], dev_d[sl], dev_t[sl]))
+            stats["kernel_calls"] += 1
+            stats["padded_elements"] += w * n_units
+            s0 += w
+        return chunks[0] if len(chunks) == 1 else jnp.concatenate(chunks)
+
     def mine_units(
         self,
         seed_eids: np.ndarray,
@@ -276,40 +332,12 @@ class _FusedSeedPlan:
         single ``device_put``, per-chunk launches stay asynchronous on
         device slices, and the finished unit matrix comes back in ONE
         blocking device→host transfer."""
-        import jax
-        import jax.numpy as jnp
-
+        n = len(seed_eids)
         if unit_sel is None:
             unit_sel = tuple(range(self.n_units))
-        n_units = len(unit_sel)
-        if unit_sel not in self._jitted:
-            self._jitted[unit_sel] = self._build(unit_sel)
-        fn = self._jitted[unit_sel]
-        g = self.g
-        n = len(seed_eids)
-        if n == 0 or n_units == 0:
-            return np.zeros((n, n_units), dtype=np.int64)
-        widths = executor.chunk_widths(n, self.batch_elem_cap, n_units)
-        total = sum(widths)
-        # one padded staging buffer per field (padding only ever lands in
-        # the tail chunk), one host→device transfer for the whole batch
-        ss = np.full(total, -1, np.int32)
-        dd = np.full(total, -1, np.int32)
-        tt = np.zeros(total, np.int32)
-        ss[:n] = g.src[seed_eids]
-        dd[:n] = g.dst[seed_eids]
-        tt[:n] = g.t[seed_eids]
-        dev_s, dev_d, dev_t = jax.device_put((ss, dd, tt))
-        stats["bytes_h2d"] += int(ss.nbytes + dd.nbytes + tt.nbytes)
-        chunks = []
-        s0 = 0
-        for w in widths:
-            sl = slice(s0, s0 + w)
-            chunks.append(fn(self.dg, dev_s[sl], dev_d[sl], dev_t[sl]))
-            stats["kernel_calls"] += 1
-            stats["padded_elements"] += w * n_units
-            s0 += w
-        dev_out = chunks[0] if len(chunks) == 1 else jnp.concatenate(chunks)
+        if n == 0 or len(unit_sel) == 0:
+            return np.zeros((n, len(unit_sel)), dtype=np.int64)
+        dev_out = self.launch_units(seed_eids, stats, unit_sel)
         host = np.asarray(dev_out)  # THE one host sync of the fused pass
         stats["host_syncs"] += 1
         stats["bytes_d2h"] += int(host.nbytes)
@@ -343,6 +371,16 @@ class MiningResult:
     backend invocation — each compiled plan and the fused pass transfer
     their finished counts once), staging bytes h2d/d2h, new JIT traces,
     and bucket-schedule cache hits.
+
+    Sharded mines (``backend="sharded"``) additionally report per-shard
+    observability: ``per_shard_seconds`` (host dispatch wall per shard —
+    device compute overlaps across shards, so these are not additive
+    wall time), ``shard_stats`` (one executor counter dict per shard),
+    ``shard_devices`` (the device each shard ran on), and the
+    ``partition_plan`` whose predicted cost skew
+    :meth:`shard_balance` compares against the achieved kernel-call /
+    padded-element balance.  A sharded mine's ``stats["host_syncs"]`` is
+    exactly 1: the final cross-device gather.
     """
 
     columns: Tuple[str, ...]
@@ -354,9 +392,35 @@ class MiningResult:
     fused: Tuple[str, ...] = ()
     per_part_seconds: Optional[List[float]] = None
     partition_plan: Optional[object] = None
+    per_shard_seconds: Optional[List[float]] = None
+    shard_stats: Optional[List[Dict[str, int]]] = None
+    shard_devices: Optional[Tuple[str, ...]] = None
 
     def column(self, name: str) -> np.ndarray:
         return self.counts[:, self.columns.index(name)]
+
+    def shard_balance(self) -> Optional[Dict[str, float]]:
+        """Predicted vs achieved load balance of a sharded mine: the
+        partitioner's cost-model skew next to the realized kernel-call
+        and padded-element skews (max over shards / mean; 1.0 = perfectly
+        balanced).  None unless ``backend="sharded"``."""
+        if self.shard_stats is None or self.partition_plan is None:
+            return None
+
+        def skew(xs) -> float:
+            xs = np.asarray(xs, dtype=np.float64)
+            m = xs.mean() if xs.size else 0.0
+            return float(xs.max() / m) if m > 0 else 1.0
+
+        return {
+            "predicted_cost_skew": float(self.partition_plan.skew),
+            "kernel_call_skew": skew(
+                [s["kernel_calls"] for s in self.shard_stats]
+            ),
+            "padded_element_skew": skew(
+                [s["padded_elements"] for s in self.shard_stats]
+            ),
+        }
 
     def as_features(self) -> np.ndarray:
         """float32 feature block, one column per pattern."""
@@ -415,6 +479,7 @@ class MiningSession:
         self._compiled: Dict[str, CompiledPattern] = {}
         self._fused: Optional[_FusedSeedPlan] = None
         self._oracles: Dict[str, object] = {}
+        self._shard_ctx = None  # per-device graph replicas (sharded backend)
         self._analyzed = False
         # lifetime counters (mirrors CompiledPattern.stats, portfolio-wide)
         self.stats = executor.new_stats()
@@ -581,10 +646,14 @@ class MiningSession:
         patterns: Optional[Sequence[PatternLike]] = None,
         seeds: Optional[np.ndarray] = None,
         backend: str = "compiled",
-        n_parts: int = 4,
+        n_parts: Optional[int] = None,
     ) -> MiningResult:
         """Mine the requested patterns (default: every registered one)
-        over `seeds` (default: every edge) and return a MiningResult."""
+        over `seeds` (default: every edge) and return a MiningResult.
+
+        ``n_parts`` applies to the partition-based backends: default 4
+        for ``"partitioned"`` and one partition per available device for
+        ``"sharded"`` (round-robin when it exceeds the device count)."""
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; options: {BACKENDS}")
         if self.graph is None:
@@ -651,14 +720,18 @@ class MiningSession:
                 stats=stats,
             )
 
-        # partitioned: degree-balanced parts mined through the SAME
-        # compiled plans (kernel/JIT caches and _vals_cache are shared, so
-        # later parts pay no recompilation)
+        if backend == "sharded":
+            return self._mine_sharded(names, seeds, n_parts)
+
+        # partitioned: degree-balanced parts mined sequentially through
+        # the SAME compiled plans (kernel/JIT caches and _vals_cache are
+        # shared, so later parts pay no recompilation).  Reassembly
+        # scatters through the plan's slot->input-position map, so every
+        # occurrence of a duplicated seed id gets its count (an id-keyed
+        # scatter kept only the last occurrence).
         from repro.graph.partition import partition_edges
 
-        plan = partition_edges(g, n_parts, edge_ids=seeds)
-        pos = np.full(g.n_edges, -1, dtype=np.int64)
-        pos[seeds] = np.arange(len(seeds))
+        plan = partition_edges(g, 4 if n_parts is None else n_parts, edge_ids=seeds)
         counts = np.zeros((len(seeds), len(names)), dtype=np.int64)
         seconds = {n: 0.0 for n in names}
         stats = executor.new_stats()
@@ -666,12 +739,13 @@ class MiningSession:
         per_part: List[float] = []
         for p in range(plan.n_parts):
             ids = plan.edge_ids[p][plan.valid[p]]
+            rows = plan.positions[p][plan.valid[p]]
             t0 = time.perf_counter()
             part_counts, part_seconds, fused, part_stats = self._mine_compiled(
                 names, ids
             )
             per_part.append(time.perf_counter() - t0)
-            counts[pos[ids]] = part_counts
+            counts[rows] = part_counts
             for n in names:
                 seconds[n] += part_seconds.get(n, 0.0)
             for k in stats:
@@ -686,6 +760,98 @@ class MiningSession:
             fused=fused,
             per_part_seconds=per_part,
             partition_plan=plan,
+        )
+
+    def _mine_sharded(
+        self, names: List[str], seeds: np.ndarray, n_parts: Optional[int]
+    ) -> MiningResult:
+        """One multi-device sharded pass (see :mod:`repro.core.shard`):
+        cost-balanced partitions dispatched round-robin over the device
+        set, per-device resident accumulators, and exactly ONE blocking
+        host sync — the final cross-device gather."""
+        from repro.core import shard
+        from repro.graph.partition import partition_edges
+
+        self.compile()
+        if self._shard_ctx is None:
+            self._shard_ctx = shard.ShardContext(self._dg)
+        ctx = self._shard_ctx
+        if n_parts is None:
+            n_parts = ctx.n_devices
+        plan = partition_edges(self.graph, n_parts, edge_ids=seeds)
+
+        fused_cols = [
+            (j, n) for j, n in enumerate(names) if self._canon_of[n] in self._fused.emits
+        ]
+        unit_sel: Tuple[int, ...] = ()
+        if fused_cols:
+            unit_sel = self._fused.units_for(
+                {self._canon_of[n] for _, n in fused_cols}
+            )
+        compiled_keys: List[str] = []
+        for n in names:
+            key = self._canon_of[n]
+            if key in self._compiled and key not in compiled_keys:
+                compiled_keys.append(key)
+                cp = self._compiled[key]
+                # keep every shard's schedule resident across mines
+                cp.schedule_cache_cap = max(
+                    cp.schedule_cache_cap, plan.n_parts + 1
+                )
+
+        def launch(p, ids, dgr, device, st):
+            outs = {}
+            if fused_cols:
+                outs["__fused__"] = self._fused.launch_units(
+                    ids, st, unit_sel, dg=dgr, device=device
+                )
+            for key in compiled_keys:
+                outs[key] = self._compiled[key].mine_async(
+                    ids, dg=dgr, device=device, stats=st
+                )
+            return outs
+
+        stats = executor.new_stats()
+        t0 = time.perf_counter()
+        host_outs, shard_stats, shard_walls, shard_devs = shard.run_sharded(
+            plan, launch, ctx, stats
+        )
+        wall = time.perf_counter() - t0
+
+        counts = np.zeros((len(seeds), len(names)), dtype=np.int64)
+        for p in range(plan.n_parts):
+            rows = plan.positions[p][plan.valid[p]]
+            if len(rows) == 0:
+                continue
+            out_p = host_outs[p]
+            if fused_cols:
+                unit_vals = np.asarray(out_p["__fused__"])[: len(rows)].astype(
+                    np.int64
+                )
+                for j, n in fused_cols:
+                    counts[rows, j] = self._fused.assemble(
+                        self._canon_of[n], unit_vals, unit_sel
+                    )
+            for j, n in enumerate(names):
+                key = self._canon_of[n]
+                if key in self._compiled:
+                    counts[rows, j] = np.asarray(out_p[key], dtype=np.int64)
+        for k in stats:
+            self.stats[k] += stats[k]
+        return MiningResult(
+            columns=tuple(names),
+            counts=counts,
+            backend="sharded",
+            n_seeds=len(seeds),
+            # one shared device-parallel pass: every pattern reports the
+            # whole mine's wall (not additive across patterns or shards)
+            seconds={n: wall for n in names},
+            stats=stats,
+            fused=tuple(n for _, n in fused_cols),
+            partition_plan=plan,
+            per_shard_seconds=shard_walls,
+            shard_stats=shard_stats,
+            shard_devices=tuple(shard_devs),
         )
 
     # -- streaming ------------------------------------------------------

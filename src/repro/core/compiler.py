@@ -1392,6 +1392,68 @@ class CompiledPattern:
             groups=groups, branch_items=branch_items, n_out=n
         )
 
+    def schedule_for(
+        self, seed_eids: np.ndarray, stats: Optional[Dict[str, int]] = None
+    ) -> executor.Schedule:
+        """The cached bucket schedule for a seed set (building it on a
+        miss).  Schedules are pure in (plan, graph degree requirements,
+        seed ids) and carry no device state, so one cached schedule is
+        replayed by every device of a sharded mine — the host-side numpy
+        grouping runs once per (plan, partition), never once per device."""
+        stats = self.stats if stats is None else stats
+        key = (len(seed_eids), hashlib.sha1(seed_eids.tobytes()).hexdigest())
+        sched = self._schedules.get(key)
+        if sched is None:
+            sched = self._build_schedule(seed_eids)
+            self._schedules[key] = sched
+            while len(self._schedules) > self.schedule_cache_cap:
+                self._schedules.popitem(last=False)  # evict LRU
+        else:
+            self._schedules.move_to_end(key)
+            stats["schedule_hits"] += 1
+        return sched
+
+    def mine_async(
+        self,
+        seed_eids: np.ndarray,
+        *,
+        dg: Optional[DeviceGraph] = None,
+        device=None,
+        stats: Optional[Dict[str, int]] = None,
+    ):
+        """Dispatch a whole mine WITHOUT the final host sync: returns the
+        device-resident per-seed count vector (int32).
+
+        ``dg``/``device`` override the plan's resident graph mirror and
+        the launch placement — the sharded executor passes one graph
+        replica + device per partition while the schedule, the jitted
+        kernel callables, and the requirement cache stay shared.
+        ``stats`` redirects counter deltas (per-shard accounting);
+        default is the plan's lifetime ``self.stats``.
+        """
+        stats = self.stats if stats is None else stats
+        seed_eids = np.asarray(seed_eids, dtype=np.int32)
+        n = len(seed_eids)
+        if n == 0:
+            return jax.device_put(jnp.zeros(0, jnp.int32), device)
+        sched = self.schedule_for(seed_eids, stats)
+        stats["branch_items"] += sched.branch_items
+        before_traces = len(self._trace_keys)
+        out_dev = executor.execute(
+            sched.groups,
+            n,
+            self._kernel,
+            self.dg if dg is None else dg,
+            stats,
+            self._trace_keys,
+            trace_tag=(self.n_iters,),
+            device=device,
+        )
+        # accumulate the gauge as a delta so redirected per-shard stats
+        # dicts (several plans share one dict per shard) stay additive
+        stats["jit_cache_entries"] += len(self._trace_keys) - before_traces
+        return out_dev
+
     def mine(self, seed_eids: Optional[np.ndarray] = None) -> np.ndarray:
         """Mine per-seed pattern counts, device-resident end to end.
 
@@ -1403,30 +1465,9 @@ class CompiledPattern:
         if seed_eids is None:
             seed_eids = np.arange(self.g.n_edges, dtype=np.int32)
         seed_eids = np.asarray(seed_eids, dtype=np.int32)
-        n = len(seed_eids)
-        if n == 0:
+        if len(seed_eids) == 0:
             return np.zeros(0, dtype=np.int64)
-        key = (n, hashlib.sha1(seed_eids.tobytes()).hexdigest())
-        sched = self._schedules.get(key)
-        if sched is None:
-            sched = self._build_schedule(seed_eids)
-            self._schedules[key] = sched
-            while len(self._schedules) > self.schedule_cache_cap:
-                self._schedules.popitem(last=False)  # evict LRU
-        else:
-            self._schedules.move_to_end(key)
-            self.stats["schedule_hits"] += 1
-        self.stats["branch_items"] += sched.branch_items
-        out_dev = executor.execute(
-            sched.groups,
-            n,
-            self._kernel,
-            self.dg,
-            self.stats,
-            self._trace_keys,
-            trace_tag=(self.n_iters,),
-        )
-        self.stats["jit_cache_entries"] = len(self._trace_keys)
+        out_dev = self.mine_async(seed_eids)
         return executor.fetch(out_dev, self.stats).astype(np.int64)
 
 

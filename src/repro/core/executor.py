@@ -212,15 +212,26 @@ def execute(
     stats: Dict[str, int],
     trace_keys: set,
     trace_tag: Tuple = (),
+    device=None,
 ):
     """Launch every group chunk asynchronously, accumulating on device.
 
     Returns the device-resident per-seed count vector; nothing here
     blocks on the device — call :func:`fetch` for the one host sync.
+
+    ``device`` pins the whole launch sequence (staging transfers, kernel
+    dispatch, and the accumulator) to one explicit device — the sharded
+    executor (:mod:`repro.core.shard`) passes each partition's device
+    together with that device's graph replica as ``dg``, so jit dispatch
+    follows the committed inputs and nothing lands on device 0 by
+    accident.  ``device=None`` keeps the single-device default placement
+    (``jax.device_put(x, None)`` and ``jax.default_device(None)`` are
+    no-op identities).
     """
-    out = jnp.zeros(n_out, jnp.int32)
+    with jax.default_device(device):  # allocate the accumulator in place
+        out = jnp.zeros(n_out, jnp.int32)
     for grp in groups:
-        dev = jax.device_put(grp.staging)
+        dev = jax.device_put(grp.staging, device)
         stats["bytes_h2d"] += sum(int(a.nbytes) for a in grp.staging)
         fn = kernel_for(grp.strat, grp.dims, grp.sweeps, grp.branch)
         s0 = 0

@@ -1,0 +1,148 @@
+"""Multi-device sharded mining executor (the paper's near-linear
+scaling claim, realized over a JAX device set).
+
+Pattern counts are per-seed-edge, so mining is embarrassingly
+data-parallel once the partitioner (:mod:`repro.graph.partition`) has
+balanced expected cost: each partition of the dense ``(P, L)`` edge-id
+matrix is an independent mine.  This module turns that independence into
+actual multi-device execution with **explicit device placement** (the
+``device_put(x, device)`` layout — per-partition bucket schedules are
+ragged, so a ``shard_map`` over uniform per-device shapes would force
+worst-case padding on every shard; committed inputs give the same
+device-parallel dispatch without it):
+
+* **One graph replica per device** (:class:`ShardContext`) — the
+  :class:`~repro.graph.csr.DeviceGraph` pytree is ``device_put`` onto
+  each mining device once and cached for the session's lifetime;
+  partitions are assigned round-robin, so ``n_parts`` may exceed the
+  device count (extra partitions time-share a device) and on a single
+  device the executor degrades to exactly the resident async behavior.
+* **Host schedules shared across devices** — each partition's bucket
+  schedule comes from ``CompiledPattern.schedule_for`` (the schedule
+  LRU), and the jitted kernel *callables* are shared too: jit
+  specializes per committed input device under one trace, so adding
+  devices multiplies executables, never Python-side lowering work.
+* **Per-device resident accumulators, ONE host sync** — every
+  partition's chunk launches scatter-add into an accumulator resident
+  on its own device; nothing blocks during dispatch, and the only
+  blocking transfer of a sharded mine is the final cross-device
+  :func:`gather` of all finished per-shard outputs
+  (``stats["host_syncs"] == 1`` for the whole mine, fused seed-local
+  pass included).
+
+Per-shard observability: :func:`run_sharded` returns one executor stat
+dict, dispatch wall time, and device name per shard, so the benchmark
+(``benchmarks/bench_shard.py``) can compare achieved kernel-call /
+padded-element balance against the partitioner's predicted cost skew.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.core import executor
+from repro.graph.partition import PartitionPlan
+
+__all__ = ["ShardContext", "mining_devices", "run_sharded", "gather"]
+
+
+def mining_devices(n: Optional[int] = None) -> List:
+    """The devices a sharded mine runs over: the first ``n`` JAX devices
+    (all of them when ``n`` is None or exceeds the platform count).
+    Under ``XLA_FLAGS=--xla_force_host_platform_device_count=K`` the CPU
+    platform presents K virtual devices, which is how the multi-device
+    path is exercised on a single-CPU container."""
+    devs = jax.devices()
+    if n is None or n >= len(devs):
+        return list(devs)
+    return list(devs[: max(1, n)])
+
+
+class ShardContext:
+    """Per-device graph replicas for one resident :class:`DeviceGraph`.
+
+    Replication is lazy and cached: a device's replica is built on its
+    first partition and reused for every later mine, so steady-state
+    sharded mines move only staging buffers.  On the device that already
+    holds the source mirror, ``device_put`` is a no-op aliasing the
+    existing buffers.
+    """
+
+    def __init__(self, dg, devices: Optional[Sequence] = None):
+        self.dg = dg
+        self.devices = (
+            list(devices) if devices is not None else mining_devices()
+        )
+        if not self.devices:
+            raise ValueError("no devices available for sharded mining")
+        self._replicas: Dict = {}
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.devices)
+
+    def device_for(self, p: int):
+        """Round-robin partition -> device assignment."""
+        return self.devices[p % len(self.devices)]
+
+    def replica(self, device):
+        """The graph replica resident on ``device`` (built on first use)."""
+        if device not in self._replicas:
+            self._replicas[device] = jax.device_put(self.dg, device)
+        return self._replicas[device]
+
+
+def gather(outs, stats: Dict[str, int]):
+    """THE one blocking host sync of a sharded mine: a single
+    ``device_get`` over every shard's finished device outputs (a pytree
+    spanning all mining devices)."""
+    host = jax.device_get(outs)
+    stats["host_syncs"] += 1
+    stats["bytes_d2h"] += int(
+        sum(a.nbytes for a in jax.tree_util.tree_leaves(host))
+    )
+    return host
+
+
+def run_sharded(
+    plan: PartitionPlan,
+    launch: Callable,
+    ctx: ShardContext,
+    stats: Dict[str, int],
+) -> Tuple[List, List[Dict[str, int]], List[float], List[str]]:
+    """Dispatch every partition of ``plan`` to its device and gather once.
+
+    ``launch(p, ids, dg, device, shard_stats)`` must dispatch partition
+    ``p``'s work (seed edge ids ``ids``) onto ``device`` using the graph
+    replica ``dg`` and return a pytree of **device-resident** arrays —
+    it must not block on the device (no ``np.asarray`` / ``device_get``;
+    use ``CompiledPattern.mine_async`` and friends).
+
+    Returns ``(host_outs, shard_stats, shard_walls, shard_devices)``:
+    the gathered (host) output pytree, executor counter deltas, dispatch
+    wall seconds, and device name per shard.  Aggregates every shard's
+    counters into ``stats`` and charges the single final gather as the
+    mine's one ``host_syncs``.
+    """
+    outs = []
+    shard_stats: List[Dict[str, int]] = []
+    shard_walls: List[float] = []
+    shard_devices: List[str] = []
+    for p in range(plan.n_parts):
+        ids = plan.edge_ids[p][plan.valid[p]]
+        device = ctx.device_for(p)
+        st = executor.new_stats()
+        t0 = time.perf_counter()
+        outs.append(launch(p, ids, ctx.replica(device), device, st))
+        shard_walls.append(time.perf_counter() - t0)
+        shard_stats.append(st)
+        shard_devices.append(str(device))
+    host_outs = gather(outs, stats)
+    for st in shard_stats:
+        for k in executor.STAT_KEYS:
+            if k in ("host_syncs", "bytes_d2h"):
+                continue  # per-shard launches never sync; the gather paid
+            stats[k] += st[k]  # all deltas (jit_cache_entries included)
+    return host_outs, shard_stats, shard_walls, shard_devices

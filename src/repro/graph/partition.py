@@ -8,7 +8,12 @@ a ≤ 4/3-optimal makespan — this is the straggler-mitigation story at the
 partitioner level: no partition carries more than ``max_skew`` × mean cost.
 
 Partitions are padded to a common length so the result is a dense
-``(P, L)`` edge-id matrix consumable by ``shard_map`` (pad id = -1).
+``(P, L)`` edge-id matrix consumable by the sharded executor
+(``repro.core.shard``) or ``shard_map`` (pad id = -1).  The plan also
+carries ``positions`` — the index of every slot into the *input*
+``edge_ids`` array — so reassembly scatters per-partition results back to
+every occurrence of a seed: duplicate seed ids are first-class (each
+occurrence is mined in its own slot and lands back in its own row).
 """
 from __future__ import annotations
 
@@ -27,6 +32,7 @@ class PartitionPlan:
     edge_ids: np.ndarray  # (P, L) int32, -1 padded
     valid: np.ndarray  # (P, L) bool
     cost: np.ndarray  # (P,) float64 — estimated per-partition mining cost
+    positions: np.ndarray  # (P, L) int64 — slot -> index into input edge_ids
 
     @property
     def skew(self) -> float:
@@ -61,7 +67,6 @@ def partition_edges(
         order = np.argsort(-cost, kind="stable")
         part = np.empty(edge_ids.shape[0], dtype=np.int32)
         loads = np.zeros(n_parts, dtype=np.float64)
-        counts = np.zeros(n_parts, dtype=np.int64)
         # vectorized round: process in chunks, assigning chunk items round-
         # robin over the argsort of current loads (exact greedy would be a
         # Python loop per edge; chunked greedy keeps skew tiny at numpy speed)
@@ -72,18 +77,25 @@ def partition_edges(
             lanes = ranks[np.arange(idx.shape[0]) % n_parts]
             part[idx] = lanes
             np.add.at(loads, lanes, cost[idx])
-            np.add.at(counts, lanes, 1)
     else:
         raise ValueError(f"unknown strategy: {strategy}")
 
+    # dense (P, L) assembly in one argsort-by-part scatter: slot (p, c)
+    # holds the c-th input position assigned to partition p
     counts = np.bincount(part, minlength=n_parts)
     pad_len = int(counts.max(initial=0))
+    order = np.argsort(part, kind="stable")
+    row = part[order]
+    col = np.arange(order.shape[0], dtype=np.int64)
+    col -= (np.cumsum(counts) - counts)[row]
     ids = np.full((n_parts, pad_len), -1, dtype=np.int32)
     valid = np.zeros((n_parts, pad_len), dtype=bool)
-    pcost = np.zeros(n_parts, dtype=np.float64)
-    for p in range(n_parts):
-        sel = edge_ids[part == p]
-        ids[p, : sel.shape[0]] = sel
-        valid[p, : sel.shape[0]] = True
-        pcost[p] = cost[part == p].sum()
-    return PartitionPlan(n_parts=n_parts, edge_ids=ids, valid=valid, cost=pcost)
+    positions = np.full((n_parts, pad_len), -1, dtype=np.int64)
+    ids[row, col] = edge_ids[order]
+    positions[row, col] = order
+    valid[row, col] = True
+    pcost = np.bincount(part, weights=cost, minlength=n_parts)
+    return PartitionPlan(
+        n_parts=n_parts, edge_ids=ids, valid=valid, cost=pcost,
+        positions=positions,
+    )

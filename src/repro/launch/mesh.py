@@ -1,15 +1,38 @@
-"""Production mesh construction.
+"""Production mesh construction + virtual-device bring-up.
 
-A FUNCTION (not a module-level constant) so importing this module never
-touches jax device state — the dry-run sets
+Mesh builders are FUNCTIONS (not module-level constants) so importing
+this module never touches jax device state — the dry-run sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
 init; everything else sees the real device count.
+
+:func:`ensure_host_devices` is the in-process knob the sharded mining
+launcher (``repro.launch.mine``) uses: it appends
+``--xla_force_host_platform_device_count=N`` to ``XLA_FLAGS`` *before*
+the first backend initialization, so a single-CPU container presents N
+virtual devices to :mod:`repro.core.shard` without a subprocess.
 """
 from __future__ import annotations
 
+import os
+
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "ensure_host_devices"]
+
+
+def ensure_host_devices(n: int) -> int:
+    """Request ``n`` virtual host (CPU) devices and return the count
+    actually visible.
+
+    Must run before jax's backend initializes (the flag is read once, at
+    CPU client creation) — callers that get fewer devices back than they
+    asked for are running after init (or on a real multi-chip platform)
+    and should degrade to the visible device set rather than fail."""
+    flag = f"--xla_force_host_platform_device_count={int(n)}"
+    cur = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in cur:
+        os.environ["XLA_FLAGS"] = f"{cur} {flag}".strip()
+    return len(jax.devices())
 
 
 def make_production_mesh(*, multi_pod: bool = False):

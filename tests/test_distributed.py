@@ -125,13 +125,19 @@ def test_elastic_checkpoint_restore(subproc_result):
     assert subproc_result["restore_step"] == 1
 
 
-def test_partitioned_mining_matches_direct(small_ds):
+@pytest.mark.parametrize("backend", ["partitioned", "sharded"])
+def test_partitioned_mining_matches_direct(small_ds, backend):
     from repro.launch.mine import mine_partitioned
     from repro.core.compiler import CompiledPattern
     from repro.core.patterns import build_pattern
 
     g = small_ds.graph
-    counts, plan, _ = mine_partitioned(g, "cycle3", 4096, n_parts=4)
+    counts, plan, timing = mine_partitioned(
+        g, "cycle3", 4096, n_parts=4, backend=backend
+    )
     direct = CompiledPattern(build_pattern("cycle3", 4096), g).mine()
     np.testing.assert_array_equal(counts, direct)
     assert plan.skew < 1.3
+    assert len(timing["per_part"]) == 4
+    if backend == "sharded":
+        assert timing["host_syncs"] == 1

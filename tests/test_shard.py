@@ -1,0 +1,207 @@
+"""Sharded / partitioned backend contracts.
+
+* the duplicate-seed dropout regression: every occurrence of a repeated
+  seed id must come back with its count on `partitioned` AND `sharded`
+  (the old id-keyed reassembly zeroed all but the last occurrence);
+* the backend cross-product exactness matrix: every backend over
+  duplicate seeds, empty seed sets, more partitions than seeds, and a
+  python-list seeds argument, for a seed-local and a multi-stage
+  pattern;
+* sharded invariants: bit-exact vs compiled on the full library
+  portfolio, exactly ONE host sync per mine, per-shard observability,
+  schedule reuse across repeated mines;
+* PartitionPlan: positions/valid consistency, vectorized assembly,
+  cost accounting;
+* the real multi-device path (8 virtual host devices) in a subprocess —
+  conftest keeps the main process single-device.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.api import MiningSession
+from repro.graph.partition import partition_edges
+from tests.conftest import random_temporal_graph
+
+W = 96
+
+
+@pytest.fixture(scope="module")
+def graph():
+    rng = np.random.default_rng(13)
+    return random_temporal_graph(rng, n_nodes=18, n_edges=140, t_max=256)
+
+
+@pytest.fixture(scope="module")
+def session(graph):
+    return MiningSession(graph, window=W).register(
+        "fan_in", "cycle3", "scatter_gather"
+    )
+
+
+def test_duplicate_seed_regression(session):
+    """seeds=[5,5,7,11]: the old partitioned assembly kept only the LAST
+    occurrence of a duplicated id (`pos[seeds] = arange` collapses) and
+    returned 0 for the rest.  Both partition-based backends must now
+    match compiled exactly."""
+    seeds = np.array([5, 5, 7, 11], dtype=np.int32)
+    base = session.mine(seeds=seeds)
+    assert np.array_equal(base.counts[0], base.counts[1])  # same seed id
+    for backend in ("partitioned", "sharded"):
+        got = session.mine(seeds=seeds, backend=backend, n_parts=3)
+        np.testing.assert_array_equal(got.counts, base.counts, err_msg=backend)
+
+
+@pytest.mark.parametrize(
+    "case, seeds, n_parts",
+    [
+        ("duplicates", [5, 5, 7, 11, 5], 3),
+        ("empty", [], 3),
+        ("more_parts_than_seeds", [3, 9], 5),
+        ("python_list", [0, 1, 2, 1], 3),
+    ],
+)
+def test_backend_matrix_exactness(session, case, seeds, n_parts):
+    """Backend cross-product: compiled / oracle / partitioned / sharded /
+    streaming agree on every seed-set shape, for a seed-local pattern
+    (fan_in), a single-frontier intersect (cycle3), and a multi-stage
+    pattern (scatter_gather)."""
+    names = ["fan_in", "cycle3", "scatter_gather"]
+    base = session.mine(names, seeds=np.asarray(seeds, dtype=np.int32))
+    assert base.counts.shape == (len(seeds), len(names))
+    for backend in ("oracle", "partitioned", "sharded", "streaming"):
+        got = session.mine(names, seeds=seeds, backend=backend, n_parts=n_parts)
+        np.testing.assert_array_equal(
+            got.counts, base.counts, err_msg=f"{backend}/{case}"
+        )
+
+
+def test_sharded_full_portfolio_bit_exact_one_sync(graph):
+    """Acceptance: sharded == compiled bit-exactly over the whole library
+    portfolio, with exactly ONE blocking host sync per mine (the final
+    cross-device gather) — fused seed-local pass included."""
+    from repro.core.patterns import PATTERN_NAMES
+
+    session = MiningSession(graph, window=W).register(*PATTERN_NAMES)
+    base = session.mine()
+    got = session.mine(backend="sharded")
+    np.testing.assert_array_equal(got.counts, base.counts)
+    assert got.backend == "sharded"
+    assert got.stats["host_syncs"] == 1
+    assert got.stats["kernel_calls"] > 1  # syncs ≪ launches
+    # the fused seed-local family rode along without adding a sync
+    assert "fan_in" in got.fused
+
+    # per-shard observability
+    plan = got.partition_plan
+    assert plan is not None
+    assert len(got.per_shard_seconds) == plan.n_parts
+    assert len(got.shard_stats) == plan.n_parts
+    assert len(got.shard_devices) == plan.n_parts
+    bal = got.shard_balance()
+    assert set(bal) == {
+        "predicted_cost_skew", "kernel_call_skew", "padded_element_skew"
+    }
+    assert all(v >= 1.0 for v in bal.values())
+
+    # repeated sharded mines replay cached per-shard bucket schedules
+    again = session.mine(backend="sharded")
+    np.testing.assert_array_equal(again.counts, base.counts)
+    assert again.stats["host_syncs"] == 1
+    assert again.stats["schedule_hits"] > 0
+
+
+def test_sharded_n_parts_exceeding_devices_round_robins(session, graph):
+    """More shards than devices time-share (round-robin) and stay exact."""
+    import jax
+
+    base = session.mine()
+    got = session.mine(backend="sharded", n_parts=2 * len(jax.devices()) + 1)
+    np.testing.assert_array_equal(got.counts, base.counts)
+    assert got.partition_plan.n_parts == 2 * len(jax.devices()) + 1
+    assert got.stats["host_syncs"] == 1
+
+
+def test_partition_plan_positions(graph):
+    """positions is a bijection slot -> input index, consistent with
+    edge_ids/valid, and per-partition costs add up to the total."""
+    seeds = np.array([5, 5, 7, 11, 3, 5, 0], dtype=np.int32)
+    plan = partition_edges(graph, 3, edge_ids=seeds)
+    pos = plan.positions[plan.valid]
+    assert sorted(pos.tolist()) == list(range(len(seeds)))
+    np.testing.assert_array_equal(plan.edge_ids[plan.valid], seeds[pos])
+    assert not plan.valid.all() or plan.edge_ids.shape[1] * 3 == len(seeds)
+    assert (plan.edge_ids[~plan.valid] == -1).all()
+    assert (plan.positions[~plan.valid] == -1).all()
+    from repro.graph.partition import estimate_edge_cost
+
+    np.testing.assert_allclose(
+        plan.cost.sum(), estimate_edge_cost(graph, seeds).sum()
+    )
+    assert plan.skew >= 1.0
+
+
+def test_partition_plan_empty_and_tiny(graph):
+    plan = partition_edges(graph, 4, edge_ids=np.array([], dtype=np.int32))
+    assert plan.edge_ids.shape == (4, 0) and plan.positions.shape == (4, 0)
+    assert plan.skew == 1.0
+    plan = partition_edges(graph, 5, edge_ids=np.array([7, 3], dtype=np.int32))
+    assert plan.valid.sum() == 2
+    assert sorted(plan.positions[plan.valid].tolist()) == [0, 1]
+
+
+_MULTI_DEVICE_SCRIPT = r"""
+import json
+import numpy as np
+import jax
+
+from repro.api import MiningSession
+from tests.conftest import random_temporal_graph
+
+devs = jax.devices()
+rng = np.random.default_rng(13)
+g = random_temporal_graph(rng, n_nodes=18, n_edges=140, t_max=256)
+session = MiningSession(g, window=96).register("fan_in", "cycle3")
+seeds = np.array([5, 5, 7, 11, 2, 9, 5, 0], dtype=np.int32)
+base = session.mine(seeds=seeds)
+res = session.mine(seeds=seeds, backend="sharded", n_parts=8)
+print(json.dumps({
+    "n_devices": len(devs),
+    "exact": bool(np.array_equal(res.counts, base.counts)),
+    "host_syncs": int(res.stats["host_syncs"]),
+    "devices_used": sorted(set(res.shard_devices)),
+}))
+"""
+
+
+def test_sharded_multi_device_subprocess():
+    """The real multi-device path: 8 virtual host devices via XLA_FLAGS
+    (set before jax init, hence the subprocess), every device actually
+    receiving a shard, bit-exact counts, one host sync."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8"
+    ).strip()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root, env.get("PYTHONPATH", "")]
+    ).rstrip(os.pathsep)
+    out = subprocess.run(
+        [sys.executable, "-c", _MULTI_DEVICE_SCRIPT],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=root,
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    got = json.loads(out.stdout.strip().splitlines()[-1])
+    assert got["n_devices"] == 8
+    assert got["exact"] is True
+    assert got["host_syncs"] == 1
+    assert len(got["devices_used"]) == 8  # every device got a shard
