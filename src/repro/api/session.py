@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -186,8 +187,10 @@ class _FusedSeedPlan:
         for key, spec in members.items():
             self.emits[key] = self._resolve_emit(spec, spec.emit_stage)
         # one jitted kernel per requested unit subset (a subset mine must
-        # not launch — or get charged for — unrequested patterns' units)
+        # not launch — or get charged for — unrequested patterns' units);
+        # locked: sharded dispatch threads share the fused plan
         self._jitted: Dict[Tuple[int, ...], Callable] = {}
+        self._jit_lock = threading.Lock()
 
     # -- unit registry --------------------------------------------------
     def _unit_index(self, st: Stage) -> int:
@@ -270,6 +273,7 @@ class _FusedSeedPlan:
         unit_sel: Optional[Tuple[int, ...]] = None,
         dg=None,
         device=None,
+        coalesce: int = 1,
     ):
         """Dispatch the fused pass WITHOUT the final host sync: returns
         the device-resident ``(padded_n, len(unit_sel))`` unit matrix
@@ -278,16 +282,23 @@ class _FusedSeedPlan:
         ``dg``/``device`` override the resident graph mirror and launch
         placement — the sharded executor passes one replica + device per
         partition; the jitted unit kernels are shared across devices
-        (jit specializes per committed input device under one trace)."""
+        (jit specializes per committed input device under one trace).
+        ``coalesce > 1`` merges equal-width chunk runs into fatter
+        launches (:func:`executor.coalesce_widths`) — the sharded
+        executor's dispatch-overhead knob."""
         import jax
         import jax.numpy as jnp
 
         if unit_sel is None:
             unit_sel = tuple(range(self.n_units))
         n_units = len(unit_sel)
-        if unit_sel not in self._jitted:
-            self._jitted[unit_sel] = self._build(unit_sel)
-        fn = self._jitted[unit_sel]
+        fn = self._jitted.get(unit_sel)  # lock-free warm path
+        if fn is None:
+            with self._jit_lock:
+                fn = self._jitted.get(unit_sel)
+                if fn is None:
+                    fn = self._build(unit_sel)
+                    self._jitted[unit_sel] = fn
         g = self.g
         n = len(seed_eids)
         if n == 0 or n_units == 0:
@@ -295,6 +306,8 @@ class _FusedSeedPlan:
         if dg is None:
             dg = self.dg
         widths = executor.chunk_widths(n, self.batch_elem_cap, n_units)
+        if coalesce > 1:
+            widths = executor.coalesce_widths(widths, coalesce)
         total = sum(widths)
         # one padded staging buffer per field (padding only ever lands in
         # the tail chunk), one host→device transfer for the whole batch
@@ -373,14 +386,20 @@ class MiningResult:
     and bucket-schedule cache hits.
 
     Sharded mines (``backend="sharded"``) additionally report per-shard
-    observability: ``per_shard_seconds`` (host dispatch wall per shard —
-    device compute overlaps across shards, so these are not additive
-    wall time), ``shard_stats`` (one executor counter dict per shard),
+    observability: ``per_shard_seconds`` (per-shard dispatch wall,
+    measured on a concurrent per-device dispatch thread — shards
+    overlap, so these do NOT sum to anything; compare each against
+    ``dispatch_wall_s``, the true wall-clock window of the whole
+    overlapped dispatch phase), ``gather_mode`` (``"collective"`` when
+    the cross-shard reduction ran as a device collective over a shard
+    mesh, ``"host"`` for the time-shared ``n_parts > n_devices``
+    fallback), ``shard_stats`` (one executor counter dict per shard),
     ``shard_devices`` (the device each shard ran on), and the
     ``partition_plan`` whose predicted cost skew
     :meth:`shard_balance` compares against the achieved kernel-call /
     padded-element balance.  A sharded mine's ``stats["host_syncs"]`` is
-    exactly 1: the final cross-device gather.
+    exactly 1 in both gather modes: the single blocking fetch of the
+    (already-reduced, under collective) result.
     """
 
     columns: Tuple[str, ...]
@@ -395,6 +414,16 @@ class MiningResult:
     per_shard_seconds: Optional[List[float]] = None
     shard_stats: Optional[List[Dict[str, int]]] = None
     shard_devices: Optional[Tuple[str, ...]] = None
+    dispatch_wall_s: Optional[float] = None
+    gather_mode: Optional[str] = None
+
+    def dispatch_overlap_ratio(self) -> Optional[float]:
+        """Sum of per-shard dispatch walls over the overlapped dispatch
+        window — 1.0 means fully serialized dispatch, ``n_shards`` means
+        perfect overlap.  None unless ``backend="sharded"``."""
+        if self.per_shard_seconds is None or not self.dispatch_wall_s:
+            return None
+        return float(sum(self.per_shard_seconds) / self.dispatch_wall_s)
 
     def column(self, name: str) -> np.ndarray:
         return self.counts[:, self.columns.index(name)]
@@ -463,19 +492,27 @@ class MiningSession:
         ladder: Tuple[int, ...] = BUCKET_LADDER,
         batch_elem_cap: int = BATCH_ELEM_CAP,
         kernel_backend: str = "xla",
+        shard_coalesce: int = 4,
     ):
         self.graph = graph
         self.window = window
         self.ladder = tuple(ladder)
         self.batch_elem_cap = int(batch_elem_cap)
         self.kernel_backend = kernel_backend
+        # sharded dispatch: merge up to this many equal-width chunks per
+        # launch (executor.coalesce_widths) — fewer, fatter kernel calls
+        # per device; 1 disables
+        self.shard_coalesce = int(shard_coalesce)
         self._specs: Dict[str, PatternSpec] = {}  # name -> spec (reg. order)
         self._canon_of: Dict[str, str] = {}  # name -> canonical key
         self._members: Dict[str, PatternSpec] = {}  # key -> representative
         self._irs: Dict[str, StageGraphIR] = {}  # key -> IR
-        # shared backend state (one per session, every plan reuses it)
+        # shared backend state (one per session, every plan reuses it);
+        # the requirement cache is shared across every compiled plan AND
+        # every sharded dispatch thread, so all plans share one lock
         self._dg = None
         self._vals_cache: Dict[str, np.ndarray] = {}
+        self._vals_lock = threading.Lock()
         self._compiled: Dict[str, CompiledPattern] = {}
         self._fused: Optional[_FusedSeedPlan] = None
         self._oracles: Dict[str, object] = {}
@@ -560,6 +597,7 @@ class MiningSession:
                 batch_elem_cap=self.batch_elem_cap,
                 device_graph=self._dg,
                 vals_cache=self._vals_cache,
+                vals_lock=self._vals_lock,
                 backend=self.kernel_backend,
             )
         self._analyzed = True
@@ -766,9 +804,12 @@ class MiningSession:
         self, names: List[str], seeds: np.ndarray, n_parts: Optional[int]
     ) -> MiningResult:
         """One multi-device sharded pass (see :mod:`repro.core.shard`):
-        cost-balanced partitions dispatched round-robin over the device
-        set, per-device resident accumulators, and exactly ONE blocking
-        host sync — the final cross-device gather."""
+        cost-balanced partitions dispatched concurrently (one dispatch
+        thread per device, schedule builds overlapping device compute),
+        per-device resident accumulators, a device-collective cross-shard
+        reduction when partitions map 1:1 onto devices, and exactly ONE
+        blocking host sync — the fetch of the gathered (already-reduced,
+        under collective) result."""
         from repro.core import shard
         from repro.graph.partition import partition_edges
 
@@ -799,43 +840,61 @@ class MiningSession:
                     cp.schedule_cache_cap, plan.n_parts + 1
                 )
 
+        coalesce = self.shard_coalesce
+
         def launch(p, ids, dgr, device, st):
             outs = {}
             if fused_cols:
                 outs["__fused__"] = self._fused.launch_units(
-                    ids, st, unit_sel, dg=dgr, device=device
+                    ids, st, unit_sel, dg=dgr, device=device, coalesce=coalesce
                 )
             for key in compiled_keys:
                 outs[key] = self._compiled[key].mine_async(
-                    ids, dg=dgr, device=device, stats=st
+                    ids, dg=dgr, device=device, stats=st, coalesce=coalesce
                 )
             return outs
 
         stats = executor.new_stats()
         t0 = time.perf_counter()
-        host_outs, shard_stats, shard_walls, shard_devs = shard.run_sharded(
-            plan, launch, ctx, stats
-        )
+        run = shard.run_sharded(plan, launch, ctx, stats)
         wall = time.perf_counter() - t0
 
         counts = np.zeros((len(seeds), len(names)), dtype=np.int64)
-        for p in range(plan.n_parts):
-            rows = plan.positions[p][plan.valid[p]]
-            if len(rows) == 0:
-                continue
-            out_p = host_outs[p]
+        if run.gather_mode == "collective":
+            # the device collective already reduced every shard's placed
+            # rows — each output is full-length in input order
+            host = run.host_outs
             if fused_cols:
-                unit_vals = np.asarray(out_p["__fused__"])[: len(rows)].astype(
-                    np.int64
-                )
+                unit_vals = np.asarray(host["__fused__"], dtype=np.int64)
                 for j, n in fused_cols:
-                    counts[rows, j] = self._fused.assemble(
+                    counts[:, j] = self._fused.assemble(
                         self._canon_of[n], unit_vals, unit_sel
                     )
             for j, n in enumerate(names):
                 key = self._canon_of[n]
                 if key in self._compiled:
-                    counts[rows, j] = np.asarray(out_p[key], dtype=np.int64)
+                    counts[:, j] = np.asarray(host[key], dtype=np.int64)
+        else:
+            # host gather: scatter each shard's ragged outputs through the
+            # plan's slot -> input-position map (duplicate seed ids land on
+            # their own rows)
+            for p in range(plan.n_parts):
+                rows = plan.positions[p][plan.valid[p]]
+                if len(rows) == 0:
+                    continue
+                out_p = run.host_outs[p]
+                if fused_cols:
+                    unit_vals = np.asarray(out_p["__fused__"])[
+                        : len(rows)
+                    ].astype(np.int64)
+                    for j, n in fused_cols:
+                        counts[rows, j] = self._fused.assemble(
+                            self._canon_of[n], unit_vals, unit_sel
+                        )
+                for j, n in enumerate(names):
+                    key = self._canon_of[n]
+                    if key in self._compiled:
+                        counts[rows, j] = np.asarray(out_p[key], dtype=np.int64)
         for k in stats:
             self.stats[k] += stats[k]
         return MiningResult(
@@ -849,9 +908,11 @@ class MiningSession:
             stats=stats,
             fused=tuple(n for _, n in fused_cols),
             partition_plan=plan,
-            per_shard_seconds=shard_walls,
-            shard_stats=shard_stats,
-            shard_devices=tuple(shard_devs),
+            per_shard_seconds=run.shard_walls,
+            shard_stats=run.shard_stats,
+            shard_devices=tuple(run.shard_devices),
+            dispatch_wall_s=run.dispatch_wall_s,
+            gather_mode=run.gather_mode,
         )
 
     # -- streaming ------------------------------------------------------

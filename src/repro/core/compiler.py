@@ -76,6 +76,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import math
+import threading
 from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -468,6 +469,7 @@ class CompiledPattern:
         ir: Optional[StageGraphIR] = None,
         kernels_cache: Optional[Dict] = None,
         trace_keys: Optional[set] = None,
+        vals_lock: Optional[threading.Lock] = None,
     ):
         if backend not in ("xla", "pallas"):
             raise ValueError(f"unknown kernel backend {backend!r}; xla|pallas")
@@ -491,6 +493,16 @@ class CompiledPattern:
         self._vals_cache: Dict[str, np.ndarray] = (
             vals_cache if vals_cache is not None else {}
         )
+        # concurrency: sharded mines build schedules and dispatch launches
+        # from one thread per device, so every shared mutable cache on this
+        # plan is guarded.  `vals_lock` is shared across a session's plans
+        # when the requirement cache is (one lock per shared dict);
+        # `_sched_lock` guards the schedule LRU (builds run OUTSIDE it so
+        # shards' host-side grouping overlaps); `_jit_lock` guards the
+        # jitted-kernel cache and the trace-key gauge.
+        self._vals_lock = vals_lock if vals_lock is not None else threading.Lock()
+        self._sched_lock = threading.Lock()
+        self._jit_lock = threading.Lock()
         # `kernels_cache` may outlive this instance (the streaming service
         # shares one dict per pattern across ticks): entries are keyed by
         # everything the kernel closure bakes in beyond the DeviceGraph
@@ -572,10 +584,15 @@ class CompiledPattern:
 
     def _deg_vals(self, direction: str) -> Tuple[str, np.ndarray]:
         key = f"deg_{direction}"
-        if key not in self._vals_cache:
-            deg = self.g.out_deg if direction == "out" else self.g.in_deg
-            self._vals_cache[key] = deg.astype(np.int64)
-        return key, self._vals_cache[key]
+        val = self._vals_cache.get(key)  # lock-free warm path (GIL-atomic)
+        if val is None:
+            with self._vals_lock:
+                val = self._vals_cache.get(key)
+                if val is None:
+                    deg = self.g.out_deg if direction == "out" else self.g.in_deg
+                    val = deg.astype(np.int64)
+                    self._vals_cache[key] = val
+        return key, val
 
     def _nbr_max(self, direction: str, key: str, vals: np.ndarray):
         """Per node: max over its direction-neighbors w of vals[w].
@@ -584,25 +601,30 @@ class CompiledPattern:
         into a per-seed requirement down a j-level frontier chain; results
         are cached by the symbolic key so chains share work."""
         ck = f"max_{direction}({key})"
-        if ck in self._vals_cache:
-            return ck, self._vals_cache[ck]
-        g = self.g
-        indptr = g.out_indptr if direction == "out" else g.in_indptr
-        nbr = g.out_nbr if direction == "out" else g.in_nbr
-        mapped = vals[nbr].astype(np.int64)
-        n = len(indptr) - 1
-        if mapped.size == 0:
-            res = np.zeros(n, dtype=np.int64)
-        else:
-            # One trailing identity element makes indptr values equal to
-            # mapped.size valid reduceat starts (trailing empty rows)
-            # without perturbing any real segment boundary; requirements
-            # are non-negative, so a 0 sentinel never wins a max.
-            padded = np.concatenate([mapped, np.zeros(1, dtype=np.int64)])
-            res = np.maximum.reduceat(padded, indptr[:-1].astype(np.int64))
-            res = np.where(np.diff(indptr) > 0, res, 0)
-        self._vals_cache[ck] = res
-        return ck, res
+        cached = self._vals_cache.get(ck)  # lock-free warm path
+        if cached is not None:
+            return ck, cached
+        with self._vals_lock:
+            cached = self._vals_cache.get(ck)
+            if cached is not None:
+                return ck, cached
+            g = self.g
+            indptr = g.out_indptr if direction == "out" else g.in_indptr
+            nbr = g.out_nbr if direction == "out" else g.in_nbr
+            mapped = vals[nbr].astype(np.int64)
+            n = len(indptr) - 1
+            if mapped.size == 0:
+                res = np.zeros(n, dtype=np.int64)
+            else:
+                # One trailing identity element makes indptr values equal to
+                # mapped.size valid reduceat starts (trailing empty rows)
+                # without perturbing any real segment boundary; requirements
+                # are non-negative, so a 0 sentinel never wins a max.
+                padded = np.concatenate([mapped, np.zeros(1, dtype=np.int64)])
+                res = np.maximum.reduceat(padded, indptr[:-1].astype(np.int64))
+                res = np.where(np.diff(indptr) > 0, res, 0)
+            self._vals_cache[ck] = res
+            return ck, res
 
     def _req_seedwise(
         self, ref: NodeRef, key: str, vals: np.ndarray, seed_eids: np.ndarray
@@ -1134,11 +1156,14 @@ class CompiledPattern:
         branch=False,
     ) -> Callable:
         key = (self.n_iters, strat, dims, sweeps, branch)
-        if key not in self._kernels:
-            self._kernels[key] = jax.jit(
-                self._build_kernel(strat, dims, sweeps, branch)
-            )
-        return self._kernels[key]
+        fn = self._kernels.get(key)  # lock-free warm path
+        if fn is None:
+            with self._jit_lock:
+                fn = self._kernels.get(key)
+                if fn is None:
+                    fn = jax.jit(self._build_kernel(strat, dims, sweeps, branch))
+                    self._kernels[key] = fn
+        return fn
 
     # ------------------------------------------------------------------
     # execution
@@ -1402,15 +1427,26 @@ class CompiledPattern:
         grouping runs once per (plan, partition), never once per device."""
         stats = self.stats if stats is None else stats
         key = (len(seed_eids), hashlib.sha1(seed_eids.tobytes()).hexdigest())
-        sched = self._schedules.get(key)
-        if sched is None:
-            sched = self._build_schedule(seed_eids)
+        with self._sched_lock:
+            sched = self._schedules.get(key)
+            if sched is not None:
+                self._schedules.move_to_end(key)
+                stats["schedule_hits"] += 1
+                return sched
+        # build OUTSIDE the lock: sharded dispatch threads build different
+        # partitions' schedules concurrently (that concurrency is the whole
+        # point of overlapped dispatch); keys differ across partitions so a
+        # duplicated build is rare and benign — first insert wins.
+        sched = self._build_schedule(seed_eids)
+        with self._sched_lock:
+            existing = self._schedules.get(key)
+            if existing is not None:
+                self._schedules.move_to_end(key)
+                stats["schedule_hits"] += 1
+                return existing
             self._schedules[key] = sched
             while len(self._schedules) > self.schedule_cache_cap:
                 self._schedules.popitem(last=False)  # evict LRU
-        else:
-            self._schedules.move_to_end(key)
-            stats["schedule_hits"] += 1
         return sched
 
     def mine_async(
@@ -1420,6 +1456,7 @@ class CompiledPattern:
         dg: Optional[DeviceGraph] = None,
         device=None,
         stats: Optional[Dict[str, int]] = None,
+        coalesce: int = 1,
     ):
         """Dispatch a whole mine WITHOUT the final host sync: returns the
         device-resident per-seed count vector (int32).
@@ -1429,7 +1466,10 @@ class CompiledPattern:
         replica + device per partition while the schedule, the jitted
         kernel callables, and the requirement cache stay shared.
         ``stats`` redirects counter deltas (per-shard accounting);
-        default is the plan's lifetime ``self.stats``.
+        default is the plan's lifetime ``self.stats``.  ``coalesce > 1``
+        merges runs of equal-width chunks into up-to-``coalesce``x fatter
+        launches (:func:`executor.coalesce_widths`) — the sharded executor
+        uses this to cut per-device dispatch overhead.
         """
         stats = self.stats if stats is None else stats
         seed_eids = np.asarray(seed_eids, dtype=np.int32)
@@ -1438,20 +1478,32 @@ class CompiledPattern:
             return jax.device_put(jnp.zeros(0, jnp.int32), device)
         sched = self.schedule_for(seed_eids, stats)
         stats["branch_items"] += sched.branch_items
-        before_traces = len(self._trace_keys)
+        groups = (
+            sched.groups
+            if coalesce <= 1
+            else executor.coalesce_groups(sched.groups, coalesce)
+        )
+        # local trace-key set: the gauge delta must be computed per call,
+        # and concurrent sharded dispatch would corrupt a before/after
+        # length snapshot of the shared set (both threads would count the
+        # other's new traces).  Merge under the jit lock instead.
+        local_keys: set = set()
         out_dev = executor.execute(
-            sched.groups,
+            groups,
             n,
             self._kernel,
             self.dg if dg is None else dg,
             stats,
-            self._trace_keys,
+            local_keys,
             trace_tag=(self.n_iters,),
             device=device,
         )
+        with self._jit_lock:
+            new_keys = local_keys - self._trace_keys
+            self._trace_keys |= new_keys
         # accumulate the gauge as a delta so redirected per-shard stats
         # dicts (several plans share one dict per shard) stay additive
-        stats["jit_cache_entries"] += len(self._trace_keys) - before_traces
+        stats["jit_cache_entries"] += len(new_keys)
         return out_dev
 
     def mine(self, seed_eids: Optional[np.ndarray] = None) -> np.ndarray:

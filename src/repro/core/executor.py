@@ -55,6 +55,7 @@ int32 hi/lo pair if one ever does.)
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -67,6 +68,8 @@ __all__ = [
     "new_stats",
     "pow2ceil",
     "chunk_widths",
+    "coalesce_widths",
+    "coalesce_groups",
     "BucketGroup",
     "Schedule",
     "build_staging",
@@ -114,6 +117,53 @@ def chunk_widths(n_rows: int, batch_elem_cap: int, per_row: int) -> List[int]:
     if tail:
         widths.append(min(bchunk, max(MIN_CHUNK, pow2ceil(tail))))
     return widths
+
+
+def coalesce_widths(widths: Sequence[int], factor: int) -> List[int]:
+    """Merge runs of equal-width chunks into fewer, fatter launches.
+
+    Chunks of a bucket group are consecutive slices of ONE staging buffer,
+    so ``k`` adjacent equal-width chunks can be launched as a single
+    ``k*w``-wide kernel call just by slicing fatter — no restaging.  Merges
+    happen in power-of-two counts up to ``factor`` (pow2-floored), so every
+    produced width stays on the power-of-two trace ladder and the set of
+    distinct batch widths grows by at most ``log2(factor)`` entries.
+
+    Dispatch-bound callers use this (the sharded executor batches each
+    device's launches before dispatching); the total padded element count
+    is unchanged — only the launch count drops.
+    """
+    if factor <= 1 or len(widths) <= 1:
+        return list(widths)
+    fmax = 1 << (int(factor).bit_length() - 1)  # pow2 floor of factor
+    out: List[int] = []
+    i = 0
+    n = len(widths)
+    while i < n:
+        w = widths[i]
+        run = 1
+        while i + run < n and widths[i + run] == w:
+            run += 1
+        i += run
+        while run > 0:
+            take = min(fmax, 1 << (run.bit_length() - 1))
+            out.append(w * take)
+            run -= take
+    return out
+
+
+def coalesce_groups(
+    groups: Sequence["BucketGroup"], factor: int
+) -> List["BucketGroup"]:
+    """A schedule's groups with per-group chunk widths coalesced (the
+    staging buffers are shared with the input groups — widths are just a
+    different slicing of the same padded host buffer)."""
+    if factor <= 1:
+        return list(groups)
+    return [
+        dataclasses.replace(g, widths=coalesce_widths(g.widths, factor))
+        for g in groups
+    ]
 
 
 @dataclasses.dataclass
@@ -191,16 +241,22 @@ def _scatter_add_impl(out, seg, val):
 
 
 _scatter_add_jit = None
+_scatter_add_lock = threading.Lock()
 
 
 def _scatter_add(out, seg, val):
     # donate the accumulator where the backend supports in-place donation
     # (CPU does not and would warn); lazy so importing this module never
-    # forces backend initialization
+    # forces backend initialization.  Locked: sharded dispatch threads may
+    # race the first call, and the donation probe must run exactly once.
     global _scatter_add_jit
     if _scatter_add_jit is None:
-        donate = (0,) if jax.default_backend() != "cpu" else ()
-        _scatter_add_jit = jax.jit(_scatter_add_impl, donate_argnums=donate)
+        with _scatter_add_lock:
+            if _scatter_add_jit is None:
+                donate = (0,) if jax.default_backend() != "cpu" else ()
+                _scatter_add_jit = jax.jit(
+                    _scatter_add_impl, donate_argnums=donate
+                )
     return _scatter_add_jit(out, seg, val)
 
 

@@ -15,9 +15,15 @@ from __future__ import annotations
 
 import os
 
+import numpy as np
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh", "ensure_host_devices"]
+__all__ = [
+    "make_production_mesh",
+    "make_local_mesh",
+    "make_shard_mesh",
+    "ensure_host_devices",
+]
 
 
 def ensure_host_devices(n: int) -> int:
@@ -45,3 +51,19 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_shard_mesh(devices):
+    """1-D ``("shard",)`` mesh over an explicit mining-device list.
+
+    Used by the sharded executor's device-collective gather
+    (:func:`repro.core.shard.collective_gather`): one shard's placed
+    output rows live on each mesh device and the cross-shard reduction
+    lowers to a collective over this axis.  Takes the devices explicitly
+    (not ``jax.devices()``) so a mine over a device subset — or a forced
+    single device — reduces over exactly the devices it dispatched to.
+    """
+    dev_arr = np.empty(len(devices), dtype=object)
+    for i, d in enumerate(devices):
+        dev_arr[i] = d
+    return jax.sharding.Mesh(dev_arr, ("shard",))

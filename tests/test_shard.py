@@ -10,6 +10,14 @@
 * sharded invariants: bit-exact vs compiled on the full library
   portfolio, exactly ONE host sync per mine, per-shard observability,
   schedule reuse across repeated mines;
+* concurrent dispatch: explicit thread pools hammering the shared
+  schedule LRU / requirement cache / jit kernel caches stay bit-exact
+  (the main process is single-device, so the sharded backend's own
+  dispatch is inline here — the hammer drives the locked paths the
+  multi-device dispatch pool exercises);
+* gather-mode selection: device-collective when partitions map 1:1
+  onto devices, host fallback for time-shared ``n_parts > n_devices``,
+  ``host_syncs == 1`` either way;
 * PartitionPlan: positions/valid consistency, vectorized assembly,
   cost accounting;
 * the real multi-device path (8 virtual host devices) in a subprocess —
@@ -19,6 +27,7 @@ import json
 import os
 import subprocess
 import sys
+from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 import pytest
@@ -115,6 +124,109 @@ def test_sharded_full_portfolio_bit_exact_one_sync(graph):
     assert again.stats["schedule_hits"] > 0
 
 
+def test_gather_mode_and_dispatch_window(session):
+    """Gather-mode selection + the overlapped-dispatch observability:
+    a 1:1 partition->device mine reduces with the device collective
+    (true even on one device: one partition, one-device mesh); more
+    partitions than devices fall back to the host gather.  Both charge
+    exactly ONE host sync, and both report the overlapped dispatch
+    window (per-shard walls are concurrent, so the ratio of their sum
+    to the window is the overlap measure — >= ~1 up to timer jitter)."""
+    seeds = np.array([5, 5, 7, 11, 2], dtype=np.int32)
+    base = session.mine(seeds=seeds)
+
+    one = session.mine(seeds=seeds, backend="sharded")  # n_parts = n_devices
+    np.testing.assert_array_equal(one.counts, base.counts)
+    assert one.gather_mode == "collective"
+    assert one.stats["host_syncs"] == 1
+    assert one.dispatch_wall_s is not None and one.dispatch_wall_s > 0
+    assert one.dispatch_overlap_ratio() > 0
+
+    multi = session.mine(seeds=seeds, backend="sharded", n_parts=3)
+    np.testing.assert_array_equal(multi.counts, base.counts)
+    assert multi.gather_mode == "host"  # 3 partitions time-share 1 device
+    assert multi.stats["host_syncs"] == 1
+    assert multi.dispatch_wall_s is not None
+
+    # empty mines skip the collective machinery entirely
+    empty = session.mine(seeds=np.array([], dtype=np.int32), backend="sharded")
+    assert empty.gather_mode == "host"
+    assert empty.counts.shape[0] == 0
+    assert empty.stats["host_syncs"] == 1
+
+
+def test_concurrent_dispatch_hammers_shared_caches(graph):
+    """Thread-safety of everything the per-device dispatch pool shares:
+    8 threads mining interleaved seed sets (duplicates and an empty set
+    included) through ONE compiled plan with a 2-entry schedule LRU
+    (constant eviction churn), chunk coalescing on, while the fused
+    seed-local plan is hammered through the same session.  Every result
+    must be bit-exact vs the sequential compiled truth."""
+    from repro.core import executor
+
+    session = MiningSession(graph, window=W).register(
+        "fan_in", "cycle3", "scatter_gather"
+    )
+    session.compile()
+    cp = session._compiled[session._canon_of["scatter_gather"]]
+    cp.schedule_cache_cap = 2  # force LRU churn under concurrency
+    fused = session._fused
+    unit_sel = tuple(range(fused.n_units))
+
+    rng = np.random.default_rng(5)
+    seed_sets = [
+        np.array([5, 5, 7, 11, 5], dtype=np.int32),  # duplicates
+        np.array([], dtype=np.int32),  # empty
+    ] + [
+        rng.integers(0, graph.n_edges, size=n).astype(np.int32)
+        for n in (1, 3, 7, 12, 20, 9)
+    ]
+    expect_cp = [cp.mine(s) for s in seed_sets]
+    expect_units = [
+        fused.mine_units(s, executor.new_stats(), unit_sel) for s in seed_sets
+    ]
+
+    def mine_one(i):
+        s = seed_sets[i % len(seed_sets)]
+        st = executor.new_stats()
+        col = np.asarray(cp.mine_async(s, stats=st, coalesce=2)).astype(
+            np.int64
+        )
+        units = np.asarray(
+            fused.launch_units(s, st, unit_sel, coalesce=2)
+        )[: len(s)].astype(np.int64)
+        return i, col, units
+
+    with ThreadPoolExecutor(max_workers=8) as pool:
+        for i, col, units in pool.map(mine_one, range(64)):
+            j = i % len(seed_sets)
+            np.testing.assert_array_equal(col, expect_cp[j])
+            np.testing.assert_array_equal(units, expect_units[j])
+
+    # the jit-trace gauge stayed race-free: entries are counted once
+    # across all threads, so the shared set size bounds the lifetime sum
+    assert cp.stats["jit_cache_entries"] <= len(cp._trace_keys)
+
+
+def test_concurrent_sharded_mines_from_threads(graph):
+    """Whole sharded mines issued from concurrent caller threads (not
+    just the executor's own dispatch pool) stay exact — sessions share
+    one schedule LRU, requirement cache, and shard context."""
+    session = MiningSession(graph, window=W).register("fan_in", "cycle3")
+    seeds = np.array([5, 5, 7, 11, 2, 9, 0], dtype=np.int32)
+    base = session.mine(seeds=seeds)
+
+    def mine_one(i):
+        return session.mine(
+            seeds=seeds, backend="sharded", n_parts=1 + (i % 3)
+        )
+
+    with ThreadPoolExecutor(max_workers=4) as pool:
+        for res in pool.map(mine_one, range(12)):
+            np.testing.assert_array_equal(res.counts, base.counts)
+            assert res.stats["host_syncs"] == 1
+
+
 def test_sharded_n_parts_exceeding_devices_round_robins(session, graph):
     """More shards than devices time-share (round-robin) and stay exact."""
     import jax
@@ -168,12 +280,27 @@ g = random_temporal_graph(rng, n_nodes=18, n_edges=140, t_max=256)
 session = MiningSession(g, window=96).register("fan_in", "cycle3")
 seeds = np.array([5, 5, 7, 11, 2, 9, 5, 0], dtype=np.int32)
 base = session.mine(seeds=seeds)
+# 8 partitions on 8 devices: collective gather, duplicate seed ids
 res = session.mine(seeds=seeds, backend="sharded", n_parts=8)
+# 5 seeds across 8 partitions: EMPTY partitions inside the collective
+base5 = session.mine(seeds=seeds[:5])
+res5 = session.mine(seeds=seeds[:5], backend="sharded", n_parts=8)
+# more partitions than devices: time-shared host-gather fallback
+res_ts = session.mine(seeds=seeds, backend="sharded", n_parts=11)
 print(json.dumps({
     "n_devices": len(devs),
     "exact": bool(np.array_equal(res.counts, base.counts)),
     "host_syncs": int(res.stats["host_syncs"]),
     "devices_used": sorted(set(res.shard_devices)),
+    "gather_mode": res.gather_mode,
+    "dispatch_wall_ok": bool(res.dispatch_wall_s > 0),
+    "overlap_ratio_ok": bool(res.dispatch_overlap_ratio() > 0),
+    "empty_shard_exact": bool(np.array_equal(res5.counts, base5.counts)),
+    "empty_shard_mode": res5.gather_mode,
+    "empty_shard_syncs": int(res5.stats["host_syncs"]),
+    "timeshare_exact": bool(np.array_equal(res_ts.counts, base.counts)),
+    "timeshare_mode": res_ts.gather_mode,
+    "timeshare_syncs": int(res_ts.stats["host_syncs"]),
 }))
 """
 
@@ -205,3 +332,16 @@ def test_sharded_multi_device_subprocess():
     assert got["exact"] is True
     assert got["host_syncs"] == 1
     assert len(got["devices_used"]) == 8  # every device got a shard
+    # 1:1 partition->device mines reduce with the device collective and
+    # report the overlapped dispatch window
+    assert got["gather_mode"] == "collective"
+    assert got["dispatch_wall_ok"] and got["overlap_ratio_ok"]
+    # empty partitions flow through the collective (5 seeds, 8 shards)
+    assert got["empty_shard_exact"] is True
+    assert got["empty_shard_mode"] == "collective"
+    assert got["empty_shard_syncs"] == 1
+    # n_parts > n_devices time-shares and falls back to the host gather,
+    # still with exactly one sync
+    assert got["timeshare_exact"] is True
+    assert got["timeshare_mode"] == "host"
+    assert got["timeshare_syncs"] == 1
