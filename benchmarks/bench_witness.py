@@ -1,0 +1,240 @@
+"""Witness extraction benchmark: evidence costs vs count-only mining.
+
+The acceptance gauges of the `repro.witness` subsystem:
+
+* **witness-mode overhead** — `mine(witnesses=k)` vs a count-only
+  `mine()` per pattern (same seeds, both device-resident, both ONE host
+  sync — asserted);
+* **top-k scaling** — wall time as k grows (the packed eid payload and
+  in-kernel sweep-merge sort grow with pow2ceil(k));
+* **oracle exactness** — compiled witness tuples == the oracle's first
+  k on a seed subsample, per pattern (asserted, recorded in the JSON);
+* **triage endpoint** — concurrent-submit throughput and p99 submit
+  latency of `repro.launch.serve.TriageServer` over a synthetic
+  IBM-AML-style feed, evidence attached to every alert, plus an
+  end-to-end assert that alert evidence hops match oracle witnesses on
+  the live graph.
+
+Emits CSV rows plus ``BENCH_witness.json`` (repo root when driven by
+``benchmarks.run``).
+
+  PYTHONPATH=src python -m benchmarks.bench_witness
+  PYTHONPATH=src python -m benchmarks.bench_witness --scale 0.1 \
+      --oracle-seeds 40 --max-batches 5
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.compiler import CompiledPattern
+from repro.core.oracle import GFPReference
+from repro.core.patterns import build_pattern
+from repro.data.synth_aml import load_dataset
+from repro.launch.serve import DEFAULT_PORTFOLIO, TriageServer, load_test, make_feed
+from repro.stream.service import DetectionService
+
+OUT_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "results", "BENCH_witness.json"
+)
+ROOT_OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_witness.json")
+
+PATTERNS = ("fan_in", "cycle2", "cycle3", "cycle4", "scatter_gather", "peel_chain")
+
+
+def _overhead_section(g, window, n_seeds, k, oracle_seeds):
+    rng = np.random.default_rng(0)
+    seeds = rng.choice(
+        g.n_edges, size=min(n_seeds, g.n_edges), replace=False
+    ).astype(np.int32)
+    osub = seeds[: min(oracle_seeds, len(seeds))]
+    out = {}
+    for name in PATTERNS:
+        spec = build_pattern(name, window)
+        cp = CompiledPattern(spec, g)
+        _, count_s = timeit(cp.mine, seeds, repeat=3)
+        _, wit_s = timeit(lambda: cp.mine(seeds, witnesses=k), repeat=3)
+        # invariant: witness mode is still ONE host sync per mine
+        before = cp.stats["host_syncs"]
+        w = cp.mine(seeds, witnesses=k)
+        assert cp.stats["host_syncs"] - before == 1, name
+        np.testing.assert_array_equal(w.counts, cp.mine(seeds))
+        # oracle exactness on a subsample (the Python enumerator is the
+        # bottleneck, not the device path)
+        oc, ow = GFPReference(spec, g).mine_witnesses(osub, k=k)
+        exact = all(
+            w.tuples(int(np.flatnonzero(seeds == s)[0])) == ow[i][:k]
+            for i, s in enumerate(osub)
+        )
+        assert exact, f"witness mismatch vs oracle: {name}"
+        out[name] = {
+            "count_only_ms": count_s * 1e3,
+            "witness_ms": wit_s * 1e3,
+            "overhead_x": wit_s / count_s if count_s > 0 else float("nan"),
+            "n_hops": w.n_hops,
+            "oracle_exact": exact,
+            "oracle_seeds_checked": len(osub),
+        }
+        emit(
+            f"witness/overhead/{name}",
+            wit_s / len(seeds) * 1e6,
+            f"count_only={count_s*1e3:.1f}ms;witness_k{k}={wit_s*1e3:.1f}ms;"
+            f"overhead={out[name]['overhead_x']:.2f}x;oracle_exact={exact}",
+        )
+    return seeds, out
+
+
+def _topk_section(g, window, seeds, ks):
+    spec = build_pattern("cycle3", window)
+    cp = CompiledPattern(spec, g)
+    out = {}
+    for k in ks:
+        _, s = timeit(lambda: cp.mine(seeds, witnesses=k), repeat=3)
+        out[str(k)] = s * 1e3
+        emit(f"witness/topk/k{k}", s / len(seeds) * 1e6, f"wall={s*1e3:.1f}ms")
+    return out
+
+
+def _triage_section(ds, window, batch, submitter_counts, max_batches, k):
+    feed = make_feed(ds.graph, batch)
+    if max_batches:
+        feed = feed[:max_batches]
+    out = {}
+    for n_sub in submitter_counts:
+        svc = DetectionService(
+            list(DEFAULT_PORTFOLIO),
+            window=window,
+            thresholds=dict(DEFAULT_PORTFOLIO),
+            witnesses=k,
+        )
+        server = TriageServer(svc)
+        res = load_test(server, feed, n_sub)
+        server.close()
+        out[str(n_sub)] = res
+        emit(
+            f"witness/triage/submitters{n_sub}",
+            res["wall_s"] / max(1, res["txns"]) * 1e6,
+            f"txns_per_s={res['txns_per_s']:.0f};p50={res.get('p50_ms', 0):.0f}ms;"
+            f"p99={res.get('p99_ms', 0):.0f}ms;alerts={res['alerts']};"
+            f"evidence_hops={res['evidence_hop_tuples']}",
+        )
+    return out
+
+
+def _evidence_oracle_assert(window, k):
+    """End-to-end: alert evidence hop tuples == oracle witnesses on the
+    full live graph (no eviction, so global eid == snapshot-local)."""
+    svc = DetectionService(
+        ["fan_in", "cycle3"],
+        window=window,
+        thresholds={"fan_in": 3, "cycle3": 1},
+        witnesses=k,
+    )
+    rng = np.random.default_rng(9)
+    t, last = 0, None
+    for _ in range(5):
+        m = 30
+        s = rng.integers(0, 20, m).astype(np.int32)
+        d = (s + rng.integers(1, 20, m).astype(np.int32)) % 20
+        tt = np.sort(t + rng.integers(0, 40, m).astype(np.int64))
+        t = int(tt[-1]) + 1
+        last = svc.submit(s, d, tt, rng.uniform(1, 50, m).astype(np.float32))
+    snap = svc.store.snapshot()
+    checked = 0
+    oracle = {
+        n: GFPReference(svc._specs[n], snap.graph).mine_witnesses(None, k=k)[1]
+        for n in svc.pattern_names
+    }
+    for i in range(len(last)):
+        for name, wits in (last.evidence[i] or {}).items():
+            got = [tuple(h["eid"] for h in wit) for wit in wits]
+            assert got == oracle[name][int(last.eids[i])][:k], name
+            for wit in wits:
+                for hop in wit:
+                    if hop["eid"] < 0:
+                        continue
+                    s_, d_, t_, a_ = svc.store.edge_fields(
+                        np.array([hop["eid"]], dtype=np.int64)
+                    )
+                    assert (int(s_[0]), int(d_[0]), int(t_[0])) == (
+                        hop["src"], hop["dst"], hop["t"],
+                    ), name
+            checked += 1
+    assert checked > 0, "feed produced no evidence-bearing alerts"
+    return checked
+
+
+def run(
+    scale: float = 0.5,
+    window: int = 4096,
+    n_seeds: int = 1500,
+    k: int = 4,
+    ks=(1, 4, 16),
+    batch: int = 64,
+    submitter_counts=(1, 2, 4),
+    max_batches: int = 20,
+    oracle_seeds: int = 60,
+    out_path: str = OUT_PATH,
+):
+    ds = load_dataset("HI-Small", scale=scale)
+    g = ds.graph
+    t0 = time.perf_counter()
+    seeds, overhead = _overhead_section(g, window, n_seeds, k, oracle_seeds)
+    topk = _topk_section(g, window, seeds, ks)
+    triage = _triage_section(ds, window, batch, submitter_counts, max_batches, 2)
+    evidence_checked = _evidence_oracle_assert(window, 3)
+    report = {
+        "dataset": ds.name,
+        "scale": scale,
+        "window": window,
+        "n_seeds": int(len(seeds)),
+        "k": k,
+        "patterns": list(PATTERNS),
+        "overhead": overhead,
+        "topk_ms": topk,
+        "triage": triage,
+        "evidence_matches_oracle": True,
+        "evidence_alert_pattern_pairs_checked": int(evidence_checked),
+        "wall_s": time.perf_counter() - t0,
+    }
+    out_path = os.path.abspath(out_path)
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {out_path}")
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.5)
+    ap.add_argument("--window", type=int, default=4096)
+    ap.add_argument("--seeds", type=int, default=1500)
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--max-batches", type=int, default=20)
+    ap.add_argument("--oracle-seeds", type=int, default=60)
+    ap.add_argument("--submitters", default="1,2,4")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(
+        scale=args.scale,
+        window=args.window,
+        n_seeds=args.seeds,
+        k=args.k,
+        batch=args.batch,
+        submitter_counts=tuple(int(x) for x in args.submitters.split(",")),
+        max_batches=args.max_batches,
+        oracle_seeds=args.oracle_seeds,
+        out_path=args.out,
+    )
+
+
+if __name__ == "__main__":
+    main()

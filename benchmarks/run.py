@@ -38,10 +38,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "--only",
-        default="kernels,mining,portfolio,streaming,shard,scaling,f1,"
-        "fraudgt,roofline",
-        help="comma list: kernels,mining,portfolio,streaming,shard,scaling,"
+        default="kernels,mining,portfolio,streaming,shard,witness,scaling,"
         "f1,fraudgt,roofline",
+        help="comma list: kernels,mining,portfolio,streaming,shard,witness,"
+        "scaling,f1,fraudgt,roofline",
     )
     args = ap.parse_args()
     only = set(args.only.split(","))
@@ -82,6 +82,15 @@ def main() -> None:
         # emit its BENCH_shard.json (scaling curve + balance + exactness)
         # at the repo root
         jobs.append(("shard", _run_shard_subprocess))
+    if "witness" in only:
+        from benchmarks import bench_witness
+
+        # the witness bench is the evidence trajectory: always emit its
+        # BENCH_witness.json (overhead vs count-only, top-k scaling,
+        # triage throughput, oracle-exactness asserts) at the repo root
+        jobs.append(
+            ("witness", lambda: bench_witness.run(out_path=bench_witness.ROOT_OUT))
+        )
     if "scaling" in only:
         from benchmarks import bench_scaling
 

@@ -9,7 +9,7 @@ import numpy as np
 import jax
 
 from repro.configs.registry import smoke_config
-from repro.launch.serve import generate
+from repro.launch.decode_lm import generate
 from repro.models.model import init_params
 
 for arch in ("qwen2-1.5b", "xlstm-125m"):

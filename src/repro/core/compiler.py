@@ -1293,10 +1293,20 @@ class CompiledPattern:
             ok &= fr != vals[item_seed]
         return item_seed[ok], fr[ok], frt[ok].astype(np.int32)
 
-    def _build_schedule(self, seed_eids: np.ndarray) -> executor.Schedule:
+    def _build_schedule(
+        self, seed_eids: np.ndarray, bulk_only: bool = False
+    ) -> executor.Schedule:
         """Host-side half of a mine: bucketing, strategy selection, hub
         decomposition, chunking, and staging — pure in (plan, graph
-        degree requirements, seed ids), so the result is cached."""
+        degree requirements, seed ids), so the result is cached.
+
+        ``bulk_only`` (witness extraction) disables the per-branch hub
+        decomposition — partial top-k payloads from decomposed branches
+        cannot be scatter-merged the way partial counts can, so every
+        seed must stay one row of one launch — and remaps the ``bs2``
+        strategy to ``bs1``: bs2 enumerates the fixed side outermost,
+        which is a different candidate order than bs1/pw (witness
+        selection is order-defined; counting is order-free)."""
         g = self.g
         ir = self.ir
         n = len(seed_eids)
@@ -1310,10 +1320,16 @@ class CompiledPattern:
         strat, cost = self._pass_strategy(
             w_pads, self._pad(d_a_req), self._pad(d_b_req)
         )
+        if bulk_only:
+            strat = np.where(strat == 1, 0, strat).astype(np.int32)
 
         has_inter = ir.intersect is not None
         has_ce = ir.ce_pw is not None
-        branch_ok = k >= 1 and isinstance(ir.frontiers[0].operand, Neigh)
+        branch_ok = (
+            k >= 1
+            and isinstance(ir.frontiers[0].operand, Neigh)
+            and not bulk_only
+        )
         go_branch = (
             (cost > BRANCH_DECOMP_COST)
             if branch_ok
@@ -1418,7 +1434,10 @@ class CompiledPattern:
         )
 
     def schedule_for(
-        self, seed_eids: np.ndarray, stats: Optional[Dict[str, int]] = None
+        self,
+        seed_eids: np.ndarray,
+        stats: Optional[Dict[str, int]] = None,
+        bulk_only: bool = False,
     ) -> executor.Schedule:
         """The cached bucket schedule for a seed set (building it on a
         miss).  Schedules are pure in (plan, graph degree requirements,
@@ -1426,7 +1445,11 @@ class CompiledPattern:
         replayed by every device of a sharded mine — the host-side numpy
         grouping runs once per (plan, partition), never once per device."""
         stats = self.stats if stats is None else stats
-        key = (len(seed_eids), hashlib.sha1(seed_eids.tobytes()).hexdigest())
+        key = (
+            len(seed_eids),
+            hashlib.sha1(seed_eids.tobytes()).hexdigest(),
+            bulk_only,
+        )
         with self._sched_lock:
             sched = self._schedules.get(key)
             if sched is not None:
@@ -1437,7 +1460,7 @@ class CompiledPattern:
         # partitions' schedules concurrently (that concurrency is the whole
         # point of overlapped dispatch); keys differ across partitions so a
         # duplicated build is rare and benign — first insert wins.
-        sched = self._build_schedule(seed_eids)
+        sched = self._build_schedule(seed_eids, bulk_only=bulk_only)
         with self._sched_lock:
             existing = self._schedules.get(key)
             if existing is not None:
@@ -1506,14 +1529,26 @@ class CompiledPattern:
         stats["jit_cache_entries"] += len(new_keys)
         return out_dev
 
-    def mine(self, seed_eids: Optional[np.ndarray] = None) -> np.ndarray:
+    def mine(
+        self, seed_eids: Optional[np.ndarray] = None, *, witnesses: int = 0
+    ):
         """Mine per-seed pattern counts, device-resident end to end.
 
         The cached bucket schedule is replayed through
         :func:`repro.core.executor.execute`: one ``device_put`` per bucket
         group, async launches scatter-added into a device output vector,
         and exactly ONE blocking device→host sync for the finished counts.
+
+        ``witnesses=k`` switches to witness mode: the return value is a
+        :class:`repro.witness.Witnesses` carrying the same exact counts
+        PLUS the per-seed top-k matching edge tuples, selected device-side
+        over the same compare cubes (:mod:`repro.witness.extract`) — still
+        exactly one host sync, counts and packed ids fetched together.
         """
+        if witnesses:
+            from repro.witness.extract import mine_witnesses
+
+            return mine_witnesses(self, seed_eids, int(witnesses))
         if seed_eids is None:
             seed_eids = np.arange(self.g.n_edges, dtype=np.int32)
         seed_eids = np.asarray(seed_eids, dtype=np.int32)

@@ -27,9 +27,13 @@ import jax.numpy as jnp
 __all__ = [
     "lower_bound",
     "count_t_in",
+    "count_t_in_pos",
     "count_id_in_window",
+    "count_id_in_window_pos",
     "count_window",
+    "count_window_pos",
     "expand",
+    "expand_pos",
     "dedup_ids",
     "n_iters_for",
 ]
@@ -77,6 +81,17 @@ def count_t_in(t_flat, start, end, after, until, n_iters: int):
     return jnp.maximum(b - a, 0)
 
 
+def count_t_in_pos(t_flat, start, end, after, until, n_iters: int):
+    """Like :func:`count_t_in`, but also returns the absolute flat rank of
+    the first in-window element.  The j-th in-window element of the run
+    (j < count) sits at flat position ``start_pos + j`` — counting
+    primitives never materialize their runs, so this is all a witness
+    extraction needs to address individual matched edges."""
+    a = lower_bound(t_flat, start, end, jnp.asarray(after, jnp.int32) + 1, n_iters)
+    b = lower_bound(t_flat, start, end, jnp.asarray(until, jnp.int32) + 1, n_iters)
+    return jnp.maximum(b - a, 0), a
+
+
 def count_id_in_window(
     nbr_flat,
     t_flat,
@@ -104,6 +119,30 @@ def count_id_in_window(
     return jnp.where((node >= 0) & (x >= 0), cnt, 0)
 
 
+def count_id_in_window_pos(
+    nbr_flat,
+    t_flat,
+    indptr,
+    node,
+    x,
+    after,
+    until,
+    n_iters: int,
+):
+    """(count, run start) variant of :func:`count_id_in_window`: the id
+    run [lb, ub) is time-sorted, so the j-th matched edge of the window
+    sits at flat position ``start + j`` of the id-sorted row arrays."""
+    node = jnp.asarray(node, jnp.int32)
+    safe = jnp.maximum(node, 0)
+    start = indptr[safe]
+    end = indptr[safe + 1]
+    x = jnp.asarray(x, jnp.int32)
+    lb = lower_bound(nbr_flat, start, end, x, n_iters)
+    ub = lower_bound(nbr_flat, start, end, x + 1, n_iters)
+    cnt, pos = count_t_in_pos(t_flat, lb, ub, after, until, n_iters)
+    return jnp.where((node >= 0) & (x >= 0), cnt, 0), pos
+
+
 def count_window(t_sorted_flat, indptr, node, after, until, n_iters: int):
     """Windowed degree of `node` on the time-sorted row copy."""
     node = jnp.asarray(node, jnp.int32)
@@ -112,6 +151,18 @@ def count_window(t_sorted_flat, indptr, node, after, until, n_iters: int):
     end = indptr[safe + 1]
     cnt = count_t_in(t_sorted_flat, start, end, after, until, n_iters)
     return jnp.where(node >= 0, cnt, 0)
+
+
+def count_window_pos(t_sorted_flat, indptr, node, after, until, n_iters: int):
+    """(count, run start) variant of :func:`count_window`: the j-th
+    in-window edge sits at flat position ``start + j`` of the time-sorted
+    row arrays."""
+    node = jnp.asarray(node, jnp.int32)
+    safe = jnp.maximum(node, 0)
+    start = indptr[safe]
+    end = indptr[safe + 1]
+    cnt, pos = count_t_in_pos(t_sorted_flat, start, end, after, until, n_iters)
+    return jnp.where(node >= 0, cnt, 0), pos
 
 
 def dedup_ids(ids, ts, mask, invalid):
@@ -156,3 +207,26 @@ def expand(
     cidx = jnp.clip(idx, 0, cap)
     outs = tuple(f[cidx] for f in flats)
     return (mask,) + outs
+
+
+def expand_pos(
+    indptr,
+    flats: Tuple,
+    node,
+    d: int,
+    offset=0,
+):
+    """:func:`expand` that also returns the (clipped) flat row positions
+    of the gathered elements — witness extraction converts them to edge
+    ids via the row-order eid arrays.  Positions at masked slots are
+    clipped garbage; callers only read them where the mask holds."""
+    node = jnp.asarray(node, jnp.int32)
+    safe = jnp.maximum(node, 0)
+    start = indptr[safe] + jnp.asarray(offset, jnp.int32)
+    end = indptr[safe + 1]
+    idx = start[..., None] + jnp.arange(d, dtype=jnp.int32)
+    mask = (idx < end[..., None]) & (node >= 0)[..., None]
+    cap = flats[0].shape[0] - 1
+    cidx = jnp.clip(idx, 0, cap)
+    outs = tuple(f[cidx] for f in flats)
+    return (mask, cidx) + outs

@@ -9,18 +9,33 @@ rates.  Edge labels mark ground-truth laundering transactions.
 The real datasets (6.9M–180M edges) are not shipped in this container; the
 presets keep the six published names at CPU-tractable scales (factor noted
 in EXPERIMENTS.md).  Every generator is deterministic in ``seed``.
+
+**Plant-and-recover**: every injected typology instance is tracked
+through the final edge-id shuffle — ``meta["instances"]`` lists, per
+instance, its kind and its *global edge ids in injection order* (a
+cycle's hops in path order, a fan's transfers in time order, a
+scatter-gather's scatter phase then gather phase).  That makes witness
+recovery assertable end-to-end: plant a known laundering path, mine
+witnesses at one of its edges, and check the planted edge ids come back
+(:func:`planted_instances`; ``tests/test_witness.py``).
 """
 from __future__ import annotations
 
 import dataclasses
 import zlib
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.graph.csr import TemporalGraph, build_temporal_graph
 
-__all__ = ["AMLDataset", "DATASET_PRESETS", "generate_aml_dataset", "load_dataset"]
+__all__ = [
+    "AMLDataset",
+    "DATASET_PRESETS",
+    "generate_aml_dataset",
+    "load_dataset",
+    "planted_instances",
+]
 
 T_HORIZON = 1 << 20  # timestamp range (seconds-like ticks)
 THRESHOLD = 10_000.0  # structuring threshold: illicit amounts stay below
@@ -83,6 +98,9 @@ class _Inject:
         self.t: list = []
         self.amt: list = []
         self.kind: list = []
+        # per-instance (kind, [row0, row1) in injection arrays) — rows
+        # map to final edge ids after the shuffle (plant-and-recover)
+        self.instances: list = []
         self._inst = 0  # instance counter for time stratification
 
     def _nodes(self, k: int) -> np.ndarray:
@@ -108,22 +126,30 @@ class _Inject:
         self.amt.extend(_illicit_amounts(self.rng, k))
         self.kind.extend([kind] * k)
 
+    def _mark(self, kind: str, row0: int):
+        self.instances.append((kind, row0, len(self.src)))
+
     # --- typologies ------------------------------------------------------
     def fan_in(self, k: int, window: int):
+        row0 = len(self.src)
         nodes = self._nodes(k + 1)
         hub, srcs = nodes[0], nodes[1:]
         t0 = self._base_t(window)
         ts = t0 + np.sort(self.rng.integers(0, window, k))
         self.add(srcs, [hub] * k, ts, "fan_in")
+        self._mark("fan_in", row0)
 
     def fan_out(self, k: int, window: int):
+        row0 = len(self.src)
         nodes = self._nodes(k + 1)
         hub, dsts = nodes[0], nodes[1:]
         t0 = self._base_t(window)
         ts = t0 + np.sort(self.rng.integers(0, window, k))
         self.add([hub] * k, dsts, ts, "fan_out")
+        self._mark("fan_out", row0)
 
     def cycle(self, length: int, window: int, shuffle_time: bool = False):
+        row0 = len(self.src)
         nodes = self._nodes(length)
         t0 = self._base_t(window)
         offs = np.sort(self.rng.integers(0, window, length))
@@ -132,8 +158,10 @@ class _Inject:
         s = nodes
         d = np.roll(nodes, -1)
         self.add(s, d, t0 + offs, "cycle")
+        self._mark("cycle", row0)
 
     def scatter_gather(self, k: int, window: int):
+        row0 = len(self.src)
         nodes = self._nodes(k + 2)
         src, sink, mids = nodes[0], nodes[1], nodes[2:]
         t0 = self._base_t(2 * window)
@@ -142,9 +170,11 @@ class _Inject:
         t_ga = t_sc + 1 + self.rng.integers(0, window, k)
         self.add([src] * k, mids, t_sc, "scatter_gather")
         self.add(mids, [sink] * k, t_ga, "scatter_gather")
+        self._mark("scatter_gather", row0)
 
     def stack(self, k1: int, k2: int, window: int):
         """Stacked bipartite: layer A -> layer B -> layer C."""
+        row0 = len(self.src)
         nodes = self._nodes(k1 + k2 + 2)
         a, c = nodes[0], nodes[1]
         bs = nodes[2 : 2 + k1]
@@ -165,6 +195,7 @@ class _Inject:
             self.add(
                 [d], [c], [t0 + 2 * window + int(self.rng.integers(0, window))], "stack"
             )
+        self._mark("stack", row0)
 
 
 def generate_aml_dataset(
@@ -219,6 +250,14 @@ def generate_aml_dataset(
         all_src[perm], all_dst[perm], all_t[perm], all_amt[perm], n_nodes=n_nodes
     )
     kinds = np.asarray(["bg"] * n_bg + inj.kind, dtype=object)[perm]
+    # plant-and-recover bookkeeping: pre-shuffle injection row r sits at
+    # final edge id inv_perm[n_bg + r], so every planted instance's edge
+    # ids survive the shuffle in injection order
+    inv_perm = np.argsort(perm)
+    instances = [
+        {"kind": k, "eids": inv_perm[n_bg + np.arange(r0, r1)].astype(np.int64)}
+        for (k, r0, r1) in inj.instances
+    ]
     return AMLDataset(
         name=name,
         graph=g,
@@ -229,8 +268,17 @@ def generate_aml_dataset(
             "scale": scale,
             "n_illicit": int(labels.sum()),
             "kinds": kinds,
+            "instances": instances,
         },
     )
+
+
+def planted_instances(ds: AMLDataset, kind: Optional[str] = None) -> list:
+    """The dataset's planted typology instances (optionally one kind):
+    dicts ``{"kind", "eids"}`` with global edge ids in injection order —
+    the ground truth witness recovery is asserted against."""
+    inst = ds.meta.get("instances", [])
+    return [d for d in inst if kind is None or d["kind"] == kind]
 
 
 _CACHE: dict = {}

@@ -156,13 +156,15 @@ class TemporalGraph:
             out_indptr=i32(ip(self.out_indptr)),
             out_nbr=i32(ep(self.out_nbr)),
             out_t=i32(ep(self.out_t, 0)),
-            out_eid=i32(ep(self.out_eid, 0)),
+            out_eid=i32(ep(self.out_eid, -1)),
             out_t_sorted=i32(ep(self.out_t_sorted, 0)),
+            out_eid_t=i32(ep(self.out_eid_t, -1)),
             in_indptr=i32(ip(self.in_indptr)),
             in_nbr=i32(ep(self.in_nbr)),
             in_t=i32(ep(self.in_t, 0)),
-            in_eid=i32(ep(self.in_eid, 0)),
+            in_eid=i32(ep(self.in_eid, -1)),
             in_t_sorted=i32(ep(self.in_t_sorted, 0)),
+            in_eid_t=i32(ep(self.in_eid_t, -1)),
         )
 
 
@@ -182,11 +184,13 @@ class DeviceGraph:
     out_t: "object"
     out_eid: "object"
     out_t_sorted: "object"
+    out_eid_t: "object"
     in_indptr: "object"
     in_nbr: "object"
     in_t: "object"
     in_eid: "object"
     in_t_sorted: "object"
+    in_eid_t: "object"
 
     def arrays(self) -> dict:
         d = dataclasses.asdict(self)

@@ -1,0 +1,87 @@
+"""LM serving driver: batched autoregressive decode with KV/state caches.
+
+(Moved from ``repro.launch.serve``, which is now the AML scoring/triage
+endpoint — the mining system's own serving surface.)
+
+Real decoding runs on the local mesh with reduced configs; the full
+configs lower via dryrun.py (decode_32k / long_500k cells).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.decode_lm --arch xlstm-125m --smoke \
+      --batch 4 --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config, smoke_config
+from repro.models.model import cache_init, decode_step, init_params
+
+__all__ = ["generate", "make_serve_step"]
+
+
+def make_serve_step(cfg):
+    @jax.jit
+    def serve_step(params, cache, batch):
+        logits, new_cache = decode_step(params, cache, batch, cfg)
+        # last-axis argmax covers both layouts: flat-vocab logits yield
+        # (B,), multi-codebook (n_codebooks > 0) logits yield (B, K)
+        nxt = jnp.argmax(logits[:, -1], axis=-1)
+        return nxt, new_cache
+
+    return serve_step
+
+
+def generate(cfg, params, prompt_tokens: np.ndarray, gen: int, cache_len: int):
+    """Greedy decode. prompt_tokens (B, P) int32 -> (B, P+gen)."""
+    bsz, plen = prompt_tokens.shape
+    cache = cache_init(cfg, bsz, cache_len)
+    step_fn = make_serve_step(cfg)
+    out = [prompt_tokens]
+    tok = None
+    # prefill token-by-token through the decode path (correctness-first
+    # reference; a fused prefill is the production path — see dryrun)
+    for i in range(plen):
+        tok, cache = step_fn(params, cache, {"tokens": prompt_tokens[:, i : i + 1]})
+    cur = np.asarray(tok)[:, None]
+    for _ in range(gen):
+        out.append(cur.astype(np.int32))
+        tok, cache = step_fn(params, cache, {"tokens": jnp.asarray(cur, jnp.int32)})
+        cur = np.asarray(tok)[:, None]
+    return np.concatenate(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.precomputed_embeddings:
+        raise SystemExit("audio stub serves via examples/serve_lm.py embeddings path")
+    params = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)).astype(
+        np.int32
+    )
+    t0 = time.perf_counter()
+    toks = generate(
+        cfg, params, prompt, args.gen, cache_len=args.prompt_len + args.gen + 1
+    )
+    dt = time.perf_counter() - t0
+    tps = args.batch * args.gen / dt
+    print(f"generated {toks.shape} in {dt:.2f}s ({tps:,.0f} tok/s)")
+    print(toks[0, : args.prompt_len + 8])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,83 +1,221 @@
-"""Serving driver: batched autoregressive decode with KV/state caches.
+"""`repro.launch.serve` — the AML scoring/triage endpoint (pillar 3 CLI).
 
-Real decoding runs on the local mesh with reduced configs; the full
-configs lower via dryrun.py (decode_32k / long_500k cells).
+This is the mining system's own serving surface: a
+:class:`TriageServer` wraps a :class:`repro.stream.DetectionService`
+behind a ``submit()`` endpoint — concurrent submitters push transaction
+microbatches, each submit ticks the service (ingest → dirty-frontier
+re-mine → score → witness evidence), and every alert is appended to a
+JSON-lines **audit log** carrying its resolved evidence hops
+(``{stage, eid, src, dst, t, amount}`` per hop — what an analyst files
+a SAR from).
 
-Usage:
-  PYTHONPATH=src python -m repro.launch.serve --arch xlstm-125m --smoke \
-      --batch 4 --prompt-len 16 --gen 32
+The service is single-writer (the store mutates on ingest), so submits
+serialize on a lock; concurrency buys pipelining of feed preparation
+and audit IO against device mining, and the built-in load test measures
+the end-to-end submit latency distribution *under contention* — the
+number the triage queue actually experiences.
+
+Usage (load test over a synthetic IBM-AML-style feed):
+  PYTHONPATH=src python -m repro.launch.serve --dataset HI-Small \
+      --scale 0.25 --submitters 4 --batch 64 --witnesses 2 \
+      --audit /tmp/alerts.jsonl
+
+The LM decode driver that used to live here moved verbatim to
+:mod:`repro.launch.decode_lm`.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import threading
 import time
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 
-from repro.configs.registry import get_config, smoke_config
-from repro.models.model import cache_init, decode_step, init_params
+from repro.stream.service import AlertBatch, DetectionService
 
-__all__ = ["generate", "make_serve_step"]
+__all__ = ["TriageServer", "make_feed", "load_test", "DEFAULT_PORTFOLIO"]
 
-
-def make_serve_step(cfg):
-    @jax.jit
-    def serve_step(params, cache, batch):
-        logits, new_cache = decode_step(params, cache, batch, cfg)
-        # last-axis argmax covers both layouts: flat-vocab logits yield
-        # (B,), multi-codebook (n_codebooks > 0) logits yield (B, K)
-        nxt = jnp.argmax(logits[:, -1], axis=-1)
-        return nxt, new_cache
-
-    return serve_step
+# portfolio + thresholds matched to the typologies data/synth_aml.py
+# injects (see DEFAULT thresholds discussion in BENCH_streaming.json)
+DEFAULT_PORTFOLIO: Dict[str, int] = {
+    "fan_in": 4,
+    "fan_out": 4,
+    "cycle2": 1,
+    "cycle3": 1,
+    "scatter_gather": 6,
+}
 
 
-def generate(cfg, params, prompt_tokens: np.ndarray, gen: int, cache_len: int):
-    """Greedy decode. prompt_tokens (B, P) int32 -> (B, P+gen)."""
-    bsz, plen = prompt_tokens.shape
-    cache = cache_init(cfg, bsz, cache_len)
-    step_fn = make_serve_step(cfg)
-    out = [prompt_tokens]
-    tok = None
-    # prefill token-by-token through the decode path (correctness-first
-    # reference; a fused prefill is the production path — see dryrun)
-    for i in range(plen):
-        tok, cache = step_fn(params, cache, {"tokens": prompt_tokens[:, i : i + 1]})
-    cur = np.asarray(tok)[:, None]
-    for _ in range(gen):
-        out.append(cur.astype(np.int32))
-        tok, cache = step_fn(params, cache, {"tokens": jnp.asarray(cur, jnp.int32)})
-        cur = np.asarray(tok)[:, None]
-    return np.concatenate(out, axis=1)
+class TriageServer:
+    """Thread-safe scoring/triage front-end over a DetectionService.
+
+    ``submit(src, dst, t, amount)`` ticks the service under the writer
+    lock and appends the tick's alert rows (scores, fired patterns,
+    per-pattern counts, resolved witness evidence when the service was
+    built with ``witnesses=k``) to the audit log.  Latency/throughput
+    counters accumulate under a separate lock so ``summary()`` can be
+    read while submitters run.
+    """
+
+    def __init__(self, service: DetectionService, audit_path: Optional[str] = None):
+        self.service = service
+        self._svc_lock = threading.Lock()
+        self._meta_lock = threading.Lock()
+        self._audit = open(audit_path, "a") if audit_path else None
+        self.latencies: List[float] = []
+        self.n_alerts = 0
+        self.n_txns = 0
+        self.n_evidence_hops = 0
+
+    def submit(
+        self,
+        src: np.ndarray,
+        dst: np.ndarray,
+        t: np.ndarray,
+        amount: Optional[np.ndarray] = None,
+    ) -> AlertBatch:
+        t0 = time.perf_counter()
+        with self._svc_lock:
+            batch = self.service.submit(src, dst, t, amount)
+            rows = batch.to_rows()
+        dt = time.perf_counter() - t0
+        hops = 0
+        if batch.evidence is not None:
+            hops = sum(
+                len(wit)
+                for ev in batch.evidence
+                for wits in ev.values()
+                for wit in wits
+            )
+        lines = None
+        if self._audit is not None:
+            tick = batch.report.tick
+            lines = "".join(
+                json.dumps({"tick": tick, **row}) + "\n" for row in rows
+            )
+        with self._meta_lock:
+            self.latencies.append(dt)
+            self.n_txns += len(src)
+            self.n_alerts += len(rows)
+            self.n_evidence_hops += hops
+            if lines:
+                self._audit.write(lines)
+        return batch
+
+    def close(self) -> None:
+        if self._audit is not None:
+            self._audit.close()
+            self._audit = None
+
+    def summary(self) -> dict:
+        with self._meta_lock:
+            lat = np.asarray(self.latencies, dtype=np.float64)
+            out = {
+                "ticks": int(lat.size),
+                "txns": int(self.n_txns),
+                "alerts": int(self.n_alerts),
+                "evidence_hop_tuples": int(self.n_evidence_hops),
+            }
+        if lat.size:
+            out.update(
+                {
+                    "p50_ms": float(np.percentile(lat, 50) * 1e3),
+                    "p99_ms": float(np.percentile(lat, 99) * 1e3),
+                    "max_ms": float(lat.max() * 1e3),
+                }
+            )
+        return out
+
+
+Feed = List[Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]]
+
+
+def make_feed(graph, batch: int) -> Feed:
+    """Slice a batch graph's edges, time-ordered, into submit-sized
+    microbatches (the replay feed of the load test)."""
+    order = np.argsort(graph.t, kind="stable")
+    src, dst, t, amt = (
+        graph.src[order],
+        graph.dst[order],
+        graph.t[order],
+        graph.amount[order],
+    )
+    return [
+        (src[i : i + batch], dst[i : i + batch], t[i : i + batch], amt[i : i + batch])
+        for i in range(0, len(src), batch)
+    ]
+
+
+def load_test(server: TriageServer, feed: Feed, n_submitters: int) -> dict:
+    """Drive the server with ``n_submitters`` concurrent threads pulling
+    microbatches off a shared cursor (so the global feed order is
+    preserved up to in-flight skew — the service's lateness contract
+    absorbs it).  Returns the server summary plus wall-clock throughput.
+    """
+    cursor = {"i": 0}
+    cur_lock = threading.Lock()
+
+    def worker():
+        while True:
+            with cur_lock:
+                i = cursor["i"]
+                if i >= len(feed):
+                    return
+                cursor["i"] = i + 1
+            server.submit(*feed[i])
+
+    threads = [threading.Thread(target=worker) for _ in range(max(1, n_submitters))]
+    t0 = time.perf_counter()
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    wall = time.perf_counter() - t0
+    out = server.summary()
+    out["wall_s"] = wall
+    out["txns_per_s"] = out["txns"] / wall if wall > 0 else 0.0
+    out["submitters"] = n_submitters
+    return out
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=32)
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--dataset", default="HI-Small")
+    ap.add_argument("--scale", type=float, default=0.25)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--window", type=int, default=4096)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--submitters", type=int, default=4)
+    ap.add_argument("--witnesses", type=int, default=2)
+    ap.add_argument("--max-batches", type=int, default=0, help="0 = whole feed")
+    ap.add_argument("--audit", default=None, help="JSONL alert audit log path")
     args = ap.parse_args()
 
-    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    if cfg.precomputed_embeddings:
-        raise SystemExit("audio stub serves via examples/serve_lm.py embeddings path")
-    params = init_params(cfg, jax.random.key(0))
-    rng = np.random.default_rng(0)
-    prompt = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)).astype(
-        np.int32
+    from repro.data.synth_aml import generate_aml_dataset
+
+    ds = generate_aml_dataset(
+        args.dataset, seed=args.seed, scale=args.scale, window=args.window
     )
-    t0 = time.perf_counter()
-    toks = generate(
-        cfg, params, prompt, args.gen, cache_len=args.prompt_len + args.gen + 1
+    svc = DetectionService(
+        list(DEFAULT_PORTFOLIO),
+        window=args.window,
+        thresholds=dict(DEFAULT_PORTFOLIO),
+        witnesses=args.witnesses,
     )
-    dt = time.perf_counter() - t0
-    tps = args.batch * args.gen / dt
-    print(f"generated {toks.shape} in {dt:.2f}s ({tps:,.0f} tok/s)")
-    print(toks[0, : args.prompt_len + 8])
+    server = TriageServer(svc, audit_path=args.audit)
+    feed = make_feed(ds.graph, args.batch)
+    if args.max_batches:
+        feed = feed[: args.max_batches]
+    print(
+        f"serving {sum(len(b[0]) for b in feed)} txns "
+        f"({len(feed)} batches of {args.batch}) through "
+        f"{args.submitters} submitters, witnesses={args.witnesses}"
+    )
+    out = load_test(server, feed, args.submitters)
+    server.close()
+    print(json.dumps(out, indent=2))
 
 
 if __name__ == "__main__":

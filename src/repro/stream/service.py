@@ -18,7 +18,13 @@
    exactly :func:`repro.api.featurize` order, so an offline-trained
    classifier's ``predict_proba`` plugs in as ``scorer=``), apply the
    per-pattern count ``thresholds``, and emit an :class:`AlertBatch`
-   carrying the executor/store counter glossary for the tick.
+   carrying the executor/store counter glossary for the tick;
+5. **evidence** (``witnesses=k``): every alert seed whose count was
+   recomputed this tick is witness-mined (:mod:`repro.witness`) on the
+   SAME tick-local view and device mirror the counting pass used, the
+   hop edge ids translated compact->global through ``view.edge_ids`` and
+   resolved against the store's arrival columns into concrete
+   ``(src, dst, t, amount)`` transaction hops an analyst can act on.
 
 Incremental counts are guaranteed equal to a batch recompute over the
 full edge history (``tests/test_stream_service.py`` asserts it pattern
@@ -39,6 +45,8 @@ from repro.core.spec import PatternSpec
 
 from repro.stream.delta import DeltaPlan, DeltaScheduler
 from repro.stream.store import GraphView, TemporalGraphStore
+from repro.witness import witness_layout
+from repro.witness.extract import mine_witnesses
 
 __all__ = [
     "DetectionService",
@@ -98,7 +106,15 @@ class AlertBatch:
     Rows cover every seed whose feature row *changed* this tick and
     crossed a threshold; ``counts[:, j]`` is the current participation
     count in pattern ``columns[j]`` and ``triggered[:, j]`` marks which
-    pattern(s) fired."""
+    pattern(s) fired.
+
+    ``evidence`` (services built with ``witnesses=k``) carries, per row,
+    a dict mapping each pattern that fired AND was re-mined this tick to
+    its top-k witnesses — each witness a list of resolved hop dicts
+    ``{stage, eid, src, dst, t, amount}`` (see
+    :meth:`repro.witness.Witnesses.resolve`).  A fired pattern whose
+    count carried over from an earlier tick is absent from the dict (its
+    witnesses were attached when it was last re-mined)."""
 
     eids: np.ndarray  # (n,) global edge ids
     src: np.ndarray
@@ -110,6 +126,7 @@ class AlertBatch:
     triggered: np.ndarray  # (n, P) bool
     columns: Tuple[str, ...]
     report: TickReport
+    evidence: Optional[List[Dict[str, list]]] = None
 
     def __len__(self) -> int:
         return len(self.eids)
@@ -126,27 +143,33 @@ class AlertBatch:
             counts=self.counts[order],
             score=self.score[order],
             triggered=self.triggered[order],
+            evidence=(
+                None
+                if self.evidence is None
+                else [self.evidence[i] for i in order]
+            ),
         )
 
     def to_rows(self) -> List[dict]:
         rows = []
         for i in range(len(self.eids)):
             fired = [c for j, c in enumerate(self.columns) if self.triggered[i, j]]
-            rows.append(
-                {
-                    "eid": int(self.eids[i]),
-                    "src": int(self.src[i]),
-                    "dst": int(self.dst[i]),
-                    "t": int(self.t[i]),
-                    "amount": float(self.amount[i]),
-                    "score": float(self.score[i]),
-                    "patterns": fired,
-                    "counts": {
-                        c: int(self.counts[i, j])
-                        for j, c in enumerate(self.columns)
-                    },
-                }
-            )
+            row = {
+                "eid": int(self.eids[i]),
+                "src": int(self.src[i]),
+                "dst": int(self.dst[i]),
+                "t": int(self.t[i]),
+                "amount": float(self.amount[i]),
+                "score": float(self.score[i]),
+                "patterns": fired,
+                "counts": {
+                    c: int(self.counts[i, j])
+                    for j, c in enumerate(self.columns)
+                },
+            }
+            if self.evidence is not None:
+                row["evidence"] = self.evidence[i]
+            rows.append(row)
         return rows
 
 
@@ -173,7 +196,9 @@ class DetectionService:
     ``repro.ml.GBDTClassifier().predict_proba``); without one, the score
     is the max threshold-normalized count.  ``retain`` is the store's
     sliding window ("auto" derives the sound ``2*TR + lateness`` bound,
-    ``None`` keeps everything).
+    ``None`` keeps everything).  ``witnesses=k`` attaches to every alert
+    the top-k matching edge tuples per fired pattern, resolved into
+    ``(src, dst, t, amount)`` hops (:attr:`AlertBatch.evidence`).
     """
 
     def __init__(
@@ -188,9 +213,11 @@ class DetectionService:
         lateness: int = 0,
         full_remine_fraction: float = 0.5,
         node_capacity: int = 64,
+        witnesses: int = 0,
     ):
         self.window = int(window)
         self.backend = backend
+        self.witnesses = int(witnesses)
         specs = [
             p
             if isinstance(p, PatternSpec)
@@ -224,6 +251,16 @@ class DetectionService:
         # shapes are pow2-padded, so tick k+1 replays tick k's traces
         self._kernels: Dict[str, dict] = {n: {} for n in self.pattern_names}
         self._trace_keys: Dict[str, set] = {n: set() for n in self.pattern_names}
+        if self.witnesses:
+            # fail at construction, not mid-stream, if a registered
+            # pattern's stage shape has no witness lowering
+            for n in self.pattern_names:
+                witness_layout(self._irs[n])
+        # tick-local mining context (view, device mirror, per-pattern
+        # plans, per-pattern freshly-mined seed sets) kept alive between
+        # _mine_plan and _finish so alert seeds can be witness-mined on
+        # the exact graph their counts came from
+        self._tick_ctx: Optional[tuple] = None
         self.tick = 0
         self.last_report: Optional[TickReport] = None
         self.last_plan: Optional[DeltaPlan] = None
@@ -266,6 +303,8 @@ class DetectionService:
     ) -> None:
         dg = view.graph.to_device(pad=not view.full)
         vals_cache: Dict[str, np.ndarray] = {}
+        cps: Dict[str, CompiledPattern] = {}
+        mined: Dict[str, set] = {}
         for name in self.pattern_names:
             seeds = plan.dirty.get(name)
             if seeds is None or len(seeds) == 0:
@@ -283,9 +322,56 @@ class DetectionService:
             self.counts[name][seeds] = cp.mine(view.local_seeds(seeds))
             for k in stats:
                 stats[k] += cp.stats[k]
+            if self.witnesses:
+                cps[name] = cp
+                mined[name] = set(int(e) for e in seeds)
+        if self.witnesses:
+            self._tick_ctx = (view, dg, cps, mined)
         stats["jit_cache_entries"] = sum(
             len(s) for s in self._trace_keys.values()
         )
+
+    def _extract_evidence(
+        self,
+        eids: np.ndarray,
+        triggered: np.ndarray,
+        stats: Dict[str, int],
+    ) -> List[Dict[str, list]]:
+        """Top-k witnesses for every (alert seed, fired pattern) pair
+        whose count was recomputed this tick, witness-mined on the tick's
+        own view/device mirror and resolved into transaction hops."""
+        out: List[Dict[str, list]] = [dict() for _ in range(len(eids))]
+        if self._tick_ctx is None:
+            return out
+        view, dg, cps, mined = self._tick_ctx
+        for j, name in enumerate(self.pattern_names):
+            cp = cps.get(name)
+            if cp is None:
+                continue
+            fresh = mined[name]
+            rows = [
+                i
+                for i in range(len(eids))
+                if triggered[i, j] and int(eids[i]) in fresh
+            ]
+            if not rows:
+                continue
+            before = dict(cp.stats)
+            sub = np.asarray(eids[rows], dtype=np.int64)
+            w = mine_witnesses(
+                cp, view.local_seeds(sub), self.witnesses, dg=dg
+            )
+            for k in stats:
+                stats[k] += cp.stats[k] - before[k]
+            resolved = w.translate(view.edge_ids).resolve(
+                self.store.edge_fields
+            )
+            for r, i in enumerate(rows):
+                out[i][name] = resolved[r]
+        stats["jit_cache_entries"] = sum(
+            len(s) for s in self._trace_keys.values()
+        )
+        return out
 
     def _score(self, eids: np.ndarray) -> Tuple[np.ndarray, ...]:
         src, dst, t, amt = self.store.edge_fields(eids)
@@ -342,6 +428,7 @@ class DetectionService:
         and return the scored alerts + the tick report."""
         t0 = time.perf_counter()
         self.tick += 1
+        self._tick_ctx = None
         src = np.asarray(src, dtype=np.int32)
         dst = np.asarray(dst, dtype=np.int32)
         t = np.asarray(t, dtype=np.int64)
@@ -377,6 +464,14 @@ class DetectionService:
         store_before: Dict[str, int],
         path: str,
     ) -> AlertBatch:
+        # score + evidence BEFORE the stats/seconds snapshot, so witness
+        # mining is accounted to this tick's report
+        scored = None
+        evidence = [] if self.witnesses else None
+        if plan is not None and len(plan.union_dirty):
+            scored = self._score(plan.union_dirty)
+            if self.witnesses:
+                evidence = self._extract_evidence(scored[0], scored[7], stats)
         for k in self.stats:
             if k == "jit_cache_entries":  # a gauge, not a counter
                 self.stats[k] = max(self.stats[k], stats[k])
@@ -406,7 +501,7 @@ class DetectionService:
         )
         self.last_report = report
         self.last_plan = plan
-        if plan is None or len(plan.union_dirty) == 0:
+        if scored is None:
             empty = np.zeros(0, dtype=np.int64)
             return AlertBatch(
                 eids=empty,
@@ -419,10 +514,9 @@ class DetectionService:
                 triggered=np.zeros((0, len(self.pattern_names)), bool),
                 columns=self.pattern_names,
                 report=report,
+                evidence=evidence,
             )
-        (eids, s, d, tt, amt, counts, score, trig) = self._score(
-            plan.union_dirty
-        )
+        (eids, s, d, tt, amt, counts, score, trig) = scored
         return AlertBatch(
             eids=eids,
             src=s,
@@ -434,6 +528,7 @@ class DetectionService:
             triggered=trig,
             columns=self.pattern_names,
             report=report,
+            evidence=evidence,
         )
 
     # -- batch parity ---------------------------------------------------
