@@ -1,0 +1,206 @@
+"""Resilience overhead + recovery benchmark (`repro.stream.resilience`).
+
+Prices what fault tolerance costs the hot path and what a crash costs
+to heal, in one run so the comparison is apples-to-apples:
+
+* **WAL + validation overhead** — the same time-ordered feed streamed
+  through a plain :class:`DetectionService` and a
+  :class:`ResilientDetectionService` (WAL + input validation +
+  checkpoint cadence); warm-tick p50/p99 of both, and the p50 overhead
+  ratio the acceptance criterion bounds (``--max-overhead``, default
+  0.15 → asserted unless ``--no-assert``).  Checkpoint ticks are
+  priced separately (``checkpoint_tick_ms``) so the steady-state
+  overhead number isn't polluted by the cadence.
+* **recovery wall** — after the stream, the resilient service's process
+  state is thrown away and :meth:`ResilientDetectionService.recover`
+  rebuilds it from the latest committed checkpoint + WAL tail;
+  ``recovery_ms`` is that wall clock.
+* **post-recovery exactness** — the recovered store state must be
+  bit-exact vs the live service's (``store_states_equal``) and every
+  pattern's counts bit-identical; both are hard asserts and recorded in
+  the JSON.
+
+Emits CSV rows plus ``BENCH_resilience.json`` (repo root when driven by
+``benchmarks.run``).
+
+  PYTHONPATH=src python -m benchmarks.bench_resilience
+  PYTHONPATH=src python -m benchmarks.bench_resilience --scale 0.1 --batches 12
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.data.synth_aml import load_dataset
+from repro.stream import (
+    DetectionService,
+    ResilienceConfig,
+    ResilientDetectionService,
+    store_states_equal,
+)
+
+OUT_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "results", "BENCH_resilience.json"
+)
+ROOT_OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_resilience.json")
+
+PORTFOLIO = ["fan_in", "fan_out", "cycle2", "cycle3"]
+THRESHOLDS = {"fan_in": 4, "fan_out": 4, "cycle2": 1, "cycle3": 1}
+
+
+def _chunks(scale: float, n_batches: int):
+    ds = load_dataset("HI-Small", scale=scale)
+    g = ds.graph
+    order = np.argsort(g.t, kind="stable")
+    batches = [
+        (g.src[ch], g.dst[ch], g.t[ch], g.amount[ch])
+        for ch in np.array_split(order, n_batches)
+    ]
+    return ds, batches
+
+
+def _stream(svc, batches):
+    lat = []
+    for b in batches:
+        svc.submit(*b)
+        lat.append(svc.last_report.seconds)
+    return np.array(lat)
+
+
+def run(
+    scale: float = 0.5,
+    n_batches: int = 26,
+    window: int = 4096,
+    checkpoint_every: int = 8,
+    max_overhead: float = 0.15,
+    assert_overhead: bool = True,
+    out_path: str = OUT_PATH,
+):
+    ds, batches = _chunks(scale, n_batches)
+    kw = dict(thresholds=THRESHOLDS, witnesses=0, retain="auto")
+    state_dir = tempfile.mkdtemp(prefix="bench_resilience_")
+    cfg = ResilienceConfig(
+        wal_dir=os.path.join(state_dir, "wal"),
+        checkpoint_dir=os.path.join(state_dir, "ckpt"),
+        checkpoint_every=checkpoint_every,
+    )
+    try:
+        # plain baseline (no WAL, no validation, no checkpoints)
+        base = DetectionService(PORTFOLIO, window=window, **kw)
+        base_lat = _stream(base, batches)
+        # resilient service on the identical feed
+        res = ResilientDetectionService(
+            PORTFOLIO, window=window, resilience=cfg, **kw
+        )
+        res_lat = _stream(res, batches)
+
+        # warm ticks only (skip the JIT-warming first tick); checkpoint
+        # ticks priced separately from the steady-state overhead
+        ckpt_ticks = [
+            i
+            for i in range(1, n_batches)
+            if (i + 1) % checkpoint_every == 0
+        ]
+        warm = [i for i in range(1, n_batches) if i not in ckpt_ticks]
+        base_p50 = float(np.percentile(base_lat[warm], 50) * 1e3)
+        res_p50 = float(np.percentile(res_lat[warm], 50) * 1e3)
+        overhead = res_p50 / base_p50 - 1.0
+
+        # kill the process state; recover from durable state only
+        live_state = res.store.state_dict()
+        live_counts = {n: res.pattern_counts(n).copy() for n in res.pattern_names}
+        live_tick = res.tick
+        del res
+        t0 = time.perf_counter()
+        rec = ResilientDetectionService.recover(
+            PORTFOLIO, window=window, resilience=cfg, **kw
+        )
+        recovery_s = time.perf_counter() - t0
+
+        store_exact = store_states_equal(live_state, rec.store.state_dict())
+        counts_exact = all(
+            np.array_equal(live_counts[n], rec.pattern_counts(n))
+            for n in rec.pattern_names
+        )
+        assert store_exact, "post-recovery store state diverged"
+        assert counts_exact, "post-recovery counts diverged"
+        assert rec.tick == live_tick
+
+        report = {
+            "dataset": ds.name,
+            "scale": scale,
+            "window": window,
+            "n_batches": n_batches,
+            "patterns": PORTFOLIO,
+            "checkpoint_every": checkpoint_every,
+            "baseline_tick_ms": {
+                "p50": base_p50,
+                "p99": float(np.percentile(base_lat[1:], 99) * 1e3),
+            },
+            "resilient_tick_ms": {
+                "p50": res_p50,
+                "p99": float(np.percentile(res_lat[1:], 99) * 1e3),
+            },
+            "checkpoint_tick_ms": (
+                [float(res_lat[i] * 1e3) for i in ckpt_ticks]
+            ),
+            "warm_p50_overhead": overhead,
+            "max_overhead": max_overhead,
+            "recovery_ms": recovery_s * 1e3,
+            "recovered_ticks": int(rec.tick),
+            "wal_replay_ticks": int(
+                rec.tick - (rec.tick // checkpoint_every) * checkpoint_every
+            ),
+            "post_recovery_store_exact": bool(store_exact),
+            "post_recovery_counts_exact": bool(counts_exact),
+        }
+        emit(
+            "resilience/overhead",
+            overhead,
+            f"base_p50={base_p50:.1f}ms;res_p50={res_p50:.1f}ms;"
+            f"overhead={overhead * 100:.1f}%;"
+            f"recovery={recovery_s * 1e3:.0f}ms;"
+            f"exact={store_exact and counts_exact}",
+        )
+        if assert_overhead and overhead > max_overhead:
+            raise AssertionError(
+                f"warm-tick p50 WAL+validation overhead {overhead:.1%} "
+                f"exceeds the {max_overhead:.0%} budget "
+                f"(base {base_p50:.2f}ms vs resilient {res_p50:.2f}ms)"
+            )
+        out_path = os.path.abspath(out_path)
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"# wrote {out_path}")
+        return report
+    finally:
+        shutil.rmtree(state_dir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.5)
+    ap.add_argument("--batches", type=int, default=26)
+    ap.add_argument("--window", type=int, default=4096)
+    ap.add_argument("--checkpoint-every", type=int, default=8)
+    ap.add_argument("--max-overhead", type=float, default=0.15)
+    ap.add_argument("--no-assert", action="store_true")
+    ap.add_argument("--out", default=OUT_PATH)
+    a = ap.parse_args()
+    run(
+        scale=a.scale,
+        n_batches=a.batches,
+        window=a.window,
+        checkpoint_every=a.checkpoint_every,
+        max_overhead=a.max_overhead,
+        assert_overhead=not a.no_assert,
+        out_path=a.out,
+    )

@@ -38,10 +38,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "--only",
-        default="kernels,mining,portfolio,streaming,shard,witness,scaling,"
-        "f1,fraudgt,roofline",
-        help="comma list: kernels,mining,portfolio,streaming,shard,witness,"
+        default="kernels,mining,portfolio,streaming,resilience,shard,witness,"
         "scaling,f1,fraudgt,roofline",
+        help="comma list: kernels,mining,portfolio,streaming,resilience,"
+        "shard,witness,scaling,f1,fraudgt,roofline",
     )
     args = ap.parse_args()
     only = set(args.only.split(","))
@@ -75,6 +75,21 @@ def main() -> None:
             (
                 "streaming",
                 lambda: bench_streaming.run(out_path=bench_streaming.ROOT_OUT),
+            )
+        )
+    if "resilience" in only:
+        from benchmarks import bench_resilience
+
+        # the resilience bench is the fault-tolerance trajectory: always
+        # emit its BENCH_resilience.json (WAL/validation overhead on tick
+        # p50/p99, recovery wall, post-recovery exactness asserts) at the
+        # repo root
+        jobs.append(
+            (
+                "resilience",
+                lambda: bench_resilience.run(
+                    out_path=bench_resilience.ROOT_OUT
+                ),
             )
         )
     if "shard" in only:

@@ -420,6 +420,9 @@ class MiningResult:
     shard_devices: Optional[Tuple[str, ...]] = None
     dispatch_wall_s: Optional[float] = None
     gather_mode: Optional[str] = None
+    # per-device dispatch-worker liveness (heartbeat instants, beat
+    # counts, wall medians, flagged stragglers) — sharded mines only
+    worker_liveness: Optional[dict] = None
 
     def dispatch_overlap_ratio(self) -> Optional[float]:
         """Sum of per-shard dispatch walls over the overlapped dispatch
@@ -497,6 +500,7 @@ class MiningSession:
         batch_elem_cap: int = BATCH_ELEM_CAP,
         kernel_backend: str = "xla",
         shard_coalesce: int = 4,
+        shard_heartbeat_dir: Optional[str] = None,
     ):
         self.graph = graph
         self.window = window
@@ -507,6 +511,9 @@ class MiningSession:
         # launch (executor.coalesce_widths) — fewer, fatter kernel calls
         # per device; 1 disables
         self.shard_coalesce = int(shard_coalesce)
+        # file-backed per-device dispatch-worker heartbeats (worker
+        # liveness surfaces on MiningResult.worker_liveness either way)
+        self.shard_heartbeat_dir = shard_heartbeat_dir
         self._specs: Dict[str, PatternSpec] = {}  # name -> spec (reg. order)
         self._canon_of: Dict[str, str] = {}  # name -> canonical key
         self._members: Dict[str, PatternSpec] = {}  # key -> representative
@@ -898,7 +905,9 @@ class MiningSession:
 
         self.compile()
         if self._shard_ctx is None:
-            self._shard_ctx = shard.ShardContext(self._dg)
+            self._shard_ctx = shard.ShardContext(
+                self._dg, heartbeat_dir=self.shard_heartbeat_dir
+            )
         ctx = self._shard_ctx
         if n_parts is None:
             n_parts = ctx.n_devices
@@ -996,6 +1005,7 @@ class MiningSession:
             shard_devices=tuple(run.shard_devices),
             dispatch_wall_s=run.dispatch_wall_s,
             gather_mode=run.gather_mode,
+            worker_liveness=run.worker_liveness,
         )
 
     # -- streaming ------------------------------------------------------

@@ -62,6 +62,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import executor
+from repro.distributed.fault_tolerance import Heartbeat, StragglerMonitor
 from repro.graph.partition import PartitionPlan
 
 __all__ = [
@@ -99,7 +100,12 @@ class ShardContext:
     ``replica`` misses from those workers are double-check locked.
     """
 
-    def __init__(self, dg, devices: Optional[Sequence] = None):
+    def __init__(
+        self,
+        dg,
+        devices: Optional[Sequence] = None,
+        heartbeat_dir: Optional[str] = None,
+    ):
         self.dg = dg
         self.devices = (
             list(devices) if devices is not None else mining_devices()
@@ -109,6 +115,36 @@ class ShardContext:
         self._replicas: Dict = {}
         self._lock = threading.Lock()
         self._pool: Optional[ThreadPoolExecutor] = None
+        # per-device worker liveness: every dispatch beats in-memory
+        # (last_beat) and — when heartbeat_dir is set — through the
+        # file-backed distributed.fault_tolerance.Heartbeat tracker, the
+        # same liveness surface the training launcher uses
+        self.heartbeat_dir = heartbeat_dir
+        self.last_beat: Dict[str, float] = {}
+        self.beat_steps: Dict[str, int] = {}
+        self._heartbeats: Dict = {}
+        self.stragglers = StragglerMonitor()
+
+    def beat(self, device, shard: int) -> None:
+        """Record liveness of ``device``'s dispatch worker at ``shard``."""
+        key = str(device)
+        self.last_beat[key] = time.time()
+        self.beat_steps[key] = self.beat_steps.get(key, 0) + 1
+        if self.heartbeat_dir is not None:
+            hb = self._heartbeats.get(key)
+            if hb is None:
+                with self._lock:
+                    hb = self._heartbeats.get(key)
+                    if hb is None:
+                        hb = Heartbeat(self.heartbeat_dir, key)
+                        self._heartbeats[key] = hb
+            hb.beat(shard)
+
+    def alive_devices(self) -> Optional[List[str]]:
+        """File-backed liveness view (None without a heartbeat_dir)."""
+        if self.heartbeat_dir is None or not self._heartbeats:
+            return None
+        return next(iter(self._heartbeats.values())).alive_hosts()
 
     @property
     def n_devices(self) -> int:
@@ -169,6 +205,10 @@ class ShardRun:
     shard_devices: List[str]
     dispatch_wall_s: float
     gather_mode: str  # "collective" | "host"
+    # per-device worker liveness for this run: last heartbeat instant,
+    # cumulative beats, per-device wall medians, and the devices the
+    # StragglerMonitor flags slower than threshold x median
+    worker_liveness: Optional[dict] = None
 
 
 def _place_rows_impl(vec, rows, n_total):
@@ -310,6 +350,7 @@ def run_sharded(
         ids = plan.edge_ids[p][plan.valid[p]]
         device = ctx.device_for(p)
         st = shard_stats[p]
+        ctx.beat(device, p)  # liveness: worker picked up shard p
         t0 = time.perf_counter()
         out = launch(p, ids, ctx.replica(device), device, st)
         if collective:
@@ -338,6 +379,8 @@ def run_sharded(
         outs[p] = out
         shard_walls[p] = time.perf_counter() - t0
         shard_devices[p] = str(device)
+        ctx.beat(device, p)  # liveness: shard p dispatched
+        ctx.stragglers.record(str(device), shard_walls[p])
 
     n_used = min(n_parts, ctx.n_devices)
     t0 = time.perf_counter()
@@ -368,6 +411,16 @@ def run_sharded(
             if k in ("host_syncs", "bytes_d2h"):
                 continue  # per-shard launches never sync; the gather paid
             stats[k] += st[k]  # all deltas (jit_cache_entries included)
+    used = sorted({d for d in shard_devices if d})
+    liveness = {
+        "last_beat": {d: ctx.last_beat.get(d) for d in used},
+        "beats": {d: ctx.beat_steps.get(d, 0) for d in used},
+        "wall_medians": {
+            d: m for d, m in ctx.stragglers.medians().items() if d in used
+        },
+        "stragglers": [d for d in ctx.stragglers.stragglers() if d in used],
+        "alive": ctx.alive_devices(),
+    }
     return ShardRun(
         host_outs=host_outs,
         shard_stats=shard_stats,
@@ -375,4 +428,5 @@ def run_sharded(
         shard_devices=shard_devices,
         dispatch_wall_s=dispatch_wall,
         gather_mode=mode,
+        worker_liveness=liveness,
     )

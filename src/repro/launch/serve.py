@@ -26,16 +26,24 @@ The LM decode driver that used to live here moved verbatim to
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import hashlib
 import json
 import threading
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.stream.service import AlertBatch, DetectionService
 
-__all__ = ["TriageServer", "make_feed", "load_test", "DEFAULT_PORTFOLIO"]
+__all__ = [
+    "TriageServer",
+    "SubmitError",
+    "make_feed",
+    "load_test",
+    "DEFAULT_PORTFOLIO",
+]
 
 # portfolio + thresholds matched to the typologies data/synth_aml.py
 # injects (see DEFAULT thresholds discussion in BENCH_streaming.json)
@@ -48,6 +56,29 @@ DEFAULT_PORTFOLIO: Dict[str, int] = {
 }
 
 
+@dataclasses.dataclass
+class SubmitError:
+    """Structured failure of one submit: the tick was rolled back
+    transactionally (the service state is exactly as if the call never
+    happened) and the server keeps serving.  ``error`` is the exception
+    class name, ``detail`` its message."""
+
+    error: str
+    detail: str
+    tick: int  # tick counter after rollback (i.e. the pre-call tick)
+    rolled_back: bool = True
+
+
+def _alert_key(row: dict) -> Tuple[int, Tuple[str, ...], str]:
+    """Audit-log dedup key of one alert row: (seed eid, fired patterns,
+    evidence content hash) — a seed that re-fires with the same patterns
+    and the same witness evidence is the SAME alert, not a new one."""
+    ev = hashlib.sha1(
+        json.dumps(row.get("evidence"), sort_keys=True).encode()
+    ).hexdigest()[:16]
+    return (int(row["eid"]), tuple(row["patterns"]), ev)
+
+
 class TriageServer:
     """Thread-safe scoring/triage front-end over a DetectionService.
 
@@ -57,6 +88,18 @@ class TriageServer:
     built with ``witnesses=k``) to the audit log.  Latency/throughput
     counters accumulate under a separate lock so ``summary()`` can be
     read while submitters run.
+
+    **Failure containment**: a tick that raises is rolled back by the
+    service's transactional submit; the server records it, returns a
+    structured :class:`SubmitError` instead of propagating, and keeps
+    serving subsequent submits.  ``health()`` / ``ready()`` expose the
+    liveness surface a supervisor probes.
+
+    **Audit dedup**: alert rows are deduplicated ACROSS ticks on
+    (seed eid, fired patterns, evidence hash) — a seed re-firing with
+    identical evidence bumps an in-memory ``repeat_count`` instead of
+    re-emitting the line; ``close()`` flushes one ``dedup`` summary line
+    per repeated alert.
     """
 
     def __init__(self, service: DetectionService, audit_path: Optional[str] = None):
@@ -68,6 +111,11 @@ class TriageServer:
         self.n_alerts = 0
         self.n_txns = 0
         self.n_evidence_hops = 0
+        self.n_errors = 0
+        self.n_suppressed = 0  # audit lines saved by dedup
+        self.last_error: Optional[SubmitError] = None
+        self._seen: Dict[Tuple[int, Tuple[str, ...], str], int] = {}
+        self._closed = False
 
     def submit(
         self,
@@ -75,10 +123,21 @@ class TriageServer:
         dst: np.ndarray,
         t: np.ndarray,
         amount: Optional[np.ndarray] = None,
-    ) -> AlertBatch:
+    ) -> Union[AlertBatch, SubmitError]:
         t0 = time.perf_counter()
         with self._svc_lock:
-            batch = self.service.submit(src, dst, t, amount)
+            try:
+                batch = self.service.submit(src, dst, t, amount)
+            except Exception as e:  # tick already rolled back
+                err = SubmitError(
+                    error=type(e).__name__,
+                    detail=str(e),
+                    tick=self.service.tick,
+                )
+                with self._meta_lock:
+                    self.n_errors += 1
+                    self.last_error = err
+                return err
             rows = batch.to_rows()
         dt = time.perf_counter() - t0
         hops = 0
@@ -89,25 +148,77 @@ class TriageServer:
                 for wits in ev.values()
                 for wit in wits
             )
-        lines = None
-        if self._audit is not None:
-            tick = batch.report.tick
-            lines = "".join(
-                json.dumps({"tick": tick, **row}) + "\n" for row in rows
-            )
+        keyed = (
+            [(_alert_key(row), row) for row in rows]
+            if self._audit is not None
+            else []
+        )
         with self._meta_lock:
             self.latencies.append(dt)
             self.n_txns += len(src)
             self.n_alerts += len(rows)
             self.n_evidence_hops += hops
-            if lines:
-                self._audit.write(lines)
+            if self._audit is not None:
+                tick = batch.report.tick
+                lines = []
+                for key, row in keyed:
+                    if key in self._seen:
+                        self._seen[key] += 1
+                        self.n_suppressed += 1
+                        continue
+                    self._seen[key] = 1
+                    lines.append(json.dumps({"tick": tick, **row}) + "\n")
+                if lines:
+                    self._audit.write("".join(lines))
         return batch
 
+    def health(self) -> dict:
+        """Liveness/observability snapshot (cheap; safe under load)."""
+        with self._meta_lock:
+            out = {
+                "ready": self.ready(),
+                "ticks": len(self.latencies),
+                "errors": self.n_errors,
+                "last_error": (
+                    dataclasses.asdict(self.last_error)
+                    if self.last_error
+                    else None
+                ),
+                "alerts": self.n_alerts,
+                "suppressed_duplicates": self.n_suppressed,
+            }
+        svc_health = getattr(self.service, "health", None)
+        if callable(svc_health):
+            out["service"] = svc_health()
+        else:
+            out["service"] = {"tick": self.service.tick}
+        return out
+
+    def ready(self) -> bool:
+        """Readiness probe: accepting submits."""
+        return not self._closed
+
     def close(self) -> None:
-        if self._audit is not None:
-            self._audit.close()
-            self._audit = None
+        with self._meta_lock:
+            self._closed = True
+            if self._audit is not None:
+                # flush dedup summaries: one line per alert that repeated
+                for (eid, patterns, ev), n in self._seen.items():
+                    if n > 1:
+                        self._audit.write(
+                            json.dumps(
+                                {
+                                    "dedup": True,
+                                    "eid": eid,
+                                    "patterns": list(patterns),
+                                    "evidence_sha1": ev,
+                                    "repeat_count": n,
+                                }
+                            )
+                            + "\n"
+                        )
+                self._audit.close()
+                self._audit = None
 
     def summary(self) -> dict:
         with self._meta_lock:
@@ -117,6 +228,8 @@ class TriageServer:
                 "txns": int(self.n_txns),
                 "alerts": int(self.n_alerts),
                 "evidence_hop_tuples": int(self.n_evidence_hops),
+                "errors": int(self.n_errors),
+                "suppressed_duplicates": int(self.n_suppressed),
             }
         if lat.size:
             out.update(

@@ -20,26 +20,63 @@ Three pillars, one per module:
   feature layout, applies per-pattern thresholds, and reports the
   executor + store counter glossary per tick.
 
+Fault tolerance rides on top: ticks are transactional
+(:meth:`DetectionService.submit` rolls back bit-exactly on any
+mid-tick failure), and :mod:`repro.stream.resilience` adds input
+quarantine, a write-ahead log + checkpoint recovery path, and a
+retrying degradation ladder — exercised by the fault-injection harness
+in :mod:`repro.stream.chaos`.
+
 `repro.core.streaming.StreamingMiner` survives as a thin deprecation
 shim over this subsystem.
 """
+from repro.stream.chaos import (
+    FaultInjector,
+    FaultSpec,
+    InjectedFault,
+    TransientFault,
+    make_poisoned_batch,
+)
 from repro.stream.delta import DeltaPlan, DeltaScheduler
+from repro.stream.resilience import (
+    DEGRADATION_LADDER,
+    BatchValidator,
+    ResilienceConfig,
+    ResilientDetectionService,
+    WriteAheadLog,
+)
 from repro.stream.service import (
     AlertBatch,
     DetectionService,
     TickReport,
     default_retain,
 )
-from repro.stream.store import GraphView, TemporalGraphStore, STORE_STAT_KEYS
+from repro.stream.store import (
+    GraphView,
+    STORE_STAT_KEYS,
+    TemporalGraphStore,
+    store_states_equal,
+)
 
 __all__ = [
     "TemporalGraphStore",
     "GraphView",
     "STORE_STAT_KEYS",
+    "store_states_equal",
     "DeltaScheduler",
     "DeltaPlan",
     "DetectionService",
     "AlertBatch",
     "TickReport",
     "default_retain",
+    "ResilientDetectionService",
+    "ResilienceConfig",
+    "BatchValidator",
+    "WriteAheadLog",
+    "DEGRADATION_LADDER",
+    "FaultInjector",
+    "FaultSpec",
+    "InjectedFault",
+    "TransientFault",
+    "make_poisoned_batch",
 ]

@@ -97,6 +97,13 @@ class TickReport:
     seconds: float
     stats: Dict[str, int]  # executor counter deltas (STAT_KEYS glossary)
     store: Dict[str, int]  # store counter deltas (STORE_STAT_KEYS)
+    # resilience counters (zero on a bare DetectionService; populated by
+    # repro.stream.resilience and the store's lateness-contract counter)
+    rejected: int = 0  # rows dropped by schema validation (whole batch)
+    quarantined: int = 0  # rows dead-lettered by the input quarantine
+    late_contract_breach: int = 0  # ingested rows below the eviction cutoff
+    degraded: Tuple[str, ...] = ()  # degradation-ladder steps this tick
+    retries: int = 0  # transient-failure retries before this tick committed
 
 
 @dataclasses.dataclass
@@ -214,10 +221,14 @@ class DetectionService:
         full_remine_fraction: float = 0.5,
         node_capacity: int = 64,
         witnesses: int = 0,
+        chaos=None,
     ):
         self.window = int(window)
         self.backend = backend
         self.witnesses = int(witnesses)
+        # fault-injection harness (repro.stream.chaos.FaultInjector);
+        # None in production — the hooks are no-ops then
+        self.chaos = chaos
         specs = [
             p
             if isinstance(p, PatternSpec)
@@ -266,6 +277,14 @@ class DetectionService:
         self.last_plan: Optional[DeltaPlan] = None
         # lifetime executor counters (STAT_KEYS glossary)
         self.stats = executor.new_stats()
+        # transactional-tick state: per-tick undo log of counts writes
+        # (appended by _mine_plan, replayed backwards on rollback)
+        self._txn_counts_undo: List[tuple] = []
+        # resilience plumbing (set per tick by ResilientDetectionService;
+        # inert defaults on a bare service)
+        self._tick_notes: Dict[str, object] = {}
+        self._tick_deadline: Optional[float] = None  # perf_counter instant
+        self._count_only = False  # ladder rung: skip score/alert stages
 
     # -- feature layout (repro.ml contract) -----------------------------
     @property
@@ -297,6 +316,38 @@ class DetectionService:
         """Counts of `name` aligned to global edge ids [0, n_edges_total)."""
         return self.counts[name][: self.store.n_edges_total]
 
+    # -- transactional ticks --------------------------------------------
+    def _fire(self, point: str) -> None:
+        """Chaos fault point (no-op without an injector)."""
+        if self.chaos is not None:
+            self.chaos.fire(point, self.tick)
+
+    def _begin_tick(self) -> dict:
+        """Stage the tick: memo of everything :meth:`_rollback_tick` must
+        restore if any stage (ingest/mine/score/witness) fails."""
+        self._txn_counts_undo = []
+        return {
+            "store": self.store.begin(),
+            "tick": self.tick,
+            "stats": dict(self.stats),
+            "last_report": self.last_report,
+            "last_plan": self.last_plan,
+        }
+
+    def _rollback_tick(self, txn: dict) -> None:
+        """Roll the store, counts, and tick counters back to the staged
+        pre-tick state — bit-exact (asserted by the chaos tests against a
+        pre-fault :meth:`TemporalGraphStore.state_dict` snapshot)."""
+        self.store.rollback(txn["store"])
+        for name, seeds, old in reversed(self._txn_counts_undo):
+            self.counts[name][seeds] = old
+        self._txn_counts_undo = []
+        self.tick = txn["tick"]
+        self.stats = dict(txn["stats"])
+        self.last_report = txn["last_report"]
+        self.last_plan = txn["last_plan"]
+        self._tick_ctx = None
+
     # -- mining ---------------------------------------------------------
     def _mine_plan(
         self, plan: DeltaPlan, view: GraphView, stats: Dict[str, int]
@@ -319,7 +370,14 @@ class DetectionService:
                 kernels_cache=self._kernels[name],
                 trace_keys=self._trace_keys[name],
             )
+            # stage the overwritten counts so _rollback_tick can undo a
+            # partially-mined tick bit-exactly (arrays were grown already,
+            # so writing `old` back always lands in the live buffer)
+            self._txn_counts_undo.append(
+                (name, seeds, self.counts[name][seeds].copy())
+            )
             self.counts[name][seeds] = cp.mine(view.local_seeds(seeds))
+            self._fire("mine")
             for k in stats:
                 stats[k] += cp.stats[k]
             if self.witnesses:
@@ -340,6 +398,7 @@ class DetectionService:
         """Top-k witnesses for every (alert seed, fired pattern) pair
         whose count was recomputed this tick, witness-mined on the tick's
         own view/device mirror and resolved into transaction hops."""
+        self._fire("witness")
         out: List[Dict[str, list]] = [dict() for _ in range(len(eids))]
         if self._tick_ctx is None:
             return out
@@ -374,6 +433,7 @@ class DetectionService:
         return out
 
     def _score(self, eids: np.ndarray) -> Tuple[np.ndarray, ...]:
+        self._fire("score")
         src, dst, t, amt = self.store.edge_fields(eids)
         counts = np.stack(
             [self.counts[n][eids] for n in self.pattern_names], axis=1
@@ -425,7 +485,27 @@ class DetectionService:
         amount: Optional[np.ndarray] = None,
     ) -> AlertBatch:
         """Ingest one transaction microbatch, re-mine its dirty frontier,
-        and return the scored alerts + the tick report."""
+        and return the scored alerts + the tick report.
+
+        The tick is **transactional**: a failure anywhere in
+        ingest/mine/score/witness rolls the store, counts, and tick
+        counters back to the pre-call state bit-exactly before the
+        exception propagates — a failed tick never leaves the service
+        diverged from the batch oracle."""
+        txn = self._begin_tick()
+        try:
+            return self._tick(src, dst, t, amount)
+        except BaseException:
+            self._rollback_tick(txn)
+            raise
+
+    def _tick(
+        self,
+        src: np.ndarray,
+        dst: np.ndarray,
+        t: np.ndarray,
+        amount: Optional[np.ndarray] = None,
+    ) -> AlertBatch:
         t0 = time.perf_counter()
         self.tick += 1
         self._tick_ctx = None
@@ -440,6 +520,7 @@ class DetectionService:
             )
         cold = self.store.n_live == 0
         eids = self.store.ingest(src, dst, t, amount)
+        self._fire("ingest")
         plan = self.scheduler.plan(self.store, src, dst, t, eids, cold=cold)
         self._grow_counts()
         use_full = plan.cold or (
@@ -466,12 +547,26 @@ class DetectionService:
     ) -> AlertBatch:
         # score + evidence BEFORE the stats/seconds snapshot, so witness
         # mining is accounted to this tick's report
+        notes = self._tick_notes
+        degraded = list(notes.get("degraded", ()))
         scored = None
         evidence = [] if self.witnesses else None
-        if plan is not None and len(plan.union_dirty):
+        if plan is not None and len(plan.union_dirty) and not self._count_only:
             scored = self._score(plan.union_dirty)
             if self.witnesses:
-                evidence = self._extract_evidence(scored[0], scored[7], stats)
+                # in-tick shed: if the deadline budget is already blown,
+                # drop evidence extraction (the most expensive optional
+                # stage) rather than blow it further
+                if (
+                    self._tick_deadline is not None
+                    and time.perf_counter() > self._tick_deadline
+                ):
+                    if "witnesses_off" not in degraded:
+                        degraded.append("witnesses_off")
+                else:
+                    evidence = self._extract_evidence(
+                        scored[0], scored[7], stats
+                    )
         for k in self.stats:
             if k == "jit_cache_entries":  # a gauge, not a counter
                 self.stats[k] = max(self.stats[k], stats[k])
@@ -498,6 +593,17 @@ class DetectionService:
             seconds=time.perf_counter() - t0,
             stats=stats,
             store=store_delta,
+            rejected=int(notes.get("rejected", 0)),
+            quarantined=int(notes.get("quarantined", 0)),
+            # breaches counted by the store on ingest, plus rows the
+            # quarantine dead-lettered for lateness before the store
+            # ever saw them (resilience late_policy="quarantine")
+            late_contract_breach=int(
+                store_delta.get("late_contract_breaches", 0)
+            )
+            + int(notes.get("late", 0)),
+            degraded=tuple(degraded),
+            retries=int(notes.get("retries", 0)),
         )
         self.last_report = report
         self.last_plan = plan

@@ -54,7 +54,12 @@ from repro.graph.csr import (
     csr_row_offsets,
 )
 
-__all__ = ["TemporalGraphStore", "GraphView", "STORE_STAT_KEYS"]
+__all__ = [
+    "TemporalGraphStore",
+    "GraphView",
+    "STORE_STAT_KEYS",
+    "store_states_equal",
+]
 
 STORE_STAT_KEYS = (
     "edges_ingested",
@@ -66,6 +71,11 @@ STORE_STAT_KEYS = (
     "snapshot_builds",
     "view_builds",
     "view_edges",
+    # edges that arrived BELOW the eviction cutoff — the feed broke the
+    # lateness contract the retention rule was derived from.  They are
+    # ingested (stale counts, never a crash) but the breach is no longer
+    # silent: TickReport surfaces the per-tick delta
+    "late_contract_breaches",
 )
 
 
@@ -434,6 +444,8 @@ class TemporalGraphStore:
         self._max_node = max(self._max_node, int(max(src.max(), dst.max())))
         self.t_high = max(self.t_high, int(t.max()))
         self.stats["edges_ingested"] += n
+        if self.retain is not None:
+            self.stats["late_contract_breaches"] += int((t < self._cutoff).sum())
         self._maybe_evict(int(t.min()))
         return eids
 
@@ -546,3 +558,186 @@ class TemporalGraphStore:
         self.stats["view_builds"] += 1
         self.stats["view_edges"] += len(eids)
         return GraphView(graph=g, node_ids=nodes, edge_ids=eids, full=False)
+
+    # -- transactional ingest (staged tick rollback) --------------------
+    def begin(self) -> dict:
+        """O(log E) transactional memo of the complete mutable state.
+
+        Nothing mutates run payload arrays in place — pushes append runs,
+        merges/evictions replace run objects with new ones, column
+        reallocations build new arrays, and in-place column writes only
+        land past ``_len`` — so holding *references* to the current run
+        arrays and columns plus the scalar state is an exact snapshot.
+        :meth:`rollback` restores it bit-for-bit (chaos tests assert via
+        :meth:`state_dict` equality)."""
+        return {
+            "base": self._base,
+            "len": self._len,
+            "max_node": self._max_node,
+            "t_high": self.t_high,
+            "cutoff": self._cutoff,
+            "node_cap": self.node_cap,
+            "cols": (self._src, self._dst, self._t, self._amt),
+            "out": [(r.indptr, r.nbr, r.t, r.eid) for r in self._out.runs],
+            "in": [(r.indptr, r.nbr, r.t, r.eid) for r in self._in.runs],
+            "stats": dict(self.stats),
+            "snap": self._snap,
+        }
+
+    def rollback(self, memo: dict) -> None:
+        """Restore the exact state captured by :meth:`begin` — the other
+        half of a transactional tick (a failed mine/score/witness stage
+        must leave the store as if its ingest never happened)."""
+        self._base = memo["base"]
+        self._len = memo["len"]
+        self._max_node = memo["max_node"]
+        self.t_high = memo["t_high"]
+        self._cutoff = memo["cutoff"]
+        self.node_cap = memo["node_cap"]
+        self._src, self._dst, self._t, self._amt = memo["cols"]
+        for stack, key in ((self._out, "out"), (self._in, "in")):
+            stack.node_cap = memo["node_cap"]
+            # grow_nodes reassigns indptr on live run objects, so rebuild
+            # runs from the memo'd array references
+            stack.runs = [
+                _Run(indptr=i, nbr=nb, t=t, eid=e)
+                for i, nb, t, e in memo[key]
+            ]
+        self.stats = dict(memo["stats"])
+        self._snap = memo["snap"]
+
+    # -- durable state (checkpoint/restore) -----------------------------
+    def state_dict(self) -> dict:
+        """Complete store state as a FIXED-structure pytree of numpy
+        arrays (checkpointable via
+        :func:`repro.distributed.checkpoint.save_checkpoint`): arrival
+        columns trimmed to the live length, each direction's run index
+        with the stacked ``indptr`` matrix + concatenated payload columns
+        + per-run sizes, the scalar state packed into ``meta``, and the
+        counters packed in ``STORE_STAT_KEYS`` order.  The structure does
+        not depend on the run count, so a fresh store's
+        :meth:`state_dict` is a valid ``tree_like`` for restore."""
+
+        def pack(stack: _RunStack) -> dict:
+            runs = stack.runs
+            return {
+                "indptr": (
+                    np.stack([r.indptr for r in runs])
+                    if runs
+                    else np.zeros((0, self.node_cap + 1), np.int64)
+                ),
+                "nbr": (
+                    np.concatenate([r.nbr for r in runs])
+                    if runs
+                    else np.zeros(0, np.int32)
+                ),
+                "t": (
+                    np.concatenate([r.t for r in runs])
+                    if runs
+                    else np.zeros(0, np.int64)
+                ),
+                "eid": (
+                    np.concatenate([r.eid for r in runs])
+                    if runs
+                    else np.zeros(0, np.int64)
+                ),
+                "sizes": np.array([r.n for r in runs], np.int64),
+            }
+
+        return {
+            "cols": {
+                "src": self._src[: self._len].copy(),
+                "dst": self._dst[: self._len].copy(),
+                "t": self._t[: self._len].copy(),
+                "amt": self._amt[: self._len].copy(),
+            },
+            "out": pack(self._out),
+            "in": pack(self._in),
+            "meta": np.array(
+                [
+                    self._base,
+                    self._len,
+                    self._max_node,
+                    self.t_high,
+                    self._cutoff,
+                    self.node_cap,
+                    -1 if self.retain is None else self.retain,
+                ],
+                np.int64,
+            ),
+            "stats": np.array(
+                [self.stats[k] for k in STORE_STAT_KEYS], np.int64
+            ),
+        }
+
+    def load_state(self, state: dict) -> None:
+        """Restore from a :meth:`state_dict` tree (bit-exact, run index
+        included — post-restore mining, maintenance, and counters behave
+        exactly as the checkpointed store would)."""
+        state = {
+            k: (
+                {kk: np.asarray(vv) for kk, vv in v.items()}
+                if isinstance(v, dict)
+                else np.asarray(v)
+            )
+            for k, v in state.items()
+        }
+        base, length, max_node, t_high, cutoff, node_cap, retain = (
+            int(x) for x in state["meta"]
+        )
+        self._base = base
+        self._len = length
+        self._max_node = max_node
+        self.t_high = t_high
+        self._cutoff = cutoff
+        self.node_cap = node_cap
+        self.retain = None if retain < 0 else retain
+        cap = _pow2ceil(max(1024, length))
+        for name, dtype in (
+            ("src", np.int32),
+            ("dst", np.int32),
+            ("t", np.int64),
+            ("amt", np.float32),
+        ):
+            col = np.zeros(cap, dtype=dtype)
+            col[:length] = state["cols"][name].astype(dtype)
+            setattr(self, "_" + name, col)
+
+        def unpack(stack: _RunStack, packed: dict) -> None:
+            stack.node_cap = node_cap
+            sizes = packed["sizes"].astype(np.int64)
+            offs = np.zeros(len(sizes) + 1, np.int64)
+            np.cumsum(sizes, out=offs[1:])
+            stack.runs = [
+                _Run(
+                    indptr=packed["indptr"][i].astype(np.int64),
+                    nbr=packed["nbr"][offs[i] : offs[i + 1]].astype(np.int32),
+                    t=packed["t"][offs[i] : offs[i + 1]].astype(np.int64),
+                    eid=packed["eid"][offs[i] : offs[i + 1]].astype(np.int64),
+                )
+                for i in range(len(sizes))
+            ]
+
+        unpack(self._out, state["out"])
+        unpack(self._in, state["in"])
+        self.stats = {
+            k: int(v) for k, v in zip(STORE_STAT_KEYS, state["stats"])
+        }
+        self._snap = None
+
+
+def store_states_equal(a: dict, b: dict, ignore_stats: bool = False) -> bool:
+    """Bit-exact equality of two :meth:`TemporalGraphStore.state_dict`
+    trees (the assertion primitive of the chaos/rollback tests)."""
+    for key in a:
+        if ignore_stats and key == "stats":
+            continue
+        va, vb = a[key], b[key]
+        if isinstance(va, dict):
+            if set(va) != set(vb) or not all(
+                np.array_equal(np.asarray(va[k]), np.asarray(vb[k])) for k in va
+            ):
+                return False
+        elif not np.array_equal(np.asarray(va), np.asarray(vb)):
+            return False
+    return True

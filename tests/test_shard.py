@@ -124,6 +124,38 @@ def test_sharded_full_portfolio_bit_exact_one_sync(graph):
     assert again.stats["schedule_hits"] > 0
 
 
+def test_sharded_worker_liveness(graph, tmp_path):
+    """Per-device dispatch-worker liveness: every sharded mine beats the
+    in-memory tracker (surfaced on MiningResult.worker_liveness) and —
+    with a heartbeat dir — the file-backed Heartbeat the training
+    launcher uses, so a supervisor reads device liveness the same way
+    for mining and training."""
+    hb_dir = str(tmp_path / "hb")
+    session = MiningSession(
+        graph, window=W, shard_heartbeat_dir=hb_dir
+    ).register("fan_in", "cycle3")
+    res = session.mine(backend="sharded")
+    lv = res.worker_liveness
+    assert lv is not None
+    devices = set(res.shard_devices)
+    assert set(lv["last_beat"]) == devices
+    assert all(n >= 2 for n in lv["beats"].values())  # pickup + done
+    assert set(lv["wall_medians"]) == devices
+    assert isinstance(lv["stragglers"], list)
+    # file-backed: one .hb per device, all alive
+    assert set(lv["alive"]) == devices
+    assert {f[:-3] for f in os.listdir(hb_dir) if f.endswith(".hb")} == devices
+    # repeated mines keep beating (cumulative count grows)
+    res2 = session.mine(backend="sharded")
+    assert all(
+        res2.worker_liveness["beats"][d] > lv["beats"][d] for d in devices
+    )
+    # plain mines (no heartbeat dir) still report in-memory liveness
+    plain = MiningSession(graph, window=W).register("fan_in")
+    lv3 = plain.mine(backend="sharded").worker_liveness
+    assert lv3 is not None and lv3["alive"] is None
+
+
 def test_gather_mode_and_dispatch_window(session):
     """Gather-mode selection + the overlapped-dispatch observability:
     a 1:1 partition->device mine reduces with the device collective

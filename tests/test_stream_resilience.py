@@ -1,0 +1,606 @@
+"""Fault tolerance of the streaming detection stack
+(`repro.stream.resilience` + `repro.stream.chaos`):
+
+* transactional ticks — a fault at EVERY stage (ingest/mine/score/
+  witness) rolls the store + counts + tick counters back bit-exactly;
+* WAL + checkpoint recovery — kill + restore + WAL replay yields counts
+  bit-identical to the uninterrupted run, eviction and out-of-order
+  feeds included; kill-mid-tick is exercised in a real subprocess
+  (chaos ``kill=True`` → ``os._exit(9)``) and kill-mid-checkpoint by an
+  aborted (uncommitted) step dir;
+* input quarantine — poisoned batches (NaN amounts, negative/overflow
+  timestamps, unknown dtypes, empty-after-quarantine) through
+  ``DetectionService.submit`` AND ``TriageServer.submit``, store
+  bit-exact vs batch recompute afterwards;
+* degradation ladder — transient-failure retry with backoff ascends
+  witnesses_off → single_device → count_only; deadline budget sheds and
+  recovers, every step on the tick report;
+* serving surface — TriageServer survives failed ticks (structured
+  errors), exposes health/readiness, and dedups audit alerts across
+  ticks on (seed, patterns, evidence hash).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.compiler import CompiledPattern
+from repro.core.patterns import build_pattern
+from repro.graph.csr import build_temporal_graph
+from repro.launch.serve import SubmitError, TriageServer
+from repro.stream import (
+    DEGRADATION_LADDER,
+    BatchValidator,
+    DetectionService,
+    FaultInjector,
+    InjectedFault,
+    ResilienceConfig,
+    ResilientDetectionService,
+    TransientFault,
+    WriteAheadLog,
+    make_poisoned_batch,
+    store_states_equal,
+)
+
+W = 64
+PORTFOLIO = ["fan_in", "cycle3"]
+THRESH = {"fan_in": 2, "cycle3": 1}
+
+
+def _stream(rng, n_nodes=120, n_edges=600, t_span=6000):
+    src = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    dst = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    fix = src == dst
+    dst[fix] = (dst[fix] + 1) % n_nodes
+    t = np.sort(rng.integers(0, t_span // 4, n_edges)).astype(np.int64) * 4
+    t = np.maximum(0, t + rng.integers(-8, 9, n_edges))  # OOO + dups
+    amt = rng.uniform(1.0, 500.0, n_edges).astype(np.float32)
+    return src, dst, t, amt
+
+
+def _batches(rng, n_batches=10, **kw):
+    src, dst, t, amt = _stream(rng, **kw)
+    return [
+        (src[ch], dst[ch], t[ch], amt[ch])
+        for ch in np.array_split(np.arange(len(src)), n_batches)
+    ]
+
+
+def _svc_state(svc):
+    return (
+        svc.store.state_dict(),
+        {n: svc.pattern_counts(n).copy() for n in svc.pattern_names},
+        svc.tick,
+    )
+
+
+def _assert_state_equal(a, b, ignore_stats=False):
+    assert store_states_equal(a[0], b[0], ignore_stats=ignore_stats)
+    assert set(a[1]) == set(b[1])
+    for n in a[1]:
+        np.testing.assert_array_equal(a[1][n], b[1][n], err_msg=n)
+    assert a[2] == b[2]
+
+
+# ----------------------------------------------------------------------
+# transactional ticks
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("point", ["ingest", "mine", "score", "witness"])
+def test_rollback_at_every_stage(point):
+    rng = np.random.default_rng(7)
+    chaos = FaultInjector()
+    svc = DetectionService(
+        PORTFOLIO, window=W, thresholds=THRESH, witnesses=2, chaos=chaos
+    )
+    feed = _batches(rng, n_batches=8)
+    for b in feed[:4]:
+        svc.submit(*b)
+    pre = _svc_state(svc)
+    chaos.arm(point, times=1)
+    with pytest.raises(TransientFault):
+        svc.submit(*feed[4])
+    assert chaos.log == [(point, pre[2] + 1)]  # the fault really fired
+    _assert_state_equal(pre, _svc_state(svc))
+
+    # the service keeps working after the rollback, and the resumed
+    # stream still matches a batch recompute over everything ingested
+    chaos.disarm()
+    for b in feed[4:]:
+        svc.submit(*b)
+    src = np.concatenate([b[0] for b in feed])
+    dst = np.concatenate([b[1] for b in feed])
+    t = np.concatenate([b[2] for b in feed])
+    full = build_temporal_graph(src, dst, t)
+    for name in svc.pattern_names:
+        want = CompiledPattern(build_pattern(name, W), full).mine()
+        np.testing.assert_array_equal(svc.pattern_counts(name), want)
+
+
+def test_rollback_is_bit_exact_under_eviction_and_growth():
+    """The hard rollback cases: the failed tick evicted edges, merged
+    runs, and grew node capacity — all must unwind."""
+    rng = np.random.default_rng(11)
+    chaos = FaultInjector()
+    svc = DetectionService(
+        PORTFOLIO, window=W, thresholds=THRESH, retain="auto",
+        lateness=4096, chaos=chaos, node_capacity=8,
+    )
+    feed = _batches(rng, n_batches=12, n_edges=700, t_span=40_000)
+    for b in feed[:8]:
+        svc.submit(*b)
+    assert svc.store.stats["edges_evicted"] > 0
+    pre = _svc_state(svc)
+    # new node ids force grow_nodes inside the doomed tick
+    big = feed[8]
+    big = (big[0] + 500, big[1] + 700, big[2], big[3])
+    chaos.arm("mine", times=1, exc=InjectedFault)
+    with pytest.raises(InjectedFault):
+        svc.submit(*big)
+    _assert_state_equal(pre, _svc_state(svc))
+
+
+# ----------------------------------------------------------------------
+# durable recovery (WAL + checkpoints)
+# ----------------------------------------------------------------------
+def _cfg(tmp_path, **kw):
+    return ResilienceConfig(
+        wal_dir=str(tmp_path / "wal"),
+        checkpoint_dir=str(tmp_path / "ckpt"),
+        **kw,
+    )
+
+
+def test_recovery_bit_identical_with_eviction_and_ooo(tmp_path):
+    rng = np.random.default_rng(13)
+    cfg = _cfg(tmp_path, checkpoint_every=4)
+    kw = dict(thresholds=THRESH, retain="auto", lateness=4096, witnesses=2)
+    svc = ResilientDetectionService(PORTFOLIO, window=W, resilience=cfg, **kw)
+    ref = DetectionService(PORTFOLIO, window=W, **kw)
+    feed = _batches(rng, n_batches=10, n_edges=700, t_span=40_000)
+    for b in feed:
+        svc.submit(*b)
+        ref.submit(*b)
+    assert svc.store.stats["edges_evicted"] > 0
+    # tick 10, cadence 4 -> checkpoint at 8 + WAL tail {9, 10}
+    assert svc.wal.ticks() == [9, 10]
+    live = _svc_state(svc)
+    del svc  # simulate the crash: only disk state survives
+    rec = ResilientDetectionService.recover(
+        PORTFOLIO, window=W, resilience=cfg, **kw
+    )
+    _assert_state_equal(live, _svc_state(rec))
+    # ...and identical to the never-faulted plain service
+    for n in rec.pattern_names:
+        np.testing.assert_array_equal(
+            rec.pattern_counts(n), ref.pattern_counts(n)
+        )
+    # the recovered service keeps streaming correctly
+    extra = _batches(np.random.default_rng(14), n_batches=1, n_edges=60,
+                     t_span=1000)[0]
+    extra = (extra[0], extra[1], extra[2] + 40_000, extra[3])
+    rec.submit(*extra)
+    ref.submit(*extra)
+    for n in rec.pattern_names:
+        np.testing.assert_array_equal(
+            rec.pattern_counts(n), ref.pattern_counts(n)
+        )
+
+
+def test_recovery_from_wal_only_and_from_fresh_dirs(tmp_path):
+    rng = np.random.default_rng(17)
+    cfg = _cfg(tmp_path, checkpoint_every=100)  # never checkpoints
+    svc = ResilientDetectionService(
+        PORTFOLIO, window=W, resilience=cfg, thresholds=THRESH
+    )
+    feed = _batches(rng, n_batches=5)
+    for b in feed:
+        svc.submit(*b)
+    live = _svc_state(svc)
+    rec = ResilientDetectionService.recover(
+        PORTFOLIO, window=W, resilience=cfg, thresholds=THRESH
+    )
+    _assert_state_equal(live, _svc_state(rec))
+    # empty dirs -> a fresh service at tick 0
+    cfg2 = _cfg(tmp_path / "fresh")
+    rec2 = ResilientDetectionService.recover(
+        PORTFOLIO, window=W, resilience=cfg2, thresholds=THRESH
+    )
+    assert rec2.tick == 0 and rec2.store.n_live == 0
+
+
+def test_aborted_checkpoint_is_ignored(tmp_path):
+    """Kill-mid-checkpoint: a step dir without COMMIT (the atomic-rename
+    protocol's abort residue) must not be restored from."""
+    rng = np.random.default_rng(19)
+    cfg = _cfg(tmp_path, checkpoint_every=2)
+    svc = ResilientDetectionService(
+        PORTFOLIO, window=W, resilience=cfg, thresholds=THRESH
+    )
+    for b in _batches(rng, n_batches=4):
+        svc.submit(*b)
+    live = _svc_state(svc)
+    # forge the kill-mid-write residue for a later, uncommitted step
+    bogus = os.path.join(cfg.checkpoint_dir, "step_00000099")
+    os.makedirs(bogus)
+    with open(os.path.join(bogus, "manifest.json"), "w") as f:
+        f.write("{")  # torn write
+    rec = ResilientDetectionService.recover(
+        PORTFOLIO, window=W, resilience=cfg, thresholds=THRESH
+    )
+    _assert_state_equal(live, _svc_state(rec))
+
+
+def test_failed_tick_leaves_no_wal_entry(tmp_path):
+    """A tick that exhausts retries must remove its WAL entry and
+    dead-letter the batch, so live (rolled-back) state == recovered
+    state."""
+    rng = np.random.default_rng(23)
+    chaos = FaultInjector()
+    cfg = _cfg(tmp_path, checkpoint_every=3, max_retries=1, backoff_s=0.0)
+    svc = ResilientDetectionService(
+        PORTFOLIO, window=W, resilience=cfg, thresholds=THRESH, chaos=chaos
+    )
+    feed = _batches(rng, n_batches=6)
+    for b in feed[:4]:
+        svc.submit(*b)
+    pre = _svc_state(svc)
+    chaos.arm("mine", times=5)  # outlasts every retry
+    with pytest.raises(TransientFault):
+        svc.submit(*feed[4])
+    chaos.disarm()
+    _assert_state_equal(pre, _svc_state(svc))
+    assert svc.wal.last_tick() == pre[2]  # doomed entry removed
+    assert svc.totals["dead_letter_ticks"] == 1
+    assert svc.dead_letters[-1]["reason"] == "tick_failed"
+    rec = ResilientDetectionService.recover(
+        PORTFOLIO, window=W, resilience=cfg, thresholds=THRESH
+    )
+    _assert_state_equal(pre, _svc_state(rec))
+
+
+_KILL_SCRIPT = r"""
+import sys
+import numpy as np
+sys.path.insert(0, {src!r})
+from repro.stream import (FaultInjector, ResilienceConfig,
+                          ResilientDetectionService)
+
+rng = np.random.default_rng(29)
+src = rng.integers(0, 120, 600).astype(np.int32)
+dst = rng.integers(0, 120, 600).astype(np.int32)
+fix = src == dst
+dst[fix] = (dst[fix] + 1) % 120
+t = np.sort(rng.integers(0, 1500, 600)).astype(np.int64) * 4
+t = np.maximum(0, t + rng.integers(-8, 9, 600))
+amt = rng.uniform(1.0, 500.0, 600).astype(np.float32)
+
+chaos = FaultInjector()
+chaos.arm("mine", tick=7, kill=True)  # SIGKILL mid-tick 7
+cfg = ResilienceConfig(wal_dir={wal!r}, checkpoint_dir={ckpt!r},
+                       checkpoint_every=4)
+svc = ResilientDetectionService(["fan_in", "cycle3"], window=64,
+                                resilience=cfg,
+                                thresholds={{"fan_in": 2, "cycle3": 1}},
+                                chaos=chaos)
+for ch in np.array_split(np.arange(600), 10):
+    svc.submit(src[ch], dst[ch], t[ch], amt[ch])
+raise SystemExit("unreachable: the kill must fire first")
+"""
+
+
+def test_kill_mid_tick_subprocess_recovers(tmp_path):
+    """The real thing: a subprocess dies via os._exit(9) halfway through
+    tick 7 (after the WAL append, after counts were partially written).
+    Recovery from its WAL + checkpoints must equal the uninterrupted
+    run's state after tick 6 — the killed tick never half-applies."""
+    src_dir = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    wal, ckpt = str(tmp_path / "wal"), str(tmp_path / "ckpt")
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         _KILL_SCRIPT.format(src=src_dir, wal=wal, ckpt=ckpt)],
+        capture_output=True,
+        text=True,
+    )
+    assert proc.returncode == 9, proc.stderr  # died mid-tick, as armed
+    # the doomed tick 7's WAL entry survives the kill (appended before
+    # the fault) — replaying it is CORRECT: it was accepted input
+    cfg = ResilienceConfig(wal_dir=wal, checkpoint_dir=ckpt)
+    rec = ResilientDetectionService.recover(
+        PORTFOLIO, window=W, resilience=cfg, thresholds=THRESH
+    )
+    assert rec.tick == 7
+    # oracle: the uninterrupted run over the same prefix
+    rng = np.random.default_rng(29)
+    s = rng.integers(0, 120, 600).astype(np.int32)
+    d = rng.integers(0, 120, 600).astype(np.int32)
+    fix = s == d
+    d[fix] = (d[fix] + 1) % 120
+    t = np.sort(rng.integers(0, 1500, 600)).astype(np.int64) * 4
+    t = np.maximum(0, t + rng.integers(-8, 9, 600))
+    amt = rng.uniform(1.0, 500.0, 600).astype(np.float32)
+    ref = DetectionService(PORTFOLIO, window=W, thresholds=THRESH)
+    for ch in np.array_split(np.arange(600), 10)[:7]:
+        ref.submit(s[ch], d[ch], t[ch], amt[ch])
+    _assert_state_equal(_svc_state(ref), _svc_state(rec), ignore_stats=True)
+
+
+# ----------------------------------------------------------------------
+# input quarantine
+# ----------------------------------------------------------------------
+def test_poisoned_batch_quarantined_store_stays_exact():
+    rng = np.random.default_rng(31)
+    svc = ResilientDetectionService(PORTFOLIO, window=W, thresholds=THRESH)
+    clean = _batches(rng, n_batches=3)
+    for b in clean:
+        svc.submit(*b)
+    s, d, t, a, bad = make_poisoned_batch(np.random.default_rng(1), t_base=6000)
+    rep = svc.submit(s, d, t, a).report
+    assert rep.quarantined == int(bad.sum())
+    assert rep.n_new == int((~bad).sum())
+    assert len(svc.dead_letters) == int(bad.sum())
+    reasons = {r["reason"] for r in svc.dead_letters}
+    assert "nan_amount" in reasons and "negative_timestamp" in reasons
+    # store == batch recompute over exactly the clean rows
+    srcs = np.concatenate([b[0] for b in clean] + [s[~bad].astype(np.int32)])
+    dsts = np.concatenate([b[1] for b in clean] + [d[~bad].astype(np.int32)])
+    ts = np.concatenate([b[2] for b in clean] + [t[~bad].astype(np.int64)])
+    full = build_temporal_graph(srcs, dsts, ts)
+    for name in svc.pattern_names:
+        want = CompiledPattern(build_pattern(name, W), full).mine()
+        np.testing.assert_array_equal(svc.pattern_counts(name), want)
+
+
+def test_unknown_dtype_rejects_whole_batch():
+    svc = ResilientDetectionService(PORTFOLIO, window=W, thresholds=THRESH)
+    rep = svc.submit(
+        np.array(["a", "b"]), np.array([1, 2]), np.array([3, 4])
+    ).report
+    assert rep.rejected == 2 and rep.n_new == 0
+    assert svc.store.n_live == 0
+    # length mismatch is a whole-batch reject too
+    rep = svc.submit(np.array([1, 2, 3]), np.array([1, 2]), np.array([3, 4])).report
+    assert rep.rejected == 3 and svc.store.n_live == 0
+
+
+def test_empty_after_quarantine_batch_is_a_clean_tick():
+    svc = ResilientDetectionService(PORTFOLIO, window=W, thresholds=THRESH)
+    batch = svc.submit(
+        np.array([1.0, 2.0]), np.array([2.0, 3.0]),
+        np.array([-5.0, np.nan]), np.array([1.0, 1.0]),
+    )
+    assert len(batch) == 0
+    assert batch.report.quarantined == 2
+    assert batch.report.path == "empty"
+    assert svc.store.n_live == 0 and svc.tick == 1
+
+
+def test_late_contract_breach_counted_not_silent():
+    """Edges below the eviction cutoff: the store counts them
+    (late_contract_breaches) and the TickReport surfaces them; the
+    quarantine's default policy dead-letters them instead."""
+    rng = np.random.default_rng(37)
+    kw = dict(thresholds=THRESH, retain=256)
+    base = DetectionService(PORTFOLIO, window=W, **kw)
+    for b in _batches(rng, n_batches=6, t_span=40_000):
+        base.submit(*b)
+    assert base.store._cutoff > 0
+    stale = np.array([1], np.int32), np.array([2], np.int32), np.array([0], np.int64)
+    rep = base.submit(*stale).report
+    assert rep.late_contract_breach == 1
+    assert base.store.stats["late_contract_breaches"] == 1
+    # resilient default: quarantined before the store sees it
+    res = ResilientDetectionService(
+        PORTFOLIO, window=W, **kw,
+        resilience=ResilienceConfig(late_policy="quarantine"),
+    )
+    for b in _batches(np.random.default_rng(37), n_batches=6, t_span=40_000):
+        res.submit(*b)
+    rep = res.submit(*stale).report
+    assert rep.late_contract_breach == 1 and rep.quarantined == 1
+    assert res.store.stats["late_contract_breaches"] == 0
+    # explicit ingest policy reproduces the base behavior
+    res2 = ResilientDetectionService(
+        PORTFOLIO, window=W, **kw,
+        resilience=ResilienceConfig(late_policy="ingest"),
+    )
+    for b in _batches(np.random.default_rng(37), n_batches=6, t_span=40_000):
+        res2.submit(*b)
+    rep = res2.submit(*stale).report
+    assert rep.late_contract_breach == 1 and rep.quarantined == 0
+    assert res2.store.stats["late_contract_breaches"] == 1
+
+
+def test_validator_unit():
+    v = BatchValidator()
+    src = np.array([1.0, -1.0, 2.5, 3.0])
+    dst = np.array([2.0, 2.0, 2.0, 2.0])
+    t = np.array([10.0, 10.0, 10.0, 1e19])
+    s, d, t2, a, records, counts = v.validate(src, dst, t, None, cutoff=0)
+    assert counts["quarantined"] == 3 and len(s) == 1
+    assert {r["reason"] for r in records} == {
+        "negative_src", "non_integer_src", "timestamp_overflow"
+    }
+    assert s.dtype == np.int32 and t2.dtype == np.int64 and a is None
+
+
+# ----------------------------------------------------------------------
+# degradation ladder + retry
+# ----------------------------------------------------------------------
+def test_transient_retry_ascends_ladder():
+    rng = np.random.default_rng(41)
+    chaos = FaultInjector()
+    svc = ResilientDetectionService(
+        PORTFOLIO, window=W, thresholds=THRESH, witnesses=2, chaos=chaos,
+        resilience=ResilienceConfig(max_retries=2, backoff_s=0.0),
+    )
+    feed = _batches(rng, n_batches=4)
+    for b in feed[:2]:
+        svc.submit(*b)
+    chaos.arm("mine", times=2)  # fail twice, succeed on the third try
+    batch = svc.submit(*feed[2])
+    assert batch.report.retries == 2
+    assert batch.report.degraded == DEGRADATION_LADDER[:2]
+    assert len(chaos.log) == 2
+    # the successful (degraded) tick's counts are still exact
+    src = np.concatenate([b[0] for b in feed[:3]])
+    dst = np.concatenate([b[1] for b in feed[:3]])
+    t = np.concatenate([b[2] for b in feed[:3]])
+    full = build_temporal_graph(src, dst, t)
+    for name in svc.pattern_names:
+        want = CompiledPattern(build_pattern(name, W), full).mine()
+        np.testing.assert_array_equal(svc.pattern_counts(name), want)
+    # the shared kernel caches and witness config came back
+    assert svc.witnesses == 2 and not svc._count_only
+    nxt = svc.submit(*feed[3])
+    assert nxt.report.retries == 0 and nxt.report.degraded == ()
+
+
+def test_deadline_budget_sheds_and_recovers():
+    rng = np.random.default_rng(43)
+    svc = ResilientDetectionService(
+        PORTFOLIO, window=W, thresholds=THRESH, witnesses=2,
+        resilience=ResilienceConfig(
+            deadline_ms=0.0, recover_after_ticks=2  # every tick breaches
+        ),
+    )
+    feed = _batches(rng, n_batches=6)
+    svc.submit(*feed[0])
+    assert svc._level == 1  # breach raised the standing level
+    rep = svc.submit(*feed[1]).report
+    assert "witnesses_off" in rep.degraded
+    assert svc._level == 2  # second breach climbed another rung
+    # widen the budget: each recover_after_ticks clean ticks decay a rung
+    svc.resilience.deadline_ms = 60_000.0
+    for b in feed[2:6]:
+        svc.submit(*b)
+    assert svc._level == 0
+
+
+def test_count_only_rung_still_counts_exactly():
+    rng = np.random.default_rng(47)
+    svc = ResilientDetectionService(
+        PORTFOLIO, window=W, thresholds=THRESH, witnesses=2
+    )
+    svc._level = 3  # pin the harshest rung
+    feed = _batches(rng, n_batches=3)
+    for b in feed:
+        batch = svc.submit(*b)
+        assert len(batch) == 0  # no alerts in count_only
+        assert batch.report.degraded == DEGRADATION_LADDER
+    src = np.concatenate([b[0] for b in feed])
+    dst = np.concatenate([b[1] for b in feed])
+    t = np.concatenate([b[2] for b in feed])
+    full = build_temporal_graph(src, dst, t)
+    for name in svc.pattern_names:
+        want = CompiledPattern(build_pattern(name, W), full).mine()
+        np.testing.assert_array_equal(svc.pattern_counts(name), want)
+
+
+# ----------------------------------------------------------------------
+# serving surface (TriageServer)
+# ----------------------------------------------------------------------
+def test_triage_server_survives_failed_ticks_and_reports_health():
+    rng = np.random.default_rng(53)
+    chaos = FaultInjector()
+    svc = ResilientDetectionService(
+        PORTFOLIO, window=W, thresholds=THRESH, chaos=chaos,
+        resilience=ResilienceConfig(max_retries=0),
+    )
+    server = TriageServer(svc)
+    feed = _batches(rng, n_batches=4)
+    server.submit(*feed[0])
+    pre = _svc_state(svc)
+    chaos.arm("mine", times=1, exc=InjectedFault)
+    err = server.submit(*feed[1])
+    assert isinstance(err, SubmitError)
+    assert err.error == "InjectedFault" and err.rolled_back
+    _assert_state_equal(pre, _svc_state(svc))
+    # still serving
+    chaos.disarm()
+    out = server.submit(*feed[2])
+    assert not isinstance(out, SubmitError)
+    h = server.health()
+    assert h["ready"] and h["errors"] == 1
+    assert h["last_error"]["error"] == "InjectedFault"
+    assert h["service"]["tick"] == svc.tick
+    assert server.ready()
+    server.close()
+    assert not server.ready()
+
+
+def test_triage_server_poisoned_input_containment(tmp_path):
+    svc = ResilientDetectionService(PORTFOLIO, window=W, thresholds=THRESH)
+    server = TriageServer(svc, audit_path=str(tmp_path / "audit.jsonl"))
+    s, d, t, a, bad = make_poisoned_batch(np.random.default_rng(3))
+    batch = server.submit(s, d, t, a)
+    assert not isinstance(batch, SubmitError)
+    assert batch.report.quarantined == int(bad.sum())
+    # base (non-resilient) service: poison raises inside, server contains
+    raw = DetectionService(PORTFOLIO, window=W, thresholds=THRESH)
+    raw_server = TriageServer(raw)
+    err = raw_server.submit(s, d, t, a)
+    assert isinstance(err, SubmitError)
+    assert raw.store.n_live == 0  # rolled back, not corrupted
+    server.close()
+
+
+def test_audit_log_dedups_repeat_alerts(tmp_path):
+    """A seed re-firing with identical (patterns, evidence) must not
+    re-emit its audit line; close() flushes one repeat_count summary."""
+    rng = np.random.default_rng(59)
+    path = tmp_path / "audit.jsonl"
+    svc = DetectionService(["fan_in"], window=W, thresholds={"fan_in": 2})
+    server = TriageServer(svc, audit_path=str(path))
+    # a stable fan-in hub re-mined every tick: same seeds re-fire with
+    # the same counts until new spokes arrive
+    hub_src = np.arange(2, 8, dtype=np.int32)
+    hub_dst = np.zeros(6, dtype=np.int32)
+    hub_t = np.full(6, 100, dtype=np.int64)
+    server.submit(hub_src, hub_dst, hub_t)
+    n_first = server.n_alerts
+    assert n_first > 0
+    assert server.n_suppressed == 0
+    # re-touch the hub so the same seeds re-fire: (eid, patterns,
+    # evidence) is unchanged -> suppressed, not re-emitted
+    server.submit(
+        np.array([8], np.int32), np.array([0], np.int32),
+        np.array([101], np.int64),
+    )
+    server.submit(
+        np.array([9], np.int32), np.array([0], np.int32),
+        np.array([102], np.int64),
+    )
+    assert server.n_suppressed > 0
+    server.close()
+    lines = [json.loads(l) for l in path.read_text().splitlines()]
+    alerts = [l for l in lines if "eid" in l and not l.get("dedup")]
+    dedups = [l for l in lines if l.get("dedup")]
+    # one audit line per distinct alert key, ever
+    keys = {(a["eid"], tuple(a["patterns"])) for a in alerts}
+    assert len(alerts) == len(keys)
+    assert server.n_alerts > len(alerts)  # some alerts were suppressed
+    assert server.n_suppressed == sum(d["repeat_count"] - 1 for d in dedups)
+    assert all(d["repeat_count"] >= 2 for d in dedups)
+
+
+# ----------------------------------------------------------------------
+# WAL unit behavior
+# ----------------------------------------------------------------------
+def test_wal_round_trip_and_prune(tmp_path):
+    wal = WriteAheadLog(str(tmp_path / "wal"))
+    rng = np.random.default_rng(61)
+    for k in range(1, 5):
+        wal.append(k, rng.integers(0, 9, 4), rng.integers(0, 9, 4),
+                   np.arange(4) + k, None if k == 2 else rng.uniform(size=4))
+    assert wal.ticks() == [1, 2, 3, 4] and wal.last_tick() == 4
+    got = dict(wal.entries(after=2))
+    assert sorted(got) == [3, 4]
+    assert got[3][3] is not None and got[3][0].dtype == np.int32
+    assert next(wal.entries(after=1))[1][3] is None  # tick 2 had no amounts
+    wal.prune_through(3)
+    assert wal.ticks() == [4]
+    wal.remove(4)
+    assert wal.last_tick() is None
