@@ -238,6 +238,10 @@ def _run_isolated(args, parts_list):
             "--out", child_out,
             "--no-isolate-points",
         ]
+        if getattr(args, "trace_dir", None):
+            # one trace per isolated curve point (its own process owns
+            # the devices and the spans)
+            cmd += ["--trace-dir", args.trace_dir]
         proc = subprocess.run(cmd, capture_output=True, text=True)
         for line in proc.stdout.splitlines():
             if line.startswith("shard/") or line.startswith("# "):
@@ -312,6 +316,12 @@ def main():
         "subprocess per point (risks vm.max_map_count exhaustion from "
         "accumulated per-device JIT executables at large scale)",
     )
+    ap.add_argument(
+        "--trace-dir",
+        default=None,
+        help="capture a repro.obs Chrome trace (per-shard dispatch "
+        "spans) + metrics snapshot of the bench run",
+    )
     args = ap.parse_args()
     parts_list = tuple(int(p) for p in args.parts_list.split(","))
 
@@ -328,15 +338,21 @@ def main():
         print(f"# requested {args.devices} devices, got {got} (degrading)")
 
     print("name,us_per_call,derived")
-    run(
-        dataset=args.dataset,
-        scale=args.scale,
-        window=args.window,
-        n_seeds=args.seeds,
-        parts_list=parts_list,
-        out_path=args.out,
-        monotone_slack=args.monotone_slack,
+    from benchmarks.common import traced
+
+    trace_name = (
+        f"shard_parts{parts_list[0]}" if len(parts_list) == 1 else "shard"
     )
+    with traced(args.trace_dir, trace_name):
+        run(
+            dataset=args.dataset,
+            scale=args.scale,
+            window=args.window,
+            n_seeds=args.seeds,
+            parts_list=parts_list,
+            out_path=args.out,
+            monotone_slack=args.monotone_slack,
+        )
 
 
 if __name__ == "__main__":

@@ -166,11 +166,20 @@ if __name__ == "__main__":
     ap.add_argument("--window", type=int, default=4096)
     ap.add_argument("--baseline-ticks", type=int, default=3)
     ap.add_argument("--out", default=OUT_PATH)
-    a = ap.parse_args()
-    run(
-        scale=a.scale,
-        n_batches=a.batches,
-        window=a.window,
-        baseline_ticks=a.baseline_ticks,
-        out_path=a.out,
+    ap.add_argument(
+        "--trace-dir",
+        default=None,
+        help="capture a repro.obs Chrome trace (per-stage tick spans) + "
+        "metrics snapshot of the bench run",
     )
+    a = ap.parse_args()
+    from benchmarks.common import traced
+
+    with traced(a.trace_dir, "streaming"):
+        run(
+            scale=a.scale,
+            n_batches=a.batches,
+            window=a.window,
+            baseline_ticks=a.baseline_ticks,
+            out_path=a.out,
+        )

@@ -23,3 +23,41 @@ def timeit(fn, *args, repeat: int = 1, **kw):
         times.append(time.perf_counter() - t0)
     times.sort()
     return result, times[len(times) // 2]
+
+
+def traced(trace_dir, name: str):
+    """Context manager: enable `repro.obs` tracing for one bench job and
+    export ``{trace_dir}/{name}.trace.json`` (Chrome trace-event JSON —
+    load in chrome://tracing or https://ui.perfetto.dev) plus
+    ``{trace_dir}/{name}.metrics.json`` (the metrics-registry snapshot)
+    on exit.  A no-op yielding immediately when ``trace_dir`` is None,
+    so call sites stay unconditional."""
+    import contextlib
+
+    @contextlib.contextmanager
+    def _cm():
+        if not trace_dir:
+            yield
+            return
+        import json as _json
+        import os as _os
+
+        from repro.obs import metrics as obs_metrics
+        from repro.obs import trace as obs_trace
+
+        _os.makedirs(trace_dir, exist_ok=True)
+        tracer = obs_trace.get_tracer()
+        tracer.reset()
+        tracer.enable()
+        try:
+            yield
+        finally:
+            tracer.disable()
+            path = _os.path.join(trace_dir, f"{name}.trace.json")
+            tracer.export_chrome(path)
+            with open(_os.path.join(trace_dir, f"{name}.metrics.json"), "w") as f:
+                _json.dump(obs_metrics.get_registry().snapshot(), f, indent=2)
+            print(f"# wrote {path} ({len(tracer.spans())} spans)")
+            tracer.reset()
+
+    return _cm()

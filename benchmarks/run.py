@@ -15,7 +15,7 @@ import time
 import traceback
 
 
-def _run_shard_subprocess() -> None:
+def _run_shard_subprocess(trace_dir=None) -> None:
     """bench_shard needs --xla_force_host_platform_device_count before
     jax backend init; by the time the suite reaches it this process has
     long been initialized with the real (single) device, so the shard
@@ -26,12 +26,12 @@ def _run_shard_subprocess() -> None:
     env["XLA_FLAGS"] = (
         env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
     ).strip()
-    subprocess.run(
-        [sys.executable, "-m", "benchmarks.bench_shard",
-         "--out", os.path.abspath(bench_shard.ROOT_OUT)],
-        check=True,
-        env=env,
-    )
+    cmd = [sys.executable, "-m", "benchmarks.bench_shard",
+           "--out", os.path.abspath(bench_shard.ROOT_OUT)]
+    if trace_dir:
+        # the trace must come from the subprocess that owns the devices
+        cmd += ["--trace-dir", os.path.abspath(trace_dir)]
+    subprocess.run(cmd, check=True, env=env)
 
 
 def main() -> None:
@@ -42,6 +42,12 @@ def main() -> None:
         "scaling,f1,fraudgt,roofline",
         help="comma list: kernels,mining,portfolio,streaming,resilience,"
         "shard,witness,scaling,f1,fraudgt,roofline",
+    )
+    ap.add_argument(
+        "--trace-dir",
+        default=None,
+        help="enable repro.obs tracing and write one Chrome trace JSON "
+        "(Perfetto-loadable) + metrics snapshot per bench job",
     )
     args = ap.parse_args()
     only = set(args.only.split(","))
@@ -96,7 +102,9 @@ def main() -> None:
         # the shard bench is the multi-device scaling trajectory: always
         # emit its BENCH_shard.json (scaling curve + balance + exactness)
         # at the repo root
-        jobs.append(("shard", _run_shard_subprocess))
+        jobs.append(
+            ("shard", lambda: _run_shard_subprocess(args.trace_dir))
+        )
     if "witness" in only:
         from benchmarks import bench_witness
 
@@ -123,10 +131,15 @@ def main() -> None:
 
         jobs.append(("roofline", bench_roofline.run))
 
+    from benchmarks.common import traced
+
     failures = []
     for name, fn in jobs:
         try:
-            fn()
+            # the shard job traces inside its own subprocess (the span
+            # capture must live where the devices do)
+            with traced(None if name == "shard" else args.trace_dir, name):
+                fn()
         except Exception as e:  # keep the suite going, report at the end
             failures.append((name, e))
             traceback.print_exc()

@@ -47,6 +47,7 @@ from repro.core.compiler import (
     BUCKET_LADDER,
     CompiledPattern,
     StageGraphIR,
+    _timed_first_call,
     analyze_stage_graph,
 )
 from repro.core.spec import (
@@ -62,6 +63,7 @@ from repro.core.spec import (
 )
 from repro.api.dsl import PatternBuilder
 from repro.graph.csr import TemporalGraph
+from repro.obs import trace as obs_trace
 
 __all__ = [
     "MiningSession",
@@ -298,6 +300,11 @@ class _FusedSeedPlan:
                 fn = self._jitted.get(unit_sel)
                 if fn is None:
                     fn = self._build(unit_sel)
+                    if obs_trace.is_enabled():
+                        # time the lazy jit's synchronous first-call
+                        # trace+compile under a "compile" span; kernels
+                        # minted while tracing is off stay unwrapped
+                        fn = _timed_first_call(fn, "fused", unit_sel)
                     self._jitted[unit_sel] = fn
         g = self.g
         n = len(seed_eids)
@@ -311,23 +318,29 @@ class _FusedSeedPlan:
         total = sum(widths)
         # one padded staging buffer per field (padding only ever lands in
         # the tail chunk), one host→device transfer for the whole batch
-        ss = np.full(total, -1, np.int32)
-        dd = np.full(total, -1, np.int32)
-        tt = np.zeros(total, np.int32)
-        ss[:n] = g.src[seed_eids]
-        dd[:n] = g.dst[seed_eids]
-        tt[:n] = g.t[seed_eids]
-        dev_s, dev_d, dev_t = jax.device_put((ss, dd, tt), device)
-        stats["bytes_h2d"] += int(ss.nbytes + dd.nbytes + tt.nbytes)
-        chunks = []
-        s0 = 0
-        for w in widths:
-            sl = slice(s0, s0 + w)
-            chunks.append(fn(dg, dev_s[sl], dev_d[sl], dev_t[sl]))
-            stats["kernel_calls"] += 1
-            stats["padded_elements"] += w * n_units
-            s0 += w
-        return chunks[0] if len(chunks) == 1 else jnp.concatenate(chunks)
+        with obs_trace.span(
+            "stage", stats=stats, strat="fused", n_seeds=n
+        ):
+            ss = np.full(total, -1, np.int32)
+            dd = np.full(total, -1, np.int32)
+            tt = np.zeros(total, np.int32)
+            ss[:n] = g.src[seed_eids]
+            dd[:n] = g.dst[seed_eids]
+            tt[:n] = g.t[seed_eids]
+            dev_s, dev_d, dev_t = jax.device_put((ss, dd, tt), device)
+            stats["bytes_h2d"] += int(ss.nbytes + dd.nbytes + tt.nbytes)
+        with obs_trace.span(
+            "launch", stats=stats, strat="fused", n_chunks=len(widths)
+        ):
+            chunks = []
+            s0 = 0
+            for w in widths:
+                sl = slice(s0, s0 + w)
+                chunks.append(fn(dg, dev_s[sl], dev_d[sl], dev_t[sl]))
+                stats["kernel_calls"] += 1
+                stats["padded_elements"] += w * n_units
+                s0 += w
+            return chunks[0] if len(chunks) == 1 else jnp.concatenate(chunks)
 
     def mine_units(
         self,
@@ -351,9 +364,10 @@ class _FusedSeedPlan:
         if n == 0 or len(unit_sel) == 0:
             return np.zeros((n, len(unit_sel)), dtype=np.int64)
         dev_out = self.launch_units(seed_eids, stats, unit_sel)
-        host = np.asarray(dev_out)  # THE one host sync of the fused pass
-        stats["host_syncs"] += 1
-        stats["bytes_d2h"] += int(host.nbytes)
+        with obs_trace.span("gather", stats=stats, mode="fused"):
+            host = np.asarray(dev_out)  # THE one host sync of the fused pass
+            stats["host_syncs"] += 1
+            stats["bytes_d2h"] += int(host.nbytes)
         return host[:n].astype(np.int64)
 
     def assemble(

@@ -85,6 +85,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import executor, ops
+from repro.obs import trace as obs_trace
 from repro.core.spec import (
     NEG_INF,
     POS_INF,
@@ -441,6 +442,27 @@ def _graph_rows(dg: DeviceGraph, direction: str):
     if direction == "out":
         return dg.out_indptr, dg.out_nbr, dg.out_t, dg.out_t_sorted
     return dg.in_indptr, dg.in_nbr, dg.in_t, dg.in_t_sorted
+
+
+def _timed_first_call(fn: Callable, pattern: str, key: Tuple) -> Callable:
+    """Wrap a fresh jitted kernel so its first invocation is timed under
+    a ``compile`` span (jax traces + compiles synchronously on first
+    call; later calls hit the executable cache).  The wrapper races
+    benignly under sharded dispatch — both threads would pay the same
+    compile, and only one span is recorded per winner.  No host sync is
+    added: the first call still returns an async device array."""
+    state = {"first": True}
+
+    def wrapper(*args):
+        if state["first"]:
+            state["first"] = False
+            with obs_trace.span(
+                "compile", pattern=pattern, trace_key=str(key)
+            ):
+                return fn(*args)
+        return fn(*args)
+
+    return wrapper
 
 
 class CompiledPattern:
@@ -1162,6 +1184,17 @@ class CompiledPattern:
                 fn = self._kernels.get(key)
                 if fn is None:
                     fn = jax.jit(self._build_kernel(strat, dims, sweeps, branch))
+                    if obs_trace.is_enabled():
+                        # time the FIRST invocation under a `compile`
+                        # span: jax traces + compiles synchronously at
+                        # first call, so that call's wall IS the
+                        # cold-start cost of this trace key (open item
+                        # 5's gauge, per pattern per shape).  Kernels
+                        # minted while tracing is disabled stay
+                        # unwrapped — zero steady-state overhead.
+                        fn = _timed_first_call(
+                            fn, self.spec.name, key
+                        )
                     self._kernels[key] = fn
         return fn
 
@@ -1460,7 +1493,13 @@ class CompiledPattern:
         # partitions' schedules concurrently (that concurrency is the whole
         # point of overlapped dispatch); keys differ across partitions so a
         # duplicated build is rare and benign — first insert wins.
-        sched = self._build_schedule(seed_eids, bulk_only=bulk_only)
+        with obs_trace.span(
+            "schedule_build",
+            pattern=self.spec.name,
+            n_seeds=len(seed_eids),
+            bulk_only=bulk_only,
+        ):
+            sched = self._build_schedule(seed_eids, bulk_only=bulk_only)
         with self._sched_lock:
             existing = self._schedules.get(key)
             if existing is not None:

@@ -51,6 +51,16 @@ partials into int64 numpy, so totals past 2^31 were representable at the
 cost of a host sync per launch; in this regime such a count would wrap.
 No realistic per-edge typology count approaches 2^31 — revisit with an
 int32 hi/lo pair if one ever does.)
+
+Tracing (`repro.obs.trace`, off by default): when the global tracer is
+enabled, each bucket group contributes a ``stage`` span (the staging
+``device_put``, with its ``bytes_h2d`` delta attached) and a ``launch``
+span (the chunk dispatch loop, with ``kernel_calls`` /
+``padded_elements`` deltas), and :func:`fetch` contributes a ``gather``
+span.  Spans time *dispatch*, not device completion — launches are
+asynchronous, so a closed ``launch`` span means work was submitted, and
+only the blocking ``gather`` span covers real device execution.  The
+tracer never adds a host sync; disabled, each span site is one branch.
 """
 from __future__ import annotations
 
@@ -61,6 +71,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 import jax
 import jax.numpy as jnp
+
+from repro.obs import trace as obs_trace
 
 __all__ = [
     "STAT_KEYS",
@@ -287,27 +299,34 @@ def execute(
     with jax.default_device(device):  # allocate the accumulator in place
         out = jnp.zeros(n_out, jnp.int32)
     for grp in groups:
-        dev = jax.device_put(grp.staging, device)
-        stats["bytes_h2d"] += sum(int(a.nbytes) for a in grp.staging)
+        with obs_trace.span(
+            "stage", stats=stats, strat=grp.strat, dims=str(grp.dims)
+        ):
+            dev = jax.device_put(grp.staging, device)
+            stats["bytes_h2d"] += sum(int(a.nbytes) for a in grp.staging)
         fn = kernel_for(grp.strat, grp.dims, grp.sweeps, grp.branch)
-        s0 = 0
-        for w in grp.widths:
-            sl = slice(s0, s0 + w)
-            ss, dd, tt, ff, fft, seg = (a[sl] for a in dev)
-            res = fn(dg, ss, dd, tt, ff, fft)
-            out = _scatter_add(out, seg, res)
-            # trace_tag carries caller-side trace-key components (the
-            # compiled plan's n_iters) so cross-tick gauges don't collide
-            trace_keys.add(trace_tag + (grp.strat, grp.dims, grp.sweeps, grp.branch, w))
-            stats["kernel_calls"] += 1
-            stats["padded_elements"] += w * grp.per_row * grp.n_sweep
-            s0 += w
+        with obs_trace.span(
+            "launch", stats=stats, strat=grp.strat, dims=str(grp.dims)
+        ):
+            s0 = 0
+            for w in grp.widths:
+                sl = slice(s0, s0 + w)
+                ss, dd, tt, ff, fft, seg = (a[sl] for a in dev)
+                res = fn(dg, ss, dd, tt, ff, fft)
+                out = _scatter_add(out, seg, res)
+                # trace_tag carries caller-side trace-key components (the
+                # compiled plan's n_iters) so cross-tick gauges don't collide
+                trace_keys.add(trace_tag + (grp.strat, grp.dims, grp.sweeps, grp.branch, w))
+                stats["kernel_calls"] += 1
+                stats["padded_elements"] += w * grp.per_row * grp.n_sweep
+                s0 += w
     return out
 
 
 def fetch(out_dev, stats: Dict[str, int]) -> np.ndarray:
     """THE host sync: one blocking transfer of the finished counts."""
-    host = np.asarray(out_dev)
-    stats["host_syncs"] += 1
-    stats["bytes_d2h"] += int(host.nbytes)
+    with obs_trace.span("gather", stats=stats, mode="fetch"):
+        host = np.asarray(out_dev)
+        stats["host_syncs"] += 1
+        stats["bytes_d2h"] += int(host.nbytes)
     return host

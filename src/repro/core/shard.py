@@ -64,6 +64,8 @@ import jax.numpy as jnp
 from repro.core import executor
 from repro.distributed.fault_tolerance import Heartbeat, StragglerMonitor
 from repro.graph.partition import PartitionPlan
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 __all__ = [
     "ShardContext",
@@ -126,10 +128,25 @@ class ShardContext:
         self.stragglers = StragglerMonitor()
 
     def beat(self, device, shard: int) -> None:
-        """Record liveness of ``device``'s dispatch worker at ``shard``."""
+        """Record liveness of ``device``'s dispatch worker at ``shard``.
+        Every beat also lands as a pair of `repro.obs` gauge samples
+        (last-beat instant + cumulative beats, labeled by device), so a
+        scrape of the metrics registry sees worker liveness without
+        touching ``MiningResult.worker_liveness``."""
         key = str(device)
         self.last_beat[key] = time.time()
         self.beat_steps[key] = self.beat_steps.get(key, 0) + 1
+        reg = obs_metrics.get_registry()
+        reg.gauge(
+            "repro_shard_worker_last_beat_seconds",
+            help="unix time of the device dispatch worker's last beat",
+            labels={"device": key},
+        ).set(self.last_beat[key])
+        reg.gauge(
+            "repro_shard_worker_beats",
+            help="cumulative dispatch-worker liveness beats",
+            labels={"device": key},
+        ).set(self.beat_steps[key])
         if self.heartbeat_dir is not None:
             hb = self._heartbeats.get(key)
             if hb is None:
@@ -248,11 +265,12 @@ def gather(outs, stats: Dict[str, int]):
     """Host-side gather fallback (time-shared ``n_parts > n_devices``):
     a single blocking ``device_get`` over every shard's finished device
     outputs (a pytree spanning all mining devices)."""
-    host = jax.device_get(outs)
-    stats["host_syncs"] += 1
-    stats["bytes_d2h"] += int(
-        sum(a.nbytes for a in jax.tree_util.tree_leaves(host))
-    )
+    with obs_trace.span("gather", stats=stats, mode="host"):
+        host = jax.device_get(outs)
+        stats["host_syncs"] += 1
+        stats["bytes_d2h"] += int(
+            sum(a.nbytes for a in jax.tree_util.tree_leaves(host))
+        )
     return host
 
 
@@ -276,20 +294,23 @@ def collective_gather(placed, devices, stats: Dict[str, int]):
 
     from repro.launch.mesh import make_shard_mesh  # lazy: no import cycle
 
-    keys = list(placed[0])
-    shapes = [placed[0][k].shape for k in keys]
-    dtypes = [placed[0][k].dtype for k in keys]
-    flat = [
-        _flatten_outs_jit([p_out[k] for k in keys]) for p_out in placed
-    ]  # one (1, L) row per shard, resident on that shard's device
-    mesh = make_shard_mesh(devices)
-    sharding = NamedSharding(mesh, PartitionSpec("shard"))
-    arr = jax.make_array_from_single_device_arrays(
-        (len(placed),) + flat[0].shape[1:], sharding, flat
-    )
-    host_flat = jax.device_get(_sum_shards_jit(arr))  # THE host sync
-    stats["host_syncs"] += 1
-    stats["bytes_d2h"] += int(host_flat.nbytes)
+    with obs_trace.span(
+        "gather", stats=stats, mode="collective", n_shards=len(placed)
+    ):
+        keys = list(placed[0])
+        shapes = [placed[0][k].shape for k in keys]
+        dtypes = [placed[0][k].dtype for k in keys]
+        flat = [
+            _flatten_outs_jit([p_out[k] for k in keys]) for p_out in placed
+        ]  # one (1, L) row per shard, resident on that shard's device
+        mesh = make_shard_mesh(devices)
+        sharding = NamedSharding(mesh, PartitionSpec("shard"))
+        arr = jax.make_array_from_single_device_arrays(
+            (len(placed),) + flat[0].shape[1:], sharding, flat
+        )
+        host_flat = jax.device_get(_sum_shards_jit(arr))  # THE host sync
+        stats["host_syncs"] += 1
+        stats["bytes_d2h"] += int(host_flat.nbytes)
     host = {}
     off = 0
     for k, shape, dtype in zip(keys, shapes, dtypes):
@@ -352,7 +373,18 @@ def run_sharded(
         st = shard_stats[p]
         ctx.beat(device, p)  # liveness: worker picked up shard p
         t0 = time.perf_counter()
-        out = launch(p, ids, ctx.replica(device), device, st)
+        # the span runs ON the worker thread: each device's lane in the
+        # exported trace shows its shards back to back, and cross-device
+        # overlap is the horizontal overlap of the lanes.  It times
+        # DISPATCH (schedule build + staging + async launches), not
+        # device completion — see the repro.obs.trace asynchrony caveat.
+        with obs_trace.span(
+            f"dispatch:shard{p}",
+            stats=st,
+            device=str(device),
+            n_seeds=len(ids),
+        ):
+            out = launch(p, ids, ctx.replica(device), device, st)
         if collective:
             # scatter this shard's ragged outputs into full-length rows
             # on its own device, still without blocking — the reduction

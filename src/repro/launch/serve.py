@@ -35,6 +35,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
 from repro.stream.service import AlertBatch, DetectionService
 
 __all__ = [
@@ -137,9 +138,22 @@ class TriageServer:
                 with self._meta_lock:
                     self.n_errors += 1
                     self.last_error = err
+                obs_metrics.get_registry().counter(
+                    "repro_triage_submit_errors_total",
+                    help="submits that failed (tick rolled back)",
+                ).inc()
+                # resilient services dump a flight-recorder postmortem
+                # bundle so the ticks LEADING UP to the failure survive
+                postmortem = getattr(self.service, "postmortem", None)
+                if callable(postmortem):
+                    postmortem(self.service.tick + 1, failure=e)
                 return err
             rows = batch.to_rows()
         dt = time.perf_counter() - t0
+        obs_metrics.get_registry().histogram(
+            "repro_triage_submit_seconds",
+            help="end-to-end submit latency under the writer lock",
+        ).observe(dt)
         hops = 0
         if batch.evidence is not None:
             hops = sum(
@@ -160,6 +174,13 @@ class TriageServer:
             self.n_evidence_hops += hops
             if self._audit is not None:
                 tick = batch.report.tick
+                # span id joins the audit line to the tick's span tree
+                # in trace exports / flight-recorder postmortem bundles
+                span = (
+                    {"span_id": batch.report.span_id}
+                    if batch.report.span_id is not None
+                    else {}
+                )
                 lines = []
                 for key, row in keyed:
                     if key in self._seen:
@@ -167,7 +188,7 @@ class TriageServer:
                         self.n_suppressed += 1
                         continue
                     self._seen[key] = 1
-                    lines.append(json.dumps({"tick": tick, **row}) + "\n")
+                    lines.append(json.dumps({"tick": tick, **span, **row}) + "\n")
                 if lines:
                     self._audit.write("".join(lines))
         return batch
@@ -198,6 +219,17 @@ class TriageServer:
         """Readiness probe: accepting submits."""
         return not self._closed
 
+    def metrics(self, format: str = "dict") -> Union[dict, str]:
+        """Metrics endpoint over the global `repro.obs` registry:
+        ``format="dict"`` returns the flat snapshot (JSON-friendly),
+        ``format="prometheus"`` the text exposition a scraper ingests."""
+        reg = obs_metrics.get_registry()
+        if format == "prometheus":
+            return reg.exposition()
+        if format == "dict":
+            return reg.snapshot()
+        raise ValueError(f"unknown metrics format {format!r}")
+
     def close(self) -> None:
         with self._meta_lock:
             self._closed = True
@@ -217,6 +249,15 @@ class TriageServer:
                             )
                             + "\n"
                         )
+                # final metrics snapshot: the run's counters/latency
+                # quantiles land in the same audit stream the analysts
+                # (and CI artifacts) already collect
+                self._audit.write(
+                    json.dumps(
+                        {"metrics": True, "snapshot": self.metrics()}
+                    )
+                    + "\n"
+                )
                 self._audit.close()
                 self._audit = None
 

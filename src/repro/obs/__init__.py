@@ -1,0 +1,56 @@
+"""`repro.obs` — unified observability for the mining stack (ISSUE 9).
+
+Three zero-dependency layers, threaded through the executor
+(:mod:`repro.core.executor`), the sharded dispatch pool
+(:mod:`repro.core.shard`), the compiler (:mod:`repro.core.compiler`),
+the streaming service (:mod:`repro.stream.service` /
+:mod:`repro.stream.resilience`), and the triage endpoint
+(:mod:`repro.launch.serve`):
+
+* :mod:`repro.obs.trace` — nested span tracer, off by default (one
+  branch per span when disabled), exporting Chrome trace-event JSON
+  (``chrome://tracing`` / Perfetto) and a plain-text hierarchical
+  summary.  Spans time *dispatch*, not device completion — see the
+  asynchrony caveat in the module docstring.
+* :mod:`repro.obs.metrics` — typed Counter/Gauge/Histogram registry
+  with Prometheus-style text exposition; unifies the legacy
+  ``executor.STAT_KEYS`` / ``STORE_STAT_KEYS`` / resilience counters.
+* :mod:`repro.obs.flight` — bounded flight recorder: the last N tick
+  reports + span trees, dumped to a JSONL postmortem bundle on fault.
+
+Quick start::
+
+    from repro import obs
+    obs.trace.enable()
+    session.mine(backend="sharded")
+    obs.trace.get_tracer().export_chrome("/tmp/mine.trace.json")
+    print(obs.metrics.get_registry().exposition())
+"""
+from repro.obs import flight, metrics, trace
+from repro.obs.flight import FlightRecorder
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    get_registry,
+    observe_stats,
+)
+from repro.obs.trace import Tracer, get_tracer, is_enabled, span
+
+__all__ = [
+    "trace",
+    "metrics",
+    "flight",
+    "Tracer",
+    "get_tracer",
+    "is_enabled",
+    "span",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "get_registry",
+    "observe_stats",
+    "FlightRecorder",
+]

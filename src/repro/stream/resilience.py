@@ -60,6 +60,8 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import executor
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.distributed.checkpoint import (
     latest_step,
     prune,
@@ -95,6 +97,10 @@ class ResilienceConfig:
 
     wal_dir: Optional[str] = None  # accepted-batch write-ahead log
     checkpoint_dir: Optional[str] = None  # durable full-state snapshots
+    # flight-recorder postmortem bundles (repro.obs.flight): a tick that
+    # exhausts its retries dumps the last-N-ticks ring + failure record
+    # to ``{postmortem_dir}/postmortem_tick_{tick}.jsonl``
+    postmortem_dir: Optional[str] = None
     checkpoint_every: int = 8  # ticks between checkpoints
     keep_checkpoints: int = 2
     validate: bool = True  # input quarantine on/off
@@ -381,8 +387,9 @@ class ResilientDetectionService(DetectionService):
             self.totals["quarantined"] += counts["quarantined"]
         wal_tick = self.tick + 1
         if self.wal is not None and not _from_wal:
-            self._fire("wal")
-            self.wal.append(wal_tick, src, dst, t, amount)
+            with obs_trace.span("tick:wal", tick=wal_tick, n_rows=len(src)):
+                self._fire("wal")
+                self.wal.append(wal_tick, src, dst, t, amount)
 
         level = min(3, len(DEGRADATION_LADDER), self._level)
         if _from_wal:
@@ -404,20 +411,28 @@ class ResilientDetectionService(DetectionService):
                 )
             try:
                 batch = super().submit(src, dst, t, amount)
-            except cfg.retryable:
+            except cfg.retryable as e:
                 if attempt >= cfg.max_retries:
-                    self._abandon_tick(wal_tick, src, dst, t, amount, _from_wal)
+                    self._abandon_tick(
+                        wal_tick, src, dst, t, amount, _from_wal, failure=e
+                    )
                     raise
                 attempt += 1
+                obs_metrics.get_registry().counter(
+                    "repro_resilience_retries_total",
+                    help="transient-failure tick retries",
+                ).inc()
                 level = min(level + 1, len(DEGRADATION_LADDER))
                 time.sleep(backoff)
                 backoff *= cfg.backoff_multiplier
                 continue
-            except BaseException:
+            except BaseException as e:
                 # hard failure: the transactional tick already rolled
                 # back; drop the WAL entry and dead-letter the batch so
                 # live state == recovered state
-                self._abandon_tick(wal_tick, src, dst, t, amount, _from_wal)
+                self._abandon_tick(
+                    wal_tick, src, dst, t, amount, _from_wal, failure=e
+                )
                 raise
             finally:
                 self._restore_level(saved)
@@ -433,16 +448,55 @@ class ResilientDetectionService(DetectionService):
                 and self.tick % cfg.checkpoint_every == 0
             ):
                 self.checkpoint()
+        obs_metrics.get_registry().gauge(
+            "repro_resilience_level",
+            help="standing degradation-ladder level (0 = full service)",
+        ).set(self._level)
         return batch
 
     def _abandon_tick(
-        self, wal_tick: int, src, dst, t, amount, _from_wal: bool
+        self,
+        wal_tick: int,
+        src,
+        dst,
+        t,
+        amount,
+        _from_wal: bool,
+        failure: Optional[BaseException] = None,
     ) -> None:
         if self.wal is not None and not _from_wal:
             self.wal.remove(wal_tick)
         self.totals["dead_letter_ticks"] += 1
         n = len(np.atleast_1d(src))
         self._dead_letter([{"reason": "tick_failed", "rows": int(n)}])
+        self.postmortem(wal_tick, failure=failure)
+
+    def postmortem(
+        self, tick: int, failure: Optional[BaseException] = None
+    ) -> Optional[str]:
+        """Dump the flight-recorder ring (last N tick reports + span
+        trees) as a JSONL postmortem bundle; called automatically when a
+        tick exhausts its retries, callable on demand.  ``None`` when no
+        ``postmortem_dir`` is configured."""
+        if not self.resilience.postmortem_dir:
+            return None
+        path = os.path.join(
+            self.resilience.postmortem_dir,
+            f"postmortem_tick_{tick:08d}.jsonl",
+        )
+        return self.flight.dump(
+            path,
+            reason="tick_failed" if failure is not None else "on_demand",
+            failure=(
+                None
+                if failure is None
+                else {
+                    "tick": tick,
+                    "type": type(failure).__name__,
+                    "message": str(failure),
+                }
+            ),
+        )
 
     def _settle_level(self, report, cfg: ResilienceConfig) -> None:
         if cfg.deadline_ms is None:
@@ -498,17 +552,18 @@ class ResilientDetectionService(DetectionService):
         cfg = self.resilience
         if not cfg.checkpoint_dir:
             return None
-        self._fire("checkpoint")
-        path = save_checkpoint(
-            cfg.checkpoint_dir,
-            self.tick,
-            self._state_tree(),
-            extra={"tick": self.tick, "columns": list(self.pattern_names)},
-        )
-        self._fire("checkpoint_commit")
-        if self.wal is not None:
-            self.wal.prune_through(self.tick)
-        prune(cfg.checkpoint_dir, keep=max(1, cfg.keep_checkpoints))
+        with obs_trace.span("tick:checkpoint", tick=self.tick):
+            self._fire("checkpoint")
+            path = save_checkpoint(
+                cfg.checkpoint_dir,
+                self.tick,
+                self._state_tree(),
+                extra={"tick": self.tick, "columns": list(self.pattern_names)},
+            )
+            self._fire("checkpoint_commit")
+            if self.wal is not None:
+                self.wal.prune_through(self.tick)
+            prune(cfg.checkpoint_dir, keep=max(1, cfg.keep_checkpoints))
         return path
 
     @classmethod
@@ -543,6 +598,7 @@ class ResilientDetectionService(DetectionService):
             "rejected_total": self.totals["rejected"],
             "quarantined_total": self.totals["quarantined"],
             "dead_letter_ticks": self.totals["dead_letter_ticks"],
+            "flight_ticks": len(self.flight),
             "wal_last_tick": None if self.wal is None else self.wal.last_tick(),
             "checkpoint_last_tick": (
                 latest_step(cfg.checkpoint_dir) if cfg.checkpoint_dir else None

@@ -33,6 +33,7 @@ by pattern, eviction and out-of-order feeds included).
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -43,6 +44,9 @@ from repro.core.compiler import CompiledPattern, analyze_stage_graph
 from repro.core.patterns import build_pattern
 from repro.core.spec import PatternSpec
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.flight import FlightRecorder
 from repro.stream.delta import DeltaPlan, DeltaScheduler
 from repro.stream.store import GraphView, TemporalGraphStore
 from repro.witness import witness_layout
@@ -56,6 +60,8 @@ __all__ = [
 ]
 
 BASE_FEATURES = ("src", "dst", "amount")
+
+logger = logging.getLogger("repro.stream")
 
 
 def default_retain(
@@ -104,6 +110,13 @@ class TickReport:
     late_contract_breach: int = 0  # ingested rows below the eviction cutoff
     degraded: Tuple[str, ...] = ()  # degradation-ladder steps this tick
     retries: int = 0  # transient-failure retries before this tick committed
+    # observability (repro.obs): fresh JIT traces minted this tick — a
+    # warm ("local"/"full") tick should replay cached traces, so a
+    # nonzero value there is a latency smell and logs a warning
+    trace_misses: int = 0
+    # id of the tick's "tick" span when tracing was enabled (joins the
+    # report to its span tree in flight-recorder dumps and audit logs)
+    span_id: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -285,6 +298,12 @@ class DetectionService:
         self._tick_notes: Dict[str, object] = {}
         self._tick_deadline: Optional[float] = None  # perf_counter instant
         self._count_only = False  # ladder rung: skip score/alert stages
+        # observability (repro.obs): flight recorder keeps the last N
+        # tick reports (+ span trees when tracing is on) for postmortem
+        # dumps; _tick_span_id joins the report to its "tick" span
+        self.flight = FlightRecorder()
+        self._tick_span_id: Optional[int] = None
+        self._tick_traces_before = 0
 
     # -- feature layout (repro.ml contract) -----------------------------
     @property
@@ -493,11 +512,17 @@ class DetectionService:
         exception propagates — a failed tick never leaves the service
         diverged from the batch oracle."""
         txn = self._begin_tick()
-        try:
-            return self._tick(src, dst, t, amount)
-        except BaseException:
-            self._rollback_tick(txn)
-            raise
+        with obs_trace.span("tick", tick=self.tick + 1) as sp:
+            self._tick_span_id = sp.span_id
+            try:
+                batch = self._tick(src, dst, t, amount)
+            except BaseException:
+                self._rollback_tick(txn)
+                raise
+        # record AFTER the span closes so the flight entry carries the
+        # complete per-stage span tree of the tick
+        self.flight.record(batch.report, span_id=batch.report.span_id)
+        return batch
 
     def _tick(
         self,
@@ -509,6 +534,9 @@ class DetectionService:
         t0 = time.perf_counter()
         self.tick += 1
         self._tick_ctx = None
+        self._tick_traces_before = sum(
+            len(s) for s in self._trace_keys.values()
+        )
         src = np.asarray(src, dtype=np.int32)
         dst = np.asarray(dst, dtype=np.int32)
         t = np.asarray(t, dtype=np.int64)
@@ -519,20 +547,27 @@ class DetectionService:
                 t0, 0, None, None, stats, store_before, path="empty"
             )
         cold = self.store.n_live == 0
-        eids = self.store.ingest(src, dst, t, amount)
-        self._fire("ingest")
-        plan = self.scheduler.plan(self.store, src, dst, t, eids, cold=cold)
-        self._grow_counts()
+        with obs_trace.span("tick:ingest", n_rows=len(src)):
+            eids = self.store.ingest(src, dst, t, amount)
+            self._fire("ingest")
+        with obs_trace.span("tick:plan"):
+            plan = self.scheduler.plan(
+                self.store, src, dst, t, eids, cold=cold
+            )
+            self._grow_counts()
         use_full = plan.cold or (
             plan.dirty_fraction >= self.full_remine_fraction
         )
-        view = (
-            self.store.snapshot()
-            if use_full
-            else self.store.local_view(plan.core_nodes, plan.t_lo)
-        )
-        self._mine_plan(plan, view, stats)
         path = "cold" if plan.cold else ("full" if use_full else "local")
+        with obs_trace.span(
+            "tick:mine", stats=stats, path=path, n_dirty=len(plan.union_dirty)
+        ):
+            view = (
+                self.store.snapshot()
+                if use_full
+                else self.store.local_view(plan.core_nodes, plan.t_lo)
+            )
+            self._mine_plan(plan, view, stats)
         return self._finish(t0, len(eids), plan, view, stats, store_before, path)
 
     def _finish(
@@ -552,7 +587,8 @@ class DetectionService:
         scored = None
         evidence = [] if self.witnesses else None
         if plan is not None and len(plan.union_dirty) and not self._count_only:
-            scored = self._score(plan.union_dirty)
+            with obs_trace.span("tick:score", n_seeds=len(plan.union_dirty)):
+                scored = self._score(plan.union_dirty)
             if self.witnesses:
                 # in-tick shed: if the deadline budget is already blown,
                 # drop evidence extraction (the most expensive optional
@@ -564,9 +600,12 @@ class DetectionService:
                     if "witnesses_off" not in degraded:
                         degraded.append("witnesses_off")
                 else:
-                    evidence = self._extract_evidence(
-                        scored[0], scored[7], stats
-                    )
+                    with obs_trace.span(
+                        "tick:witness", stats=stats, n_alerts=len(scored[0])
+                    ):
+                        evidence = self._extract_evidence(
+                            scored[0], scored[7], stats
+                        )
         for k in self.stats:
             if k == "jit_cache_entries":  # a gauge, not a counter
                 self.stats[k] = max(self.stats[k], stats[k])
@@ -576,6 +615,23 @@ class DetectionService:
             k: self.store.stats[k] - store_before.get(k, 0)
             for k in self.store.stats
         }
+        # fresh JIT traces minted this tick: stats["jit_cache_entries"]
+        # holds the lifetime TOTAL trace-key count, so the per-tick miss
+        # count is the delta against the pre-tick snapshot
+        trace_misses = max(
+            0,
+            sum(len(s) for s in self._trace_keys.values())
+            - self._tick_traces_before,
+        )
+        if trace_misses and path in ("local", "full"):
+            logger.warning(
+                "tick %d (%s path) minted %d fresh JIT trace(s) — warm "
+                "ticks should replay cached traces; check the pow2 "
+                "padding ladder / view-shape churn",
+                self.tick,
+                path,
+                trace_misses,
+            )
         report = TickReport(
             tick=self.tick,
             n_new=n_new,
@@ -604,9 +660,22 @@ class DetectionService:
             + int(notes.get("late", 0)),
             degraded=tuple(degraded),
             retries=int(notes.get("retries", 0)),
+            trace_misses=trace_misses,
+            span_id=self._tick_span_id,
         )
         self.last_report = report
         self.last_plan = plan
+        # fold the tick into the global metrics registry (repro.obs)
+        reg = obs_metrics.get_registry()
+        reg.histogram(
+            "repro_stream_tick_seconds", help="end-to-end tick latency"
+        ).observe(report.seconds)
+        reg.counter(
+            "repro_stream_trace_misses_total",
+            help="fresh JIT traces minted by streaming ticks",
+        ).inc(trace_misses)
+        obs_metrics.observe_stats(stats, "repro_executor")
+        obs_metrics.observe_stats(store_delta, "repro_store")
         if scored is None:
             empty = np.zeros(0, dtype=np.int64)
             return AlertBatch(

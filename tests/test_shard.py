@@ -377,3 +377,25 @@ def test_sharded_multi_device_subprocess():
     assert got["timeshare_exact"] is True
     assert got["timeshare_mode"] == "host"
     assert got["timeshare_syncs"] == 1
+
+
+@pytest.mark.parametrize("n_parts, mode", [(1, "collective"), (3, "host")])
+def test_shard_stats_sum_to_mine_totals(graph, n_parts, mode):
+    """Counter-consistency contract (repro.obs glossary): the per-shard
+    ``shard_stats`` sum EXACTLY to the mine-level totals for the
+    launch-side counters (``kernel_calls`` / ``padded_elements`` /
+    ``bytes_h2d``), under both gather modes; the sync-side counters
+    (``host_syncs`` / ``bytes_d2h``) are charged to the mine level ONLY
+    — per-shard launches never block on the device, the single gather
+    pays the one sync."""
+    session = MiningSession(graph, window=W).register("fan_in", "cycle3")
+    res = session.mine(backend="sharded", n_parts=n_parts)
+    assert res.gather_mode == mode
+    assert len(res.shard_stats) == n_parts
+    for key in ("kernel_calls", "padded_elements", "bytes_h2d"):
+        assert res.stats[key] == sum(st[key] for st in res.shard_stats), key
+    for st in res.shard_stats:
+        assert st["host_syncs"] == 0
+        assert st["bytes_d2h"] == 0
+    assert res.stats["host_syncs"] == 1
+    assert res.stats["bytes_d2h"] > 0
