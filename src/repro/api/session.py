@@ -49,6 +49,7 @@ from repro.core.compiler import (
     StageGraphIR,
     _timed_first_call,
     analyze_stage_graph,
+    schedule_cache_cap_for,
 )
 from repro.core.spec import (
     Neigh,
@@ -941,9 +942,12 @@ class MiningSession:
             if key in self._compiled and key not in compiled_keys:
                 compiled_keys.append(key)
                 cp = self._compiled[key]
-                # keep every shard's schedule resident across mines
+                # keep every shard's schedule resident across mines —
+                # same slots+headroom sizing rule the streaming service
+                # applies to its portfolio schedule caches
                 cp.schedule_cache_cap = max(
-                    cp.schedule_cache_cap, plan.n_parts + 1
+                    cp.schedule_cache_cap,
+                    schedule_cache_cap_for(plan.n_parts),
                 )
 
         coalesce = self.shard_coalesce
@@ -1029,7 +1033,8 @@ class MiningSession:
         """A :class:`repro.stream.DetectionService` over the session's
         portfolio: incremental ingest with per-pattern dirty radii
         derived from the same registered specs.  ``kwargs`` pass through
-        (``thresholds=``, ``scorer=``, ``retain=``, ...)."""
+        (``thresholds=``, ``scorer=``, ``retain=``, ``pipeline=``,
+        ``schedule_cache_cap=``, ...)."""
         from repro.stream import DetectionService
 
         names = self._resolve_names(patterns)

@@ -133,6 +133,15 @@ def _pow2ceil(x: int) -> int:
     return 1 << max(0, int(x - 1).bit_length())
 
 
+def schedule_cache_cap_for(n_slots: int) -> int:
+    """Schedule-LRU capacity for a caller that keeps ``n_slots``
+    schedule keys concurrently hot (shard partitions, a streaming
+    portfolio's launch profiles): one slot each plus one spare so a
+    transient extra key never evicts a hot entry, floored at the
+    single-plan default of 8."""
+    return max(8, int(n_slots) + 1)
+
+
 _I32_MIN = -(2**31)
 _I32_MAX = 2**31 - 1
 
@@ -465,6 +474,30 @@ def _timed_first_call(fn: Callable, pattern: str, key: Tuple) -> Callable:
     return wrapper
 
 
+@dataclasses.dataclass
+class _GroupSpec:
+    """One (strategy, bucket-dims) group of a schedule after analysis but
+    before staging: everything that determines the kernel trace shape
+    plus the row selection.  The seed VALUES (src/dst/t, frontier
+    expansions) are carried as source arrays and threaded into padded
+    staging buffers by :meth:`CompiledPattern._stage_groups` — the
+    staging half of a build, separable so shape-keyed schedule reuse can
+    profile the launch shapes independently of the seed identities."""
+
+    strat: int
+    dims: Tuple[int, ...]
+    sweeps: Tuple[int, ...]
+    branch: bool
+    per_row: int
+    sel: np.ndarray
+    src: np.ndarray
+    dst: np.ndarray
+    st: np.ndarray
+    fr: Optional[np.ndarray]
+    frt: Optional[np.ndarray]
+    seed_of: Optional[np.ndarray]
+
+
 class CompiledPattern:
     """A pattern compiled against one graph (degree statistics feed the
     strategy/bucketing passes).
@@ -492,9 +525,16 @@ class CompiledPattern:
         kernels_cache: Optional[Dict] = None,
         trace_keys: Optional[set] = None,
         vals_lock: Optional[threading.Lock] = None,
+        schedule_cache: Optional["OrderedDict"] = None,
+        schedule_cache_cap: Optional[int] = None,
+        schedule_mode: str = "value",
     ):
         if backend not in ("xla", "pallas"):
             raise ValueError(f"unknown kernel backend {backend!r}; xla|pallas")
+        if schedule_mode not in ("value", "shape"):
+            raise ValueError(
+                f"unknown schedule_mode {schedule_mode!r}; value|shape"
+            )
         self.spec = spec
         self.g = graph
         self.backend = backend
@@ -541,11 +581,25 @@ class CompiledPattern:
         # host-side numpy grouping entirely (the session keeps compiled
         # plans alive, so this cache lives next to its _vals_cache).
         # LRU-capped: schedules pin their staging buffers, so a long-lived
-        # session mining ever-fresh seed sets must not accumulate them
-        self._schedules: "OrderedDict[Tuple[int, str], executor.Schedule]" = (
-            OrderedDict()
+        # session mining ever-fresh seed sets must not accumulate them.
+        # `schedule_mode` picks the cache key:
+        #   "value" — (seed count, sha1 of seed values, bulk_only); hits
+        #             replay the cached staging verbatim (sessions /
+        #             sharded mines re-mining identical seed sets);
+        #   "shape" — the pow2-padded launch profile (group strat/dims/
+        #             sweeps/widths, seed count pow2-ceiled); seed VALUES
+        #             are threaded as launch-time staging every call, so
+        #             consecutive streaming ticks with different dirty
+        #             seeds share keys (and hence kernel trace families).
+        # A streaming service passes one persistent `schedule_cache` per
+        # pattern so the cache survives its per-tick CompiledPattern.
+        self._schedules: "OrderedDict[Tuple, object]" = (
+            schedule_cache if schedule_cache is not None else OrderedDict()
         )
-        self.schedule_cache_cap = 8
+        self.schedule_cache_cap = (
+            8 if schedule_cache_cap is None else int(schedule_cache_cap)
+        )
+        self.schedule_mode = schedule_mode
         # distinct (strategy, dims, sweeps, branch, batch) kernel traces —
         # proves the chunk ladder keeps JIT cache growth bounded (shared
         # across ticks when the caller passes a persistent set)
@@ -1210,9 +1264,9 @@ class CompiledPattern:
 
     def _plan_buckets(
         self, n_out, sel_all, src, dst, st, fr, frt, strat, reqs, classes, branch, seed_of
-    ) -> List[executor.BucketGroup]:
-        """Group rows by (strategy, per-level bucket classes) and stage
-        every group for the device executor.
+    ) -> List[_GroupSpec]:
+        """Group rows by (strategy, per-level bucket classes) into
+        :class:`_GroupSpec`\\ s ready for staging.
 
         ``reqs``/``classes`` are per-dim requirement / class arrays over
         (W1..Wk, DA, DB); class -1 means the dim is unused by that row's
@@ -1242,7 +1296,7 @@ class CompiledPattern:
                 classes[j] = c
         keys = np.stack([strat] + list(classes), axis=1)
         uniq = np.unique(keys, axis=0)
-        groups: List[executor.BucketGroup] = []
+        groups: List[_GroupSpec] = []
         for key in uniq:
             sk, kcs = int(key[0]), key[1:]
             sel = sel_all[np.all(keys == key, axis=1)]
@@ -1270,30 +1324,67 @@ class CompiledPattern:
                     dims.append(int(self.ladder[kc]))
                     sweeps.append(1)
             per_row = max(1, int(np.prod(dims, dtype=np.int64)))
-            widths = executor.chunk_widths(
-                len(sel), self.batch_elem_cap, per_row
-            )
-            staging = executor.build_staging(
-                widths,
-                n_out,
-                sel,
-                src,
-                dst,
-                st,
-                seg_vals=(seed_of[sel] if branch else sel).astype(np.int32),
-                fr=fr if branch else None,
-                frt=frt if branch else None,
-            )
             groups.append(
-                executor.BucketGroup(
+                _GroupSpec(
                     strat=sk,
                     dims=tuple(dims),
                     sweeps=tuple(sweeps),
                     branch=branch,
+                    per_row=per_row,
+                    sel=sel,
+                    src=src,
+                    dst=dst,
+                    st=st,
+                    fr=fr,
+                    frt=frt,
+                    seed_of=seed_of,
+                )
+            )
+        return groups
+
+    def _stage_groups(
+        self,
+        specs: List[_GroupSpec],
+        n_out: int,
+        pad_rows: bool = False,
+    ) -> List[executor.BucketGroup]:
+        """The staging half of a schedule build: chunk widths + padded
+        host staging buffers for every analyzed group.  ``pad_rows=True``
+        sizes each group's widths for its pow2-ceiled row count (the
+        surplus rows scatter into the drop sentinel), making the widths
+        canonical per shape profile — the launch-time half of shape-keyed
+        schedule reuse."""
+        groups: List[executor.BucketGroup] = []
+        for gs in specs:
+            widths = executor.chunk_widths(
+                len(gs.sel),
+                self.batch_elem_cap,
+                gs.per_row,
+                pad_rows_pow2=pad_rows,
+            )
+            staging = executor.build_staging(
+                widths,
+                n_out,
+                gs.sel,
+                gs.src,
+                gs.dst,
+                gs.st,
+                seg_vals=(
+                    gs.seed_of[gs.sel] if gs.branch else gs.sel
+                ).astype(np.int32),
+                fr=gs.fr if gs.branch else None,
+                frt=gs.frt if gs.branch else None,
+            )
+            groups.append(
+                executor.BucketGroup(
+                    strat=gs.strat,
+                    dims=gs.dims,
+                    sweeps=gs.sweeps,
+                    branch=gs.branch,
                     widths=widths,
                     staging=staging,
-                    per_row=per_row,
-                    n_sweep=int(np.prod(sweeps, dtype=np.int64)),
+                    per_row=gs.per_row,
+                    n_sweep=int(np.prod(gs.sweeps, dtype=np.int64)),
                 )
             )
         return groups
@@ -1327,11 +1418,20 @@ class CompiledPattern:
         return item_seed[ok], fr[ok], frt[ok].astype(np.int32)
 
     def _build_schedule(
-        self, seed_eids: np.ndarray, bulk_only: bool = False
+        self,
+        seed_eids: np.ndarray,
+        bulk_only: bool = False,
+        pad_rows: bool = False,
     ) -> executor.Schedule:
         """Host-side half of a mine: bucketing, strategy selection, hub
         decomposition, chunking, and staging — pure in (plan, graph
         degree requirements, seed ids), so the result is cached.
+
+        ``pad_rows=True`` (shape-keyed streaming schedules) pow2-ceils
+        every group's staged row count AND the output accumulator length
+        (``Schedule.n_out``), so the whole launch profile — group widths
+        included — is canonical per pow2 shape class; callers slice the
+        fetched vector back to the real seed count.
 
         ``bulk_only`` (witness extraction) disables the per-branch hub
         decomposition — partial top-k payloads from decomposed branches
@@ -1343,7 +1443,7 @@ class CompiledPattern:
         g = self.g
         ir = self.ir
         n = len(seed_eids)
-        groups: List[executor.BucketGroup] = []
+        groups: List[_GroupSpec] = []
         branch_items = 0
 
         k = len(ir.frontiers)
@@ -1462,9 +1562,51 @@ class CompiledPattern:
                     branch=True,
                     seed_of=seed_of,
                 )
+        n_dev = _pow2ceil(max(1, n)) if pad_rows else n
         return executor.Schedule(
-            groups=groups, branch_items=branch_items, n_out=n
+            groups=self._stage_groups(groups, n_dev, pad_rows=pad_rows),
+            branch_items=branch_items,
+            n_out=n_dev,
         )
+
+    def _schedule_shape_keyed(
+        self, seed_eids: np.ndarray, stats: Dict[str, int]
+    ) -> executor.Schedule:
+        """Shape-keyed schedule path (``schedule_mode="shape"``): the
+        per-seed analysis and staging run EVERY call — seed values are
+        launch-time data — and the cache records pow2-padded launch
+        PROFILES (seed count pow2-ceiled + each group's strategy, ladder
+        dims, sweep grid, and canonical chunk widths).  A hit means the
+        tick's launches land entirely inside an already-traced shape
+        family: ``schedule_hits`` under this mode gauges exactly the
+        cross-tick reuse that keeps warm-tick ``trace_misses`` at zero.
+        The LRU cap bounds the profile set a long-lived service pins."""
+        with obs_trace.span(
+            "schedule_build",
+            pattern=self.spec.name,
+            n_seeds=len(seed_eids),
+            mode="shape",
+        ):
+            sched = self._build_schedule(seed_eids, pad_rows=True)
+        key = (
+            "shape",
+            sched.n_out,
+            tuple(
+                sorted(
+                    (g.strat, g.dims, g.sweeps, g.branch, tuple(g.widths))
+                    for g in sched.groups
+                )
+            ),
+        )
+        with self._sched_lock:
+            if key in self._schedules:
+                self._schedules.move_to_end(key)
+                stats["schedule_hits"] += 1
+            else:
+                self._schedules[key] = True
+                while len(self._schedules) > self.schedule_cache_cap:
+                    self._schedules.popitem(last=False)  # evict LRU
+        return sched
 
     def schedule_for(
         self,
@@ -1476,8 +1618,16 @@ class CompiledPattern:
         miss).  Schedules are pure in (plan, graph degree requirements,
         seed ids) and carry no device state, so one cached schedule is
         replayed by every device of a sharded mine — the host-side numpy
-        grouping runs once per (plan, partition), never once per device."""
+        grouping runs once per (plan, partition), never once per device.
+
+        Under ``schedule_mode="shape"`` (streaming), counting schedules
+        are re-keyed on the pow2-padded launch profile instead of the
+        seed identity — see :meth:`_schedule_shape_keyed`.  Witness
+        (``bulk_only``) schedules stay value-keyed in both modes: their
+        packed top-k payloads depend on exact seed order."""
         stats = self.stats if stats is None else stats
+        if self.schedule_mode == "shape" and not bulk_only:
+            return self._schedule_shape_keyed(seed_eids, stats)
         key = (
             len(seed_eids),
             hashlib.sha1(seed_eids.tobytes()).hexdigest(),
@@ -1550,9 +1700,11 @@ class CompiledPattern:
         # length snapshot of the shared set (both threads would count the
         # other's new traces).  Merge under the jit lock instead.
         local_keys: set = set()
+        # shape mode pads the accumulator to sched.n_out >= n: one pow2
+        # scatter-add trace per width instead of one per exact seed count
         out_dev = executor.execute(
             groups,
-            n,
+            sched.n_out,
             self._kernel,
             self.dg if dg is None else dg,
             stats,
@@ -1594,7 +1746,10 @@ class CompiledPattern:
         if len(seed_eids) == 0:
             return np.zeros(0, dtype=np.int64)
         out_dev = self.mine_async(seed_eids)
-        return executor.fetch(out_dev, self.stats).astype(np.int64)
+        # [:n] strips the pow2 accumulator pad (shape mode); no-op otherwise
+        return (
+            executor.fetch(out_dev, self.stats)[: len(seed_eids)].astype(np.int64)
+        )
 
 
 def compile_pattern(spec: PatternSpec, graph: TemporalGraph, **kw) -> CompiledPattern:

@@ -111,7 +111,12 @@ def pow2ceil(x: int) -> int:
     return 1 << max(0, int(x - 1).bit_length())
 
 
-def chunk_widths(n_rows: int, batch_elem_cap: int, per_row: int) -> List[int]:
+def chunk_widths(
+    n_rows: int,
+    batch_elem_cap: int,
+    per_row: int,
+    pad_rows_pow2: bool = False,
+) -> List[int]:
     """Padded batch widths of a bucket group's chunks.
 
     Full chunks share one power-of-two width ``bchunk`` sized so a launch
@@ -120,7 +125,19 @@ def chunk_widths(n_rows: int, batch_elem_cap: int, per_row: int) -> List[int]:
     power of two in ``[MIN_CHUNK, bchunk]`` (or the single ``pow2ceil``
     width of a tiny group), so the set of batch shapes a (strategy, dims)
     kernel can be traced at is logarithmic, not linear, in group size.
+
+    ``pad_rows_pow2=True`` sizes the widths for ``pow2ceil(n_rows)`` rows
+    instead, with a ``MIN_CHUNK`` floor on the row class: the widths LIST
+    itself (not just each width) is then canonical per pow2 row-count
+    class, so shape-keyed schedule reuse can treat it as part of a stable
+    launch profile — and tiny groups (streaming hub branches routinely
+    have 1-16 rows) collapse onto ONE width class instead of minting a
+    kernel trace per pow2 size below the floor.  The surplus rows are
+    staged as padding (:func:`build_staging` points their scatter targets
+    at the drop sentinel), so results are unchanged.
     """
+    if pad_rows_pow2:
+        n_rows = max(MIN_CHUNK, pow2ceil(max(1, n_rows)))
     bchunk = max(MIN_CHUNK, batch_elem_cap // max(1, per_row))
     bchunk = 1 << (bchunk.bit_length() - 1)  # round DOWN: ladder anchor
     bchunk = min(bchunk, pow2ceil(n_rows))

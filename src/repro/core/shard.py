@@ -261,11 +261,17 @@ def _flatten_outs(leaves):
 _flatten_outs_jit = jax.jit(_flatten_outs)
 
 
-def gather(outs, stats: Dict[str, int]):
-    """Host-side gather fallback (time-shared ``n_parts > n_devices``):
-    a single blocking ``device_get`` over every shard's finished device
-    outputs (a pytree spanning all mining devices)."""
-    with obs_trace.span("gather", stats=stats, mode="host"):
+def gather(outs, stats: Dict[str, int], mode: str = "host"):
+    """One blocking ``device_get`` over a whole pytree of finished device
+    outputs — the single host sync of whatever dispatched them.
+
+    Used as the host-side gather fallback of a sharded mine (time-shared
+    ``n_parts > n_devices``; the pytree then spans all mining devices)
+    and by the streaming service's portfolio tick, which fetches EVERY
+    pattern's device-resident count vector in this one call
+    (``mode="portfolio"`` tags the span so trace tooling can tell the
+    two apart)."""
+    with obs_trace.span("gather", stats=stats, mode=mode):
         host = jax.device_get(outs)
         stats["host_syncs"] += 1
         stats["bytes_d2h"] += int(

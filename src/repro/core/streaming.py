@@ -28,6 +28,11 @@ import numpy as np
 
 __all__ = ["StreamingMiner"]
 
+# once-per-process deprecation gate: a shim constructed inside a hot
+# loop (the old API encouraged one miner per portfolio per run, but some
+# callers rebuild) must not flood stderr with one warning per instance
+_WARNED = False
+
 
 class StreamingMiner:
     """Deprecated: use :class:`repro.stream.DetectionService` (or
@@ -38,12 +43,15 @@ class StreamingMiner:
         ready-built :class:`~repro.core.spec.PatternSpec` objects.
         `backend` selects the compiled kernels' pairwise lowering
         (``"xla"`` | ``"pallas"``)."""
-        warnings.warn(
-            "repro.core.streaming.StreamingMiner is deprecated; use "
-            "repro.stream.DetectionService / MiningSession.service()",
-            DeprecationWarning,
-            stacklevel=2,
-        )
+        global _WARNED
+        if not _WARNED:
+            _WARNED = True
+            warnings.warn(
+                "repro.core.streaming.StreamingMiner is deprecated; use "
+                "repro.stream.DetectionService / MiningSession.service()",
+                DeprecationWarning,
+                stacklevel=2,
+            )
         from repro.stream import DetectionService
 
         self._svc = DetectionService(patterns, window=window, backend=backend)

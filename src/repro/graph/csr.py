@@ -108,7 +108,14 @@ class TemporalGraph:
             "in_deg_p99": float(np.percentile(idg, 99)) if idg.size else 0.0,
         }
 
-    def to_device(self, pad: bool = False) -> "DeviceGraph":
+    def to_device(
+        self,
+        pad: bool = False,
+        *,
+        floor_nodes: int = 1,
+        floor_edges: int = 1,
+        floor_deg: int = 1,
+    ) -> "DeviceGraph":
         """jnp mirror.  Device arrays are int32 (JAX x64 stays off): instead
         of the int64 composite key, compiled plans do a two-level int32
         binary search (id range, then time range within it).
@@ -121,7 +128,17 @@ class TemporalGraph:
         pow2-ceiled so the derived binary-search iteration count lands on
         a ladder.  A stream of per-tick graph views then presents
         logarithmically many distinct device shapes, and jitted mining
-        kernels cached across ticks replay instead of re-tracing."""
+        kernels cached across ticks replay instead of re-tracing.
+
+        ``floor_nodes``/``floor_edges``/``floor_deg`` (pad mode only) set
+        lower bounds on the padded dimensions.  A streaming caller keeps
+        monotone high-water floors across ticks so a mirror's static
+        shapes — and the ``max_deg``-derived binary-search iteration
+        count baked into every kernel trace — never shrink and reopen a
+        trace family a later, bigger tick would have to remint.
+        Oversizing is exact: padded CSR tails sit above every real
+        ``indptr`` value and extra bisection iterations converge
+        harmlessly."""
         import jax.numpy as jnp
 
         def pad_edges(a: np.ndarray, fill: int, e_pad: int) -> np.ndarray:
@@ -132,12 +149,14 @@ class TemporalGraph:
             return out
 
         if pad:
-            e_pad = _pow2ceil(max(1, self.n_edges))
-            n_pad = _pow2ceil(max(1, self.n_nodes))
+            e_pad = _pow2ceil(max(1, int(floor_edges), self.n_edges))
+            n_pad = _pow2ceil(max(1, int(floor_nodes), self.n_nodes))
             ep = lambda a, fill=-1: pad_edges(np.asarray(a), fill, e_pad)
             ip = lambda a: pad_edges(np.asarray(a), int(a[-1]), n_pad + 1)
             n_nodes, n_edges = n_pad, e_pad
-            max_deg = _pow2ceil(max(1, self.max_out_deg(), self.max_in_deg()))
+            max_deg = _pow2ceil(
+                max(1, int(floor_deg), self.max_out_deg(), self.max_in_deg())
+            )
         else:
             ep = lambda a, fill=-1: a
             ip = lambda a: a

@@ -361,6 +361,24 @@ class ResilientDetectionService(DetectionService):
         ) = saved
 
     # -- the resilient tick --------------------------------------------
+    def _replay_orphans(self) -> None:
+        """Re-enter ticks whose ingest a pipelined commit failure rolled
+        back (:attr:`DetectionService.orphaned`).  Each orphan was
+        already validated and WAL-logged at its original submission, so
+        it re-enters the bare tick path directly — no second WAL entry,
+        no re-validation — with its original report notes restored."""
+        while self.orphaned:
+            tick, inp, notes = self.orphaned.pop(0)
+            saved_notes = self._tick_notes
+            self._tick_notes = dict(notes)
+            try:
+                DetectionService.submit(self, *inp)
+            except BaseException:
+                self.orphaned.insert(0, (tick, inp, notes))
+                raise
+            finally:
+                self._tick_notes = saved_notes
+
     def submit(
         self,
         src,
@@ -369,8 +387,17 @@ class ResilientDetectionService(DetectionService):
         amount=None,
         *,
         _from_wal: bool = False,
-    ) -> AlertBatch:
+    ) -> Optional[AlertBatch]:
         cfg = self.resilience
+        if _from_wal and self.pipeline:
+            # WAL replay is strictly sequential: every replayed tick must
+            # commit before the next is applied, or a replayed-in-flight
+            # tick could be skipped by a checkpoint taken mid-replay
+            self.pipeline = False
+            try:
+                return self.submit(src, dst, t, amount, _from_wal=True)
+            finally:
+                self.pipeline = True
         notes: Dict[str, object] = {}
         if cfg.validate and not _from_wal:
             src, dst, t, amount, records, counts = self.validator.validate(
@@ -410,6 +437,10 @@ class ResilientDetectionService(DetectionService):
                     time.perf_counter() + cfg.deadline_ms / 1000.0
                 )
             try:
+                # a prior pipelined commit failure may have rolled back
+                # an already-ingested predecessor: replay it first so the
+                # stream re-enters in WAL order
+                self._replay_orphans()
                 batch = super().submit(src, dst, t, amount)
             except cfg.retryable as e:
                 if attempt >= cfg.max_retries:
@@ -441,7 +472,11 @@ class ResilientDetectionService(DetectionService):
             break
 
         if not _from_wal:
-            self._settle_level(batch.report, cfg)
+            # pipelined submits return the PREVIOUS tick's batch (None
+            # on the first call): the ladder settles on whatever report
+            # just committed
+            if batch is not None:
+                self._settle_level(batch.report, cfg)
             if (
                 cfg.checkpoint_dir
                 and cfg.checkpoint_every > 0
@@ -469,6 +504,22 @@ class ResilientDetectionService(DetectionService):
         self.totals["dead_letter_ticks"] += 1
         n = len(np.atleast_1d(src))
         self._dead_letter([{"reason": "tick_failed", "rows": int(n)}])
+        # orphans that never made it back in die with the tick: drop
+        # their WAL entries too, so the recovered state matches the live
+        # (rolled-back) state
+        for otick, oinp, _ in self.orphaned:
+            if self.wal is not None:
+                self.wal.remove(otick)
+            self.totals["dead_letter_ticks"] += 1
+            self._dead_letter(
+                [
+                    {
+                        "reason": "tick_failed",
+                        "rows": int(len(np.atleast_1d(oinp[0]))),
+                    }
+                ]
+            )
+        self.orphaned.clear()
         self.postmortem(wal_tick, failure=failure)
 
     def postmortem(
@@ -552,6 +603,13 @@ class ResilientDetectionService(DetectionService):
         cfg = self.resilience
         if not cfg.checkpoint_dir:
             return None
+        if self._inflight is not None or self._done:
+            # a checkpoint covers only COMMITTED ticks (its WAL prune
+            # assumes the covered counts are final): drain the pipelined
+            # tail first, and re-queue the drained batches so subsequent
+            # pipelined submits keep returning them in order
+            for b in self.flush():
+                self._done.append(b)
         with obs_trace.span("tick:checkpoint", tick=self.tick):
             self._fire("checkpoint")
             path = save_checkpoint(

@@ -1,46 +1,70 @@
 """`DetectionService` — the real-time detection loop (pillar 3).
 
-``submit(txns) -> AlertBatch`` is the whole lifecycle of one microbatch:
+``submit(txns) -> AlertBatch`` is the whole lifecycle of one microbatch,
+split into a device-async **dispatch** phase and a host-sync **commit**
+phase:
 
 1. **ingest** into the :class:`~repro.stream.store.TemporalGraphStore`
    (amortized maintenance, window eviction);
 2. **plan** the delta with the :class:`~repro.stream.delta.DeltaScheduler`
    (per-pattern dirty seeds + the view ball);
-3. **mine** the dirty frontier: a local :meth:`~TemporalGraphStore.local_view`
-   (or the full snapshot when the delta covers most of the graph) is
-   compiled through the unchanged device-resident executor — one shared
-   device mirror + host requirement cache per tick, and a per-pattern
-   **kernel cache shared across ticks** (view shapes are padded to
-   powers of two, so JIT traces from earlier ticks are replayed instead
-   of recompiled);
-4. **score** the re-mined seeds through the `repro.ml` feature layout
+3. **mine** the dirty frontier as a *portfolio*: every registered
+   pattern's dirty seeds are dispatched against ONE shared tick view and
+   device mirror (``mine_async`` — no per-pattern host sync), with
+   per-pattern kernel caches AND shape-keyed schedule caches shared
+   across ticks.  View shapes are pow2-padded under monotone high-water
+   floors, so warm ticks replay earlier ticks' JIT traces instead of
+   recompiling;
+4. **gather** every pattern's device-resident count vector in ONE
+   blocking fetch (:func:`repro.core.shard.gather`,
+   ``mode="portfolio"``) — the tick's single host sync and its
+   transactional commit point;
+5. **score** the re-mined seeds through the `repro.ml` feature layout
    (base transaction columns + one column per registered pattern —
    exactly :func:`repro.api.featurize` order, so an offline-trained
    classifier's ``predict_proba`` plugs in as ``scorer=``), apply the
    per-pattern count ``thresholds``, and emit an :class:`AlertBatch`
    carrying the executor/store counter glossary for the tick;
-5. **evidence** (``witnesses=k``): every alert seed whose count was
+6. **evidence** (``witnesses=k``): every alert seed whose count was
    recomputed this tick is witness-mined (:mod:`repro.witness`) on the
    SAME tick-local view and device mirror the counting pass used, the
    hop edge ids translated compact->global through ``view.edge_ids`` and
-   resolved against the store's arrival columns into concrete
+   resolved against the view's own arrival columns into concrete
    ``(src, dst, t, amount)`` transaction hops an analyst can act on.
+
+``pipeline=True`` overlaps consecutive ticks: ``submit`` dispatches tick
+N+1 (ingest/plan/mine launches) while tick N's device mining is still in
+flight, THEN commits tick N (gather/score/evidence) and returns its
+alerts — so ``submit`` returns the *previous* tick's :class:`AlertBatch`
+(``None`` on the first call) and :meth:`flush` drains the tail.  The
+commit stays the transactional boundary: a tick that fails anywhere
+before its gather completes rolls back bit-exactly, including the
+already-ingested successor (whose input is surfaced on
+:attr:`orphaned` for replay).
 
 Incremental counts are guaranteed equal to a batch recompute over the
 full edge history (``tests/test_stream_service.py`` asserts it pattern
-by pattern, eviction and out-of-order feeds included).
+by pattern, eviction and out-of-order feeds included; the pipelined path
+is asserted bit-exact against the sequential path in
+``tests/test_stream_pipeline.py``).
 """
 from __future__ import annotations
 
 import dataclasses
 import logging
+import threading
 import time
+from collections import OrderedDict, deque
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core import executor
-from repro.core.compiler import CompiledPattern, analyze_stage_graph
+from repro.core import executor, shard
+from repro.core.compiler import (
+    CompiledPattern,
+    analyze_stage_graph,
+    schedule_cache_cap_for,
+)
 from repro.core.patterns import build_pattern
 from repro.core.spec import PatternSpec
 
@@ -60,6 +84,12 @@ __all__ = [
 ]
 
 BASE_FEATURES = ("src", "dst", "amount")
+
+# default bucket ladder for streaming ticks — deliberately coarse (two
+# classes) so the (strategy, per-dim class) kernel-trace combo space
+# saturates during warm-up and steady-state ticks re-trace nothing; see
+# the DetectionService ctor comment
+STREAM_BUCKET_LADDER = (32, 1024)
 
 logger = logging.getLogger("repro.stream")
 
@@ -103,6 +133,14 @@ class TickReport:
     seconds: float
     stats: Dict[str, int]  # executor counter deltas (STAT_KEYS glossary)
     store: Dict[str, int]  # store counter deltas (STORE_STAT_KEYS)
+    # per-stage wall breakdown (milliseconds).  mine_ms covers the async
+    # dispatch (view build + launches) PLUS the commit-side gather — the
+    # device wait lands there, so under pipelining it absorbs the
+    # overlapped successor dispatch and is NOT a pure device-time gauge
+    ingest_ms: float = 0.0
+    plan_ms: float = 0.0
+    mine_ms: float = 0.0
+    score_ms: float = 0.0
     # resilience counters (zero on a bare DetectionService; populated by
     # repro.stream.resilience and the store's lateness-contract counter)
     rejected: int = 0  # rows dropped by schema validation (whole batch)
@@ -196,6 +234,40 @@ class AlertBatch:
 PatternLike = Union[str, PatternSpec]
 
 
+@dataclasses.dataclass
+class _InflightTick:
+    """One dispatched-but-uncommitted tick: every host-side artifact the
+    commit phase (gather/score/evidence/report) needs, snapshotted at
+    dispatch time so the commit stays correct even after a successor
+    tick has mutated the store and the resilience wrapper has reset its
+    per-call plumbing (notes/deadline/count-only)."""
+
+    txn: Optional[dict]  # rollback memo (pipelined path; None in _tick)
+    t0: float
+    tick: int
+    input: tuple  # coerced (src, dst, t, amount) — orphan replay payload
+    stats: Dict[str, int]
+    span_id: Optional[int]
+    notes: Dict[str, object]
+    deadline: Optional[float]
+    count_only: bool
+    n_new: int = 0
+    path: str = "empty"
+    plan: Optional[DeltaPlan] = None
+    view: Optional[GraphView] = None
+    dg: object = None
+    vecs: Dict[str, object] = dataclasses.field(default_factory=dict)
+    seed_map: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    cps: Dict[str, CompiledPattern] = dataclasses.field(default_factory=dict)
+    mined: Dict[str, set] = dataclasses.field(default_factory=dict)
+    n_live: int = 0
+    store_delta: Dict[str, int] = dataclasses.field(default_factory=dict)
+    trace_misses: int = 0
+    ingest_ms: float = 0.0
+    plan_ms: float = 0.0
+    mine_ms: float = 0.0
+
+
 # ----------------------------------------------------------------------
 # the service
 # ----------------------------------------------------------------------
@@ -219,6 +291,13 @@ class DetectionService:
     ``None`` keeps everything).  ``witnesses=k`` attaches to every alert
     the top-k matching edge tuples per fired pattern, resolved into
     ``(src, dst, t, amount)`` hops (:attr:`AlertBatch.evidence`).
+
+    ``pipeline=True`` double-buffers ticks: ``submit`` returns the
+    PREVIOUS tick's alerts (``None`` on the first call) and overlaps the
+    new tick's host-side dispatch with the old tick's in-flight device
+    mining; :meth:`flush` commits the tail.  ``schedule_cache_cap``
+    bounds each pattern's shape-keyed schedule cache (default: sized
+    from the portfolio via :func:`schedule_cache_cap_for`).
     """
 
     def __init__(
@@ -234,11 +313,24 @@ class DetectionService:
         full_remine_fraction: float = 0.5,
         node_capacity: int = 64,
         witnesses: int = 0,
+        pipeline: bool = False,
+        schedule_cache_cap: Optional[int] = None,
+        ladder: Optional[Tuple[int, ...]] = None,
         chaos=None,
     ):
         self.window = int(window)
         self.backend = backend
         self.witnesses = int(witnesses)
+        self.pipeline = bool(pipeline)
+        # streaming bucket ladder: much coarser than the batch default.
+        # Warm ticks must RE-TRACE NOTHING, and every distinct
+        # (strategy, per-dim class) combo is one kernel trace — the batch
+        # ladder's pow4 classes cross-multiply over dims into hundreds of
+        # combos that a shifting live-window degree distribution keeps
+        # minting for dozens of ticks.  Two classes bound the combo space
+        # so it saturates within the warm-up; the extra per-row padding
+        # is masked compute, exactness is ladder-independent.
+        self.ladder = STREAM_BUCKET_LADDER if ladder is None else tuple(ladder)
         # fault-injection harness (repro.stream.chaos.FaultInjector);
         # None in production — the hooks are no-ops then
         self.chaos = chaos
@@ -275,6 +367,32 @@ class DetectionService:
         # shapes are pow2-padded, so tick k+1 replays tick k's traces
         self._kernels: Dict[str, dict] = {n: {} for n in self.pattern_names}
         self._trace_keys: Dict[str, set] = {n: set() for n in self.pattern_names}
+        # per-pattern shape-keyed schedule caches, also shared across
+        # ticks (the per-tick CompiledPattern is a throwaway facade; the
+        # caches carry all cross-tick state).  The cap follows the same
+        # portfolio-sized rule the sharded executor uses for partitions.
+        self._sched_caches: Dict[str, OrderedDict] = {
+            n: OrderedDict() for n in self.pattern_names
+        }
+        self.schedule_cache_cap = (
+            schedule_cache_cap_for(len(self.pattern_names))
+            if schedule_cache_cap is None
+            else int(schedule_cache_cap)
+        )
+        # monotone high-water pad floors: device-mirror dims per view
+        # kind plus ONE shared degree floor, so the max_deg-derived
+        # binary-search iteration count baked into kernel trace keys is
+        # uniform across the local/full paths and never shrinks.
+        # Deliberately NOT part of the tick rollback memo — oversizing
+        # stays exact after a rollback, shrinking would remint traces.
+        self._pad_floors: Dict[str, int] = {
+            "local_nodes": 1,
+            "local_edges": 1,
+            "full_nodes": 1,
+            "full_edges": 1,
+            "deg": 1,
+            "view_nodes": 0,  # local_view compact-node floor
+        }
         if self.witnesses:
             # fail at construction, not mid-stream, if a registered
             # pattern's stage shape has no witness lowering
@@ -282,8 +400,8 @@ class DetectionService:
                 witness_layout(self._irs[n])
         # tick-local mining context (view, device mirror, per-pattern
         # plans, per-pattern freshly-mined seed sets) kept alive between
-        # _mine_plan and _finish so alert seeds can be witness-mined on
-        # the exact graph their counts came from
+        # commit's gather and _finish so alert seeds can be witness-mined
+        # on the exact graph their counts came from
         self._tick_ctx: Optional[tuple] = None
         self.tick = 0
         self.last_report: Optional[TickReport] = None
@@ -291,8 +409,21 @@ class DetectionService:
         # lifetime executor counters (STAT_KEYS glossary)
         self.stats = executor.new_stats()
         # transactional-tick state: per-tick undo log of counts writes
-        # (appended by _mine_plan, replayed backwards on rollback)
+        # (appended by the commit-phase gather, replayed backwards on
+        # rollback)
         self._txn_counts_undo: List[tuple] = []
+        # pipelining state: the dispatched-but-uncommitted tick, the
+        # committed-batch queue submit/flush drain, and
+        # ``(tick, (src, dst, t, amount), notes)`` records of ticks whose
+        # ingest was rolled back by their own commit failure (resubmit to
+        # recover them; the resilience wrapper replays them automatically)
+        self._inflight: Optional[_InflightTick] = None
+        self._done: deque = deque()
+        self.orphaned: List[Tuple[int, tuple, dict]] = []
+        # submit/flush are serialized: concurrent submitters multiplex
+        # onto one logical tick stream (RLock — the resilience wrapper
+        # re-enters)
+        self._lock = threading.RLock()
         # resilience plumbing (set per tick by ResilientDetectionService;
         # inert defaults on a bare service)
         self._tick_notes: Dict[str, object] = {}
@@ -303,7 +434,6 @@ class DetectionService:
         # dumps; _tick_span_id joins the report to its "tick" span
         self.flight = FlightRecorder()
         self._tick_span_id: Optional[int] = None
-        self._tick_traces_before = 0
 
     # -- feature layout (repro.ml contract) -----------------------------
     @property
@@ -336,14 +466,17 @@ class DetectionService:
         return self.counts[name][: self.store.n_edges_total]
 
     # -- transactional ticks --------------------------------------------
-    def _fire(self, point: str) -> None:
-        """Chaos fault point (no-op without an injector)."""
+    def _fire(self, point: str, tick: Optional[int] = None) -> None:
+        """Chaos fault point (no-op without an injector).  ``tick``
+        overrides the attributed tick number — commit-phase points of a
+        pipelined tick fire after the successor has already bumped
+        ``self.tick``."""
         if self.chaos is not None:
-            self.chaos.fire(point, self.tick)
+            self.chaos.fire(point, self.tick if tick is None else tick)
 
     def _begin_tick(self) -> dict:
         """Stage the tick: memo of everything :meth:`_rollback_tick` must
-        restore if any stage (ingest/mine/score/witness) fails."""
+        restore if any stage (ingest/mine/gather/score/witness) fails."""
         self._txn_counts_undo = []
         return {
             "store": self.store.begin(),
@@ -356,7 +489,10 @@ class DetectionService:
     def _rollback_tick(self, txn: dict) -> None:
         """Roll the store, counts, and tick counters back to the staged
         pre-tick state — bit-exact (asserted by the chaos tests against a
-        pre-fault :meth:`TemporalGraphStore.state_dict` snapshot)."""
+        pre-fault :meth:`TemporalGraphStore.state_dict` snapshot).  The
+        store memo restore is total, so rolling back to tick N's memo
+        also undoes any successor tick's ingest (the pipelined
+        commit-failure path relies on this)."""
         self.store.rollback(txn["store"])
         for name, seeds, old in reversed(self._txn_counts_undo):
             self.counts[name][seeds] = old
@@ -367,12 +503,39 @@ class DetectionService:
         self.last_plan = txn["last_plan"]
         self._tick_ctx = None
 
-    # -- mining ---------------------------------------------------------
-    def _mine_plan(
+    # -- mining (dispatch phase) ----------------------------------------
+    def _device_mirror(self, view: GraphView):
+        """Pow2-padded device mirror of the tick view under the monotone
+        high-water floors — consecutive ticks present ONE canonical shape
+        family per path, so kernel traces replay instead of reminting."""
+        f = self._pad_floors
+        kn, ke = (
+            ("full_nodes", "full_edges")
+            if view.full
+            else ("local_nodes", "local_edges")
+        )
+        dg = view.graph.to_device(
+            pad=True,
+            floor_nodes=f[kn],
+            floor_edges=f[ke],
+            floor_deg=f["deg"],
+        )
+        f[kn] = max(f[kn], dg.n_nodes)
+        f[ke] = max(f[ke], dg.n_edges)
+        f["deg"] = max(f["deg"], dg.max_deg)
+        return dg
+
+    def _dispatch_mine(
         self, plan: DeltaPlan, view: GraphView, stats: Dict[str, int]
-    ) -> None:
-        dg = view.graph.to_device(pad=not view.full)
+    ) -> tuple:
+        """Portfolio dispatch: launch EVERY pattern's dirty re-mine
+        against the shared tick view/device mirror without a single host
+        sync — the per-pattern device count vectors stay in flight until
+        the commit-phase gather fetches them all at once."""
+        dg = self._device_mirror(view)
         vals_cache: Dict[str, np.ndarray] = {}
+        vecs: Dict[str, object] = {}
+        seed_map: Dict[str, np.ndarray] = {}
         cps: Dict[str, CompiledPattern] = {}
         mined: Dict[str, set] = {}
         for name in self.pattern_names:
@@ -388,36 +551,49 @@ class DetectionService:
                 ir=self._irs[name],
                 kernels_cache=self._kernels[name],
                 trace_keys=self._trace_keys[name],
+                schedule_cache=self._sched_caches[name],
+                schedule_cache_cap=self.schedule_cache_cap,
+                schedule_mode="shape",
+                ladder=self.ladder,
             )
-            # stage the overwritten counts so _rollback_tick can undo a
-            # partially-mined tick bit-exactly (arrays were grown already,
-            # so writing `old` back always lands in the live buffer)
-            self._txn_counts_undo.append(
-                (name, seeds, self.counts[name][seeds].copy())
-            )
-            self.counts[name][seeds] = cp.mine(view.local_seeds(seeds))
+            vecs[name] = cp.mine_async(view.local_seeds(seeds), stats=stats)
             self._fire("mine")
-            for k in stats:
-                stats[k] += cp.stats[k]
+            seed_map[name] = seeds
             if self.witnesses:
                 cps[name] = cp
                 mined[name] = set(int(e) for e in seeds)
-        if self.witnesses:
-            self._tick_ctx = (view, dg, cps, mined)
         stats["jit_cache_entries"] = sum(
             len(s) for s in self._trace_keys.values()
         )
+        return dg, vecs, seed_map, cps, mined
+
+    def _gather_counts(self, inflight: _InflightTick) -> None:
+        """The tick's ONE host sync: fetch every pattern's finished count
+        vector in a single device transfer, then apply the counts writes
+        under the undo log — this is the transactional commit point."""
+        host = shard.gather(inflight.vecs, inflight.stats, mode="portfolio")
+        for name, seeds in inflight.seed_map.items():
+            vals = np.asarray(host[name])[: len(seeds)].astype(np.int64)
+            # stage the overwritten counts so _rollback_tick can undo a
+            # partially-committed tick bit-exactly (arrays were grown at
+            # plan time, so writing `old` back always lands in the live
+            # buffer)
+            self._txn_counts_undo.append(
+                (name, seeds, self.counts[name][seeds].copy())
+            )
+            self.counts[name][seeds] = vals
 
     def _extract_evidence(
         self,
         eids: np.ndarray,
         triggered: np.ndarray,
         stats: Dict[str, int],
+        tick: Optional[int] = None,
     ) -> List[Dict[str, list]]:
         """Top-k witnesses for every (alert seed, fired pattern) pair
         whose count was recomputed this tick, witness-mined on the tick's
         own view/device mirror and resolved into transaction hops."""
-        self._fire("witness")
+        self._fire("witness", tick)
         out: List[Dict[str, list]] = [dict() for _ in range(len(eids))]
         if self._tick_ctx is None:
             return out
@@ -441,9 +617,10 @@ class DetectionService:
             )
             for k in stats:
                 stats[k] += cp.stats[k] - before[k]
-            resolved = w.translate(view.edge_ids).resolve(
-                self.store.edge_fields
-            )
+            # resolve against the VIEW's arrival columns, not the store's
+            # — under pipelining the store already holds the successor
+            # tick's ingest (and may have evicted below the view window)
+            resolved = w.translate(view.edge_ids).resolve(view.edge_fields)
             for r, i in enumerate(rows):
                 out[i][name] = resolved[r]
         stats["jit_cache_entries"] = sum(
@@ -451,9 +628,16 @@ class DetectionService:
         )
         return out
 
-    def _score(self, eids: np.ndarray) -> Tuple[np.ndarray, ...]:
-        self._fire("score")
-        src, dst, t, amt = self.store.edge_fields(eids)
+    def _score(
+        self,
+        eids: np.ndarray,
+        view: GraphView,
+        tick: Optional[int] = None,
+    ) -> Tuple[np.ndarray, ...]:
+        self._fire("score", tick)
+        # view-resolved arrival columns: eviction-immune and correct even
+        # after a successor tick's ingest (pipelined commit)
+        src, dst, t, amt = view.edge_fields(eids)
         counts = np.stack(
             [self.counts[n][eids] for n in self.pattern_names], axis=1
         )
@@ -502,27 +686,108 @@ class DetectionService:
         dst: np.ndarray,
         t: np.ndarray,
         amount: Optional[np.ndarray] = None,
-    ) -> AlertBatch:
+    ) -> Optional[AlertBatch]:
         """Ingest one transaction microbatch, re-mine its dirty frontier,
         and return the scored alerts + the tick report.
 
         The tick is **transactional**: a failure anywhere in
-        ingest/mine/score/witness rolls the store, counts, and tick
-        counters back to the pre-call state bit-exactly before the
+        ingest/mine/gather/score/witness rolls the store, counts, and
+        tick counters back to the pre-call state bit-exactly before the
         exception propagates — a failed tick never leaves the service
-        diverged from the batch oracle."""
+        diverged from the batch oracle.
+
+        With ``pipeline=True`` the call dispatches THIS tick and commits
+        the PREVIOUS one, returning the previous tick's
+        :class:`AlertBatch` (``None`` on the first call — drain the tail
+        with :meth:`flush`)."""
+        with self._lock:
+            if self.pipeline:
+                return self._submit_pipelined(src, dst, t, amount)
+            if self._inflight is not None:
+                # pipelining was just switched off (e.g. a WAL replay):
+                # settle the overlapped tail before going synchronous
+                self.flush()
+            txn = self._begin_tick()
+            with obs_trace.span("tick", tick=self.tick + 1) as sp:
+                self._tick_span_id = sp.span_id
+                try:
+                    batch = self._tick(src, dst, t, amount)
+                except BaseException:
+                    self._rollback_tick(txn)
+                    raise
+            # record AFTER the span closes so the flight entry carries
+            # the complete per-stage span tree of the tick
+            self.flight.record(batch.report, span_id=batch.report.span_id)
+            return batch
+
+    def _submit_pipelined(
+        self, src, dst, t, amount
+    ) -> Optional[AlertBatch]:
         txn = self._begin_tick()
-        with obs_trace.span("tick", tick=self.tick + 1) as sp:
+        with obs_trace.span(
+            "tick", tick=self.tick + 1, pipelined=True
+        ) as sp:
             self._tick_span_id = sp.span_id
             try:
-                batch = self._tick(src, dst, t, amount)
+                inflight = self._tick_dispatch(src, dst, t, amount, txn=txn)
             except BaseException:
+                # only THIS dispatch is rolled back; the predecessor's
+                # in-flight tick is untouched and still committable
                 self._rollback_tick(txn)
                 raise
-        # record AFTER the span closes so the flight entry carries the
-        # complete per-stage span tree of the tick
+        prev, self._inflight = self._inflight, inflight
+        if prev is not None:
+            self._commit_inflight(prev, successor=inflight)
+        return self._done.popleft() if self._done else None
+
+    def _commit_inflight(
+        self,
+        prev: _InflightTick,
+        successor: Optional[_InflightTick] = None,
+    ) -> None:
+        """Commit a dispatched tick (gather -> score -> report).  The
+        commit-phase spans live under their own ``tick:commit`` root —
+        the dispatch-phase tree stays attached to the tick's original
+        ``tick`` span, so the two trees together represent the overlap."""
+        with obs_trace.span(
+            "tick:commit",
+            tick=prev.tick,
+            overlapped=successor is not None,
+        ):
+            try:
+                batch = self._tick_commit(prev)
+            except BaseException:
+                # rolling back to prev's memo undoes prev's ingest AND
+                # the successor's (the store restore is total), so
+                # prev's input must re-enter the stream before anything
+                # else: surface it (with its report notes) on
+                # ``orphaned``.  The successor's input is the caller's
+                # current batch — the caller already holds it.
+                self._inflight = None
+                self.orphaned.append((prev.tick, prev.input, prev.notes))
+                self._rollback_tick(prev.txn)
+                raise
         self.flight.record(batch.report, span_id=batch.report.span_id)
-        return batch
+        # prev is now committed: refresh the successor's rollback memo so
+        # a later failure lands on the committed-prev state (the memo was
+        # taken before prev's commit folded its stats/report)
+        if self._inflight is not None and self._inflight.txn is not None:
+            self._inflight.txn["stats"] = dict(self.stats)
+            self._inflight.txn["last_report"] = self.last_report
+            self._inflight.txn["last_plan"] = self.last_plan
+        self._done.append(batch)
+
+    def flush(self) -> List[AlertBatch]:
+        """Commit the in-flight tick (if any) and drain every committed
+        batch the pipelined ``submit`` has not yet returned.  A no-op
+        returning ``[]`` on a synchronous service."""
+        with self._lock:
+            prev, self._inflight = self._inflight, None
+            if prev is not None:
+                self._commit_inflight(prev, successor=None)
+            out = list(self._done)
+            self._done.clear()
+            return out
 
     def _tick(
         self,
@@ -531,71 +796,171 @@ class DetectionService:
         t: np.ndarray,
         amount: Optional[np.ndarray] = None,
     ) -> AlertBatch:
+        """One synchronous tick: dispatch + commit back to back.
+
+        NOTE for subclassers: the pipelined path does NOT route through
+        ``_tick`` — it calls :meth:`_tick_dispatch` and
+        :meth:`_tick_commit` directly so the two phases can interleave
+        across submits.  Stage-level extensions belong on those hooks
+        (see the ROADMAP streaming-engine migration note)."""
+        return self._tick_commit(self._tick_dispatch(src, dst, t, amount))
+
+    def _tick_dispatch(
+        self,
+        src: np.ndarray,
+        dst: np.ndarray,
+        t: np.ndarray,
+        amount: Optional[np.ndarray] = None,
+        txn: Optional[dict] = None,
+    ) -> _InflightTick:
+        """Host-side phase of a tick: ingest, delta plan, view build, and
+        async portfolio mine dispatch.  Returns without any host sync —
+        the device is free to overlap the launched mining with whatever
+        the host does next (under ``pipeline=True``: the NEXT tick's
+        dispatch)."""
         t0 = time.perf_counter()
         self.tick += 1
         self._tick_ctx = None
-        self._tick_traces_before = sum(
-            len(s) for s in self._trace_keys.values()
-        )
+        traces_before = sum(len(s) for s in self._trace_keys.values())
         src = np.asarray(src, dtype=np.int32)
         dst = np.asarray(dst, dtype=np.int32)
         t = np.asarray(t, dtype=np.int64)
         store_before = dict(self.store.stats)
         stats = executor.new_stats()
+        inflight = _InflightTick(
+            txn=txn,
+            t0=t0,
+            tick=self.tick,
+            input=(src, dst, t, amount),
+            stats=stats,
+            span_id=self._tick_span_id,
+            notes=dict(self._tick_notes),
+            deadline=self._tick_deadline,
+            count_only=self._count_only,
+        )
         if len(src) == 0:
-            return self._finish(
-                t0, 0, None, None, stats, store_before, path="empty"
-            )
+            inflight.n_live = self.store.n_live
+            inflight.store_delta = {
+                k: self.store.stats[k] - store_before.get(k, 0)
+                for k in self.store.stats
+            }
+            return inflight
         cold = self.store.n_live == 0
+        ts = time.perf_counter()
         with obs_trace.span("tick:ingest", n_rows=len(src)):
             eids = self.store.ingest(src, dst, t, amount)
             self._fire("ingest")
+        inflight.ingest_ms = (time.perf_counter() - ts) * 1e3
+        ts = time.perf_counter()
         with obs_trace.span("tick:plan"):
             plan = self.scheduler.plan(
                 self.store, src, dst, t, eids, cold=cold
             )
             self._grow_counts()
+        inflight.plan_ms = (time.perf_counter() - ts) * 1e3
         use_full = plan.cold or (
             plan.dirty_fraction >= self.full_remine_fraction
         )
         path = "cold" if plan.cold else ("full" if use_full else "local")
+        ts = time.perf_counter()
         with obs_trace.span(
             "tick:mine", stats=stats, path=path, n_dirty=len(plan.union_dirty)
         ):
-            view = (
-                self.store.snapshot()
-                if use_full
-                else self.store.local_view(plan.core_nodes, plan.t_lo)
+            if use_full:
+                view = self.store.snapshot()
+            else:
+                view = self.store.local_view(
+                    plan.core_nodes,
+                    plan.t_lo,
+                    node_floor=self._pad_floors["view_nodes"],
+                )
+                self._pad_floors["view_nodes"] = max(
+                    self._pad_floors["view_nodes"], view.graph.n_nodes
+                )
+            dg, vecs, seed_map, cps, mined = self._dispatch_mine(
+                plan, view, stats
             )
-            self._mine_plan(plan, view, stats)
-        return self._finish(t0, len(eids), plan, view, stats, store_before, path)
+        inflight.mine_ms = (time.perf_counter() - ts) * 1e3
+        inflight.n_new = len(eids)
+        inflight.path = path
+        inflight.plan = plan
+        inflight.view = view
+        inflight.dg = dg
+        inflight.vecs = vecs
+        inflight.seed_map = seed_map
+        inflight.cps = cps
+        inflight.mined = mined
+        inflight.n_live = self.store.n_live
+        # store deltas close at dispatch end: the store only mutates
+        # during dispatch, and under pipelining the successor's ingest
+        # would otherwise leak into this tick's report
+        inflight.store_delta = {
+            k: self.store.stats[k] - store_before.get(k, 0)
+            for k in self.store.stats
+        }
+        # JIT tracing happens at launch time (dispatch); snapshotting the
+        # delta here keeps a pipelined successor's fresh traces out of
+        # this tick's miss count (witness-stage traces are added by
+        # _finish around the extraction itself)
+        inflight.trace_misses = max(
+            0,
+            sum(len(s) for s in self._trace_keys.values()) - traces_before,
+        )
+        return inflight
 
-    def _finish(
-        self,
-        t0: float,
-        n_new: int,
-        plan: Optional[DeltaPlan],
-        view: Optional[GraphView],
-        stats: Dict[str, int],
-        store_before: Dict[str, int],
-        path: str,
-    ) -> AlertBatch:
+    def _tick_commit(self, inflight: _InflightTick) -> AlertBatch:
+        """Host-sync phase of a tick: ONE portfolio gather fetches every
+        pattern's finished device counts (the transactional commit
+        point), then score/evidence/report run on the tick's own
+        dispatch-time view."""
+        if inflight.vecs:
+            ts = time.perf_counter()
+            with obs_trace.span(
+                "tick:gather",
+                stats=inflight.stats,
+                tick=inflight.tick,
+                n_patterns=len(inflight.vecs),
+            ):
+                self._gather_counts(inflight)
+            self._fire("gather", inflight.tick)
+            inflight.mine_ms += (time.perf_counter() - ts) * 1e3
+        self._tick_ctx = (
+            (inflight.view, inflight.dg, inflight.cps, inflight.mined)
+            if self.witnesses and inflight.cps
+            else None
+        )
+        batch = self._finish(inflight)
+        self._txn_counts_undo = []  # committed: nothing left to undo
+        return batch
+
+    def _finish(self, inflight: _InflightTick) -> AlertBatch:
         # score + evidence BEFORE the stats/seconds snapshot, so witness
         # mining is accounted to this tick's report
-        notes = self._tick_notes
+        plan, view, stats = inflight.plan, inflight.view, inflight.stats
+        notes = inflight.notes
         degraded = list(notes.get("degraded", ()))
         scored = None
         evidence = [] if self.witnesses else None
-        if plan is not None and len(plan.union_dirty) and not self._count_only:
+        score_ms = 0.0
+        witness_traces_before = sum(
+            len(s) for s in self._trace_keys.values()
+        )
+        if (
+            plan is not None
+            and len(plan.union_dirty)
+            and not inflight.count_only
+        ):
+            ts = time.perf_counter()
             with obs_trace.span("tick:score", n_seeds=len(plan.union_dirty)):
-                scored = self._score(plan.union_dirty)
+                scored = self._score(plan.union_dirty, view, inflight.tick)
+            score_ms = (time.perf_counter() - ts) * 1e3
             if self.witnesses:
                 # in-tick shed: if the deadline budget is already blown,
                 # drop evidence extraction (the most expensive optional
                 # stage) rather than blow it further
                 if (
-                    self._tick_deadline is not None
-                    and time.perf_counter() > self._tick_deadline
+                    inflight.deadline is not None
+                    and time.perf_counter() > inflight.deadline
                 ):
                     if "witnesses_off" not in degraded:
                         degraded.append("witnesses_off")
@@ -604,38 +969,34 @@ class DetectionService:
                         "tick:witness", stats=stats, n_alerts=len(scored[0])
                     ):
                         evidence = self._extract_evidence(
-                            scored[0], scored[7], stats
+                            scored[0], scored[7], stats, inflight.tick
                         )
         for k in self.stats:
             if k == "jit_cache_entries":  # a gauge, not a counter
                 self.stats[k] = max(self.stats[k], stats[k])
             else:
                 self.stats[k] += stats[k]
-        store_delta = {
-            k: self.store.stats[k] - store_before.get(k, 0)
-            for k in self.store.stats
-        }
-        # fresh JIT traces minted this tick: stats["jit_cache_entries"]
-        # holds the lifetime TOTAL trace-key count, so the per-tick miss
-        # count is the delta against the pre-tick snapshot
-        trace_misses = max(
+        # fresh JIT traces minted this tick: the dispatch-phase delta was
+        # snapshotted into the inflight record; add whatever the witness
+        # stage just minted
+        trace_misses = inflight.trace_misses + max(
             0,
             sum(len(s) for s in self._trace_keys.values())
-            - self._tick_traces_before,
+            - witness_traces_before,
         )
-        if trace_misses and path in ("local", "full"):
+        if trace_misses and inflight.path in ("local", "full"):
             logger.warning(
                 "tick %d (%s path) minted %d fresh JIT trace(s) — warm "
                 "ticks should replay cached traces; check the pow2 "
                 "padding ladder / view-shape churn",
-                self.tick,
-                path,
+                inflight.tick,
+                inflight.path,
                 trace_misses,
             )
         report = TickReport(
-            tick=self.tick,
-            n_new=n_new,
-            n_live=self.store.n_live,
+            tick=inflight.tick,
+            n_new=inflight.n_new,
+            n_live=inflight.n_live,
             n_dirty=0 if plan is None else len(plan.union_dirty),
             dirty=(
                 {}
@@ -643,25 +1004,29 @@ class DetectionService:
                 else {n: len(d) for n, d in plan.dirty.items()}
             ),
             dirty_fraction=0.0 if plan is None else plan.dirty_fraction,
-            path=path,
+            path=inflight.path,
             view_nodes=0 if view is None else len(view.node_ids),
             view_edges=0 if view is None else len(view.edge_ids),
-            seconds=time.perf_counter() - t0,
+            seconds=time.perf_counter() - inflight.t0,
             stats=stats,
-            store=store_delta,
+            store=inflight.store_delta,
+            ingest_ms=inflight.ingest_ms,
+            plan_ms=inflight.plan_ms,
+            mine_ms=inflight.mine_ms,
+            score_ms=score_ms,
             rejected=int(notes.get("rejected", 0)),
             quarantined=int(notes.get("quarantined", 0)),
             # breaches counted by the store on ingest, plus rows the
             # quarantine dead-lettered for lateness before the store
             # ever saw them (resilience late_policy="quarantine")
             late_contract_breach=int(
-                store_delta.get("late_contract_breaches", 0)
+                inflight.store_delta.get("late_contract_breaches", 0)
             )
             + int(notes.get("late", 0)),
             degraded=tuple(degraded),
             retries=int(notes.get("retries", 0)),
             trace_misses=trace_misses,
-            span_id=self._tick_span_id,
+            span_id=inflight.span_id,
         )
         self.last_report = report
         self.last_plan = plan
@@ -675,7 +1040,7 @@ class DetectionService:
             help="fresh JIT traces minted by streaming ticks",
         ).inc(trace_misses)
         obs_metrics.observe_stats(stats, "repro_executor")
-        obs_metrics.observe_stats(store_delta, "repro_store")
+        obs_metrics.observe_stats(inflight.store_delta, "repro_store")
         if scored is None:
             empty = np.zeros(0, dtype=np.int64)
             return AlertBatch(

@@ -108,6 +108,26 @@ class GraphView:
             raise KeyError("edge id(s) not present in this view")
         return pos.astype(np.int32)
 
+    def edge_fields(
+        self, eids: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """(src, dst, t, amount) of the given *global* edge ids, resolved
+        from the view's own arrays (store dtypes: int32/int32/int64/f32).
+
+        Equivalent to the store's :meth:`TemporalGraphStore.edge_fields`
+        for every edge the view holds — but immune to store mutation, so
+        a pipelined tick can score/resolve against the exact graph its
+        counts came from even after the NEXT tick's ingest evicted some
+        of these edges from the live window."""
+        pos = self.local_seeds(eids)
+        g = self.graph
+        return (
+            self.node_ids[g.src[pos]].astype(np.int32),
+            self.node_ids[g.dst[pos]].astype(np.int32),
+            g.t[pos].astype(np.int64),
+            g.amount[pos].astype(np.float32),
+        )
+
 
 # ----------------------------------------------------------------------
 # one sorted run of one direction's adjacency
@@ -536,12 +556,20 @@ class TemporalGraphStore:
         return self._snap
 
     def local_view(
-        self, core_nodes: np.ndarray, t_lo: Optional[int] = None
+        self,
+        core_nodes: np.ndarray,
+        t_lo: Optional[int] = None,
+        node_floor: int = 0,
     ) -> GraphView:
         """The sub-multigraph of every live edge incident to `core_nodes`
         (optionally only edges with ``t >= t_lo``), with compact local
         node ids padded to a power of two so device kernel traces are
         shared across ticks.
+
+        ``node_floor`` raises the padded local node count (pow2-ceiled
+        with the actual count): the streaming service passes its
+        high-water mark so consecutive ticks' views share one canonical
+        shape signature instead of bouncing across pow2 classes.
 
         Rows of core nodes are complete in the view (above ``t_lo``);
         rows of halo endpoints are partial and must not be expanded —
@@ -553,7 +581,7 @@ class TemporalGraphStore:
         nodes = np.unique(np.concatenate([src_g, dst_g])).astype(np.int64)
         lsrc = np.searchsorted(nodes, src_g).astype(np.int32)
         ldst = np.searchsorted(nodes, dst_g).astype(np.int32)
-        n_local = _pow2ceil(max(2, len(nodes)))
+        n_local = _pow2ceil(max(2, len(nodes), int(node_floor)))
         g = build_temporal_graph(lsrc, ldst, tt, amt, n_nodes=n_local)
         self.stats["view_builds"] += 1
         self.stats["view_edges"] += len(eids)

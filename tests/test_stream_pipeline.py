@@ -1,0 +1,397 @@
+"""Pipelined streaming ticks (`DetectionService(pipeline=True)`):
+
+* the overlapped dispatch/commit loop is BIT-EXACT against the
+  sequential path — alerts, scores, evidence, reports, and final counts
+  — eviction and out-of-order feeds included;
+* concurrent submitters multiplex onto one logical tick stream and the
+  result still equals a batch recompute (incremental == batch is
+  order-independent tick by tick);
+* a commit failure rolls back BOTH the failed tick and its dispatched
+  successor, surfaces the failed input on ``orphaned``, and the
+  resilience wrapper replays it transparently under retry;
+* a kill mid-overlap (SIGKILL during the gather of tick N while tick
+  N+1 is already ingested) recovers from WAL + checkpoints
+  bit-identically to the uninterrupted run;
+* shape-keyed schedule caches: the portfolio-sized cap prevents
+  LRU thrash (regression for the ``schedule_cache_cap`` sizing rule);
+* per-stage tick wall breakdown lands on the TickReport.
+"""
+import os
+import subprocess
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.compiler import (
+    CompiledPattern,
+    schedule_cache_cap_for,
+)
+from repro.core.patterns import build_pattern
+from repro.stream import (
+    DetectionService,
+    FaultInjector,
+    ResilienceConfig,
+    ResilientDetectionService,
+    TransientFault,
+    store_states_equal,
+)
+
+W = 64
+PORTFOLIO = ["fan_in", "cycle3"]
+THRESH = {"fan_in": 2, "cycle3": 1}
+
+
+def _stream(rng, n_nodes=120, n_edges=600, t_span=6000):
+    src = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    dst = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    fix = src == dst
+    dst[fix] = (dst[fix] + 1) % n_nodes
+    t = np.sort(rng.integers(0, t_span // 4, n_edges)).astype(np.int64) * 4
+    t = np.maximum(0, t + rng.integers(-8, 9, n_edges))  # OOO + dups
+    amt = rng.uniform(1.0, 500.0, n_edges).astype(np.float32)
+    return src, dst, t, amt
+
+
+def _batches(rng, n_batches=10, **kw):
+    src, dst, t, amt = _stream(rng, **kw)
+    return [
+        (src[ch], dst[ch], t[ch], amt[ch])
+        for ch in np.array_split(np.arange(len(src)), n_batches)
+    ]
+
+
+def _svc_state(svc):
+    return (
+        svc.store.state_dict(),
+        {n: svc.pattern_counts(n).copy() for n in svc.pattern_names},
+        svc.tick,
+    )
+
+
+def _assert_state_equal(a, b):
+    assert store_states_equal(a[0], b[0])
+    for n in a[1]:
+        np.testing.assert_array_equal(a[1][n], b[1][n])
+    assert a[2] == b[2]
+
+
+def _assert_batches_equal(seq, pip):
+    assert len(seq) == len(pip)
+    for s, p in zip(seq, pip):
+        assert s.report.tick == p.report.tick
+        assert s.report.path == p.report.path
+        assert s.report.n_dirty == p.report.n_dirty
+        np.testing.assert_array_equal(s.eids, p.eids)
+        np.testing.assert_array_equal(s.counts, p.counts)
+        np.testing.assert_array_equal(s.score, p.score)
+        np.testing.assert_array_equal(s.triggered, p.triggered)
+        assert s.evidence == p.evidence
+
+
+# ----------------------------------------------------------------------
+# bit-exactness of the overlapped loop
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("retain", [None, "auto"])
+def test_pipelined_matches_sequential_bit_exact(retain):
+    """Every alert batch of the pipelined loop — eviction and OOO feeds
+    included — equals the sequential path's, and the final full-history
+    counts equal a batch mine of the whole stream."""
+    rng = np.random.default_rng(41)
+    src, dst, t, amt = _stream(rng, t_span=40_000)
+    feed = [
+        (src[ch], dst[ch], t[ch], amt[ch])
+        for ch in np.array_split(np.arange(len(src)), 12)
+    ]
+    kw = dict(
+        window=W, thresholds=THRESH, retain=retain, lateness=4000, witnesses=2
+    )
+    seq_svc = DetectionService(PORTFOLIO, **kw)
+    pip_svc = DetectionService(PORTFOLIO, pipeline=True, **kw)
+    seq = [seq_svc.submit(*b) for b in feed]
+    pip = [r for b in feed if (r := pip_svc.submit(*b)) is not None]
+    pip += pip_svc.flush()
+    _assert_batches_equal(seq, pip)
+    _assert_state_equal(_svc_state(seq_svc), _svc_state(pip_svc))
+    if retain == "auto":
+        assert pip_svc.store.stats["edges_evicted"] > 0  # window really slid
+    from repro.graph.csr import build_temporal_graph
+
+    full = build_temporal_graph(src, dst, t)
+    for name in PORTFOLIO:
+        want = CompiledPattern(build_pattern(name, W), full).mine()
+        np.testing.assert_array_equal(
+            pip_svc.pattern_counts(name), want, err_msg=name
+        )
+
+
+def test_pipelined_empty_batches_and_flush():
+    """Empty microbatches ride the pipeline like any other tick; flush
+    drains exactly the not-yet-returned tail and is idempotent."""
+    svc = DetectionService(PORTFOLIO, window=W, pipeline=True)
+    feed = _batches(np.random.default_rng(43), n_batches=4)
+    empty = (np.zeros(0, np.int32), np.zeros(0, np.int32), np.zeros(0, np.int64), None)
+    out = []
+    for b in (feed[0], empty, feed[1], feed[2], empty, feed[3]):
+        r = svc.submit(*b)
+        if r is not None:
+            out.append(r)
+    out += svc.flush()
+    assert [b.report.tick for b in out] == list(range(1, 7))
+    assert {b.report.path for b in out} >= {"empty"}
+    assert svc.flush() == []  # nothing left in flight
+
+
+# ----------------------------------------------------------------------
+# concurrent submitters
+# ----------------------------------------------------------------------
+def test_concurrent_submitters_multiplex_bit_exact():
+    """Threads hammering one pipelined service serialize into a single
+    logical tick stream; whatever interleaving the lock picks, the final
+    counts equal a batch recompute (each tick is individually exact, so
+    incremental == batch holds for ANY submission order).  The feeds
+    are jittered (OOO + duplicate timestamps) and interleave far apart
+    in time, so lateness must span the whole horizon."""
+    svc = DetectionService(
+        PORTFOLIO,
+        window=W,
+        thresholds=THRESH,
+        lateness=10_000,  # multiplexed streams interleave far in time
+        pipeline=True,
+    )
+    feeds = [
+        _batches(np.random.default_rng(100 + i), n_batches=6, n_nodes=80)
+        for i in range(4)
+    ]
+    batches, errors = [], []
+
+    def hammer(feed):
+        try:
+            for b in feed:
+                r = svc.submit(*b)
+                if r is not None:
+                    batches.append(r)
+        except BaseException as e:  # pragma: no cover - diagnostic
+            errors.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(f,)) for f in feeds]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    batches += svc.flush()
+    assert not errors
+    assert svc.tick == sum(len(f) for f in feeds) == len(batches)
+    live = svc.store.live_eids()
+    for name in PORTFOLIO:
+        np.testing.assert_array_equal(
+            svc.pattern_counts(name)[live],
+            svc.recompute_counts(name),
+            err_msg=name,
+        )
+
+
+# ----------------------------------------------------------------------
+# failure semantics of the overlapped commit
+# ----------------------------------------------------------------------
+def test_commit_failure_rolls_back_successor_and_orphans_input():
+    """A gather (commit-point) fault of tick N fires during tick N+1's
+    submit: BOTH ticks roll back bit-exactly and N's input lands on
+    ``orphaned`` so the caller can re-enter it."""
+    chaos = FaultInjector()
+    svc = DetectionService(
+        PORTFOLIO, window=W, thresholds=THRESH, pipeline=True, chaos=chaos
+    )
+    feed = _batches(np.random.default_rng(47), n_batches=6)
+    for b in feed[:3]:
+        svc.submit(*b)
+    svc.flush()
+    pre = _svc_state(svc)
+    chaos.arm("gather", tick=4)
+    svc.submit(*feed[3])  # dispatches tick 4; nothing to commit yet
+    with pytest.raises(TransientFault):
+        svc.submit(*feed[4])  # dispatches 5, commit of 4 faults
+    chaos.disarm()
+    _assert_state_equal(pre, _svc_state(svc))
+    assert [tick for tick, _, _ in svc.orphaned] == [4]
+    # re-entering the orphan + the rolled-back successor converges on
+    # the sequential result
+    _, inp, _ = svc.orphaned.pop(0)
+    for b in (inp, feed[4], feed[5]):
+        svc.submit(*b)
+    svc.flush()
+    ref = DetectionService(PORTFOLIO, window=W, thresholds=THRESH)
+    for b in feed:
+        ref.submit(*b)
+    _assert_state_equal(_svc_state(ref), _svc_state(svc))
+
+
+def test_resilient_pipelined_retry_replays_orphan(tmp_path):
+    """The resilience wrapper retries a pipelined commit fault and
+    replays the orphaned predecessor transparently — the stream's final
+    state equals the unpipelined no-fault run's."""
+    chaos = FaultInjector()
+    cfg = ResilienceConfig(
+        wal_dir=str(tmp_path / "wal"), max_retries=2, backoff_s=0.0
+    )
+    svc = ResilientDetectionService(
+        PORTFOLIO,
+        window=W,
+        thresholds=THRESH,
+        resilience=cfg,
+        pipeline=True,
+        chaos=chaos,
+    )
+    feed = _batches(np.random.default_rng(53), n_batches=8)
+    chaos.arm("gather", tick=5, times=1)
+    out = []
+    for b in feed:
+        r = svc.submit(*b)
+        if r is not None:
+            out.append(r)
+    out += svc.flush()
+    assert chaos.log == [("gather", 5)]  # the fault really fired
+    assert [b.report.tick for b in out] == list(range(1, 9))
+    ref = ResilientDetectionService(
+        PORTFOLIO, window=W, thresholds=THRESH
+    )
+    for b in feed:
+        ref.submit(*b)
+    _assert_state_equal(_svc_state(ref), _svc_state(svc))
+    # WAL holds every accepted tick exactly once
+    assert svc.wal.ticks() == list(range(1, 9))
+
+
+_KILL_SCRIPT = r"""
+import sys
+import numpy as np
+sys.path.insert(0, {src!r})
+from repro.stream import (FaultInjector, ResilienceConfig,
+                          ResilientDetectionService)
+
+rng = np.random.default_rng(59)
+src = rng.integers(0, 120, 600).astype(np.int32)
+dst = rng.integers(0, 120, 600).astype(np.int32)
+fix = src == dst
+dst[fix] = (dst[fix] + 1) % 120
+t = np.sort(rng.integers(0, 1500, 600)).astype(np.int64) * 4
+t = np.maximum(0, t + rng.integers(-8, 9, 600))
+amt = rng.uniform(1.0, 500.0, 600).astype(np.float32)
+
+chaos = FaultInjector()
+# SIGKILL at the GATHER of tick 7 — fires during tick 8's submit, with
+# tick 8 already ingested and its mining in flight (the overlap window)
+chaos.arm("gather", tick=7, kill=True)
+cfg = ResilienceConfig(wal_dir={wal!r}, checkpoint_dir={ckpt!r},
+                       checkpoint_every=4)
+svc = ResilientDetectionService(["fan_in", "cycle3"], window=64,
+                                resilience=cfg,
+                                thresholds={{"fan_in": 2, "cycle3": 1}},
+                                pipeline=True, chaos=chaos)
+for ch in np.array_split(np.arange(600), 10):
+    svc.submit(src[ch], dst[ch], t[ch], amt[ch])
+raise SystemExit("unreachable: the kill must fire first")
+"""
+
+
+def test_kill_mid_overlap_subprocess_recovers(tmp_path):
+    """SIGKILL in the overlap window: tick 7 dies at its commit point
+    while tick 8 is already dispatched.  Both ticks' WAL entries were
+    appended before the kill, so recovery replays through tick 8 and
+    must equal the uninterrupted (sequential) run over 8 batches."""
+    src_dir = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    wal, ckpt = str(tmp_path / "wal"), str(tmp_path / "ckpt")
+    proc = subprocess.run(
+        [
+            sys.executable,
+            "-c",
+            _KILL_SCRIPT.format(src=src_dir, wal=wal, ckpt=ckpt),
+        ],
+        capture_output=True,
+        text=True,
+    )
+    assert proc.returncode == 9, proc.stderr  # died mid-overlap, as armed
+    cfg = ResilienceConfig(wal_dir=wal, checkpoint_dir=ckpt)
+    rec = ResilientDetectionService.recover(
+        PORTFOLIO, window=W, resilience=cfg, thresholds=THRESH
+    )
+    assert rec.tick == 8
+    rng = np.random.default_rng(59)
+    s = rng.integers(0, 120, 600).astype(np.int32)
+    d = rng.integers(0, 120, 600).astype(np.int32)
+    fix = s == d
+    d[fix] = (d[fix] + 1) % 120
+    t = np.sort(rng.integers(0, 1500, 600)).astype(np.int64) * 4
+    t = np.maximum(0, t + rng.integers(-8, 9, 600))
+    amt = rng.uniform(1.0, 500.0, 600).astype(np.float32)
+    ref = DetectionService(PORTFOLIO, window=W, thresholds=THRESH)
+    for ch in np.array_split(np.arange(600), 10)[:8]:
+        ref.submit(s[ch], d[ch], t[ch], amt[ch])
+    a, b = _svc_state(ref), _svc_state(rec)
+    for n in a[1]:
+        np.testing.assert_array_equal(a[1][n], b[1][n])
+    assert a[2] == b[2]
+
+
+# ----------------------------------------------------------------------
+# shape-keyed schedule cache sizing
+# ----------------------------------------------------------------------
+def test_schedule_cache_cap_sizing_prevents_thrash(rng=None):
+    """Regression for the cap rule: alternating seed-count shape classes
+    must keep hitting a portfolio-sized cache, while a cap of 1 thrashes
+    (zero hits) yet stays exact."""
+    rng = np.random.default_rng(61)
+    src, dst, t, _ = _stream(rng, n_nodes=60, n_edges=400)
+    from repro.graph.csr import build_temporal_graph
+
+    g = build_temporal_graph(src, dst, t)
+    spec = build_pattern("fan_in", W)
+    sized = CompiledPattern(
+        spec, g, schedule_mode="shape",
+        schedule_cache_cap=schedule_cache_cap_for(4),
+    )
+    thrash = CompiledPattern(
+        spec, g, schedule_mode="shape", schedule_cache_cap=1
+    )
+    # two pow2 shape classes, alternated — a 1-deep LRU evicts the other
+    # class on every call
+    sizes = [100, 300] * 4
+    for n in sizes:
+        seeds = np.arange(n, dtype=np.int32)
+        np.testing.assert_array_equal(
+            sized.mine(seeds), thrash.mine(seeds)
+        )
+        assert len(sized._schedules) <= sized.schedule_cache_cap
+        assert len(thrash._schedules) <= 1
+    assert sized.stats["schedule_hits"] == len(sizes) - 2  # warm after 1st pair
+    assert thrash.stats["schedule_hits"] == 0
+    # the service sizes its shared caches by the portfolio rule
+    svc = DetectionService(PORTFOLIO, window=W)
+    assert svc.schedule_cache_cap == schedule_cache_cap_for(len(PORTFOLIO))
+
+
+# ----------------------------------------------------------------------
+# per-stage tick breakdown
+# ----------------------------------------------------------------------
+def test_tick_report_stage_breakdown():
+    svc = DetectionService(PORTFOLIO, window=W, thresholds=THRESH)
+    feed = _batches(np.random.default_rng(67), n_batches=4)
+    reports = [svc.submit(*b).report for b in feed]
+    for rep in reports:
+        for f in ("ingest_ms", "plan_ms", "mine_ms", "score_ms"):
+            assert getattr(rep, f) >= 0.0
+        stage_sum = rep.ingest_ms + rep.plan_ms + rep.mine_ms + rep.score_ms
+        assert rep.mine_ms > 0.0  # every tick here re-mines something
+        # stages are sub-intervals of the tick wall (generous slack for
+        # timer granularity)
+        assert stage_sum <= rep.seconds * 1000.0 + 5.0
+    # empty tick: zero everywhere
+    rep = svc.submit(
+        np.zeros(0, np.int32), np.zeros(0, np.int32), np.zeros(0, np.int64)
+    ).report
+    assert (rep.ingest_ms, rep.plan_ms, rep.mine_ms, rep.score_ms) == (
+        0.0, 0.0, 0.0, 0.0,
+    )

@@ -181,12 +181,20 @@ def test_kernel_traces_are_shared_across_ticks():
 
 
 def test_streaming_miner_is_a_deprecation_shim():
+    import warnings
+
+    from repro.core import streaming
     from repro.core.streaming import StreamingMiner
 
     rng = np.random.default_rng(7)
     src, dst, t = _stream(rng, n_nodes=30, n_edges=120)
+    streaming._WARNED = False  # other tests may have tripped the gate
     with pytest.warns(DeprecationWarning, match="StreamingMiner is deprecated"):
         sm = StreamingMiner(["fan_in", "cycle3"], window=W)
+    # the deprecation fires once per process, not once per construction
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        StreamingMiner(["fan_in"], window=W)
     assert sm.graph is None and sm.n_edges == 0
     dirty = sm.ingest(src[:60], dst[:60], t[:60])
     assert len(dirty) == 60 == sm.last_dirty
@@ -198,6 +206,25 @@ def test_streaming_miner_is_a_deprecation_shim():
     np.testing.assert_array_equal(sm.counts["cycle3"], want)
     assert sm.hop_radius == 0 and sm.time_radius is not None  # fan_in/cycle3
     assert sm.last_stats["host_syncs"] >= 1
+
+
+def test_streaming_miner_shim_parity_with_service():
+    """The deprecation shim is a facade over DetectionService: feeding
+    the same batches through both yields bit-identical counts."""
+    from repro.core.streaming import StreamingMiner
+
+    rng = np.random.default_rng(17)
+    src, dst, t = _stream(rng, n_nodes=30, n_edges=150)
+    sm = StreamingMiner(["fan_in", "cycle3"], window=W)
+    svc = DetectionService(["fan_in", "cycle3"], window=W)
+    for ch in np.array_split(np.arange(len(src)), 5):
+        dirty = sm.ingest(src[ch], dst[ch], t[ch])
+        rep = svc.submit(src[ch], dst[ch], t[ch]).report
+        assert len(dirty) == rep.n_dirty
+    for name in ("fan_in", "cycle3"):
+        np.testing.assert_array_equal(
+            sm.counts[name], svc.pattern_counts(name)
+        )
 
 
 def test_session_service_end_to_end():
